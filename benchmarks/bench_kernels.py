@@ -1,0 +1,77 @@
+"""Merge-kernel benchmarks: Pallas (interpret on CPU; compiled on TPU)
+vs the eager jnp strategy pipeline, plus the analytic HBM-traffic model
+that motivates the fusion (DESIGN.md §6)."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.strategies import get_strategy
+
+Row = Tuple[str, float, str]
+
+
+def _timeit(fn, reps=3) -> float:
+    r = fn()
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn()
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _traffic_model(k: int, p: int) -> str:
+    """Bytes moved: fused = (k+2)p*4; eager TIES ~ (6k+4)p*4."""
+    fused = (k + 2) * p * 4
+    eager = (6 * k + 4) * p * 4
+    return (f"fused_bytes={fused};eager_bytes={eager};"
+            f"traffic_ratio={eager/fused:.2f}")
+
+
+def main(quick: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    k = 4
+    sizes = [2 ** 14] if quick else [2 ** 14, 2 ** 20]
+    rng = np.random.default_rng(0)
+    for p in sizes:
+        side = int(np.sqrt(p))
+        contribs = [jnp.asarray(rng.standard_normal((side, side)),
+                                jnp.float32) for _ in range(k)]
+        base = jnp.asarray(rng.standard_normal((side, side)) * 0.1,
+                           jnp.float32)
+        cat_ties = jax.jit(lambda *c: get_strategy("ties")(list(c),
+                                                           base=base))
+        us_eager = _timeit(lambda: cat_ties(*contribs))
+        us_kern = _timeit(
+            lambda: ops.ties_merge(contribs, base, interpret=True))
+        rows.append((f"ties_eager_p{p}", us_eager, "jnp_pipeline"))
+        rows.append((f"ties_pallas_interp_p{p}", us_kern,
+                     _traffic_model(k, p) + ";interpret=True"))
+
+        us_dare = _timeit(
+            lambda: ops.dare_merge(contribs, base, seed=1, interpret=True))
+        rows.append((f"dare_pallas_interp_p{p}", us_dare,
+                     "rng_in_kernel;mask_never_in_HBM"))
+
+        us_wa = _timeit(
+            lambda: ops.weight_average_merge(contribs, interpret=True))
+        rows.append((f"nary_accum_interp_p{p}", us_wa,
+                     f"k={k};single_pass"))
+
+        us_sl = _timeit(
+            lambda: ops.slerp_merge(contribs[0], contribs[1],
+                                    interpret=True))
+        rows.append((f"slerp_interp_p{p}", us_sl, "two_pass"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main(quick="--full" not in sys.argv):
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,102 @@
+"""Roofline derivation from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell:
+  compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_bytes_per_device / ICI_bw
+
+(cost_analysis() reports per-partition numbers on SPMD modules, so the
+"/ chips" in the assignment formulas is already applied.)
+
+Hardware model (TPU v5e-class target): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (per direction, 1 link charged).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 45e9          # ~50 GB/s nominal less protocol overhead
+
+Row = Tuple[str, float, str]
+
+
+def load_cells(dirname: str = "experiments/dryrun") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def roofline_terms(cell: Dict) -> Dict:
+    flops = cell.get("flops_per_device", 0.0)
+    mem = cell.get("bytes_accessed_per_device", 0.0)
+    coll = cell.get("collective_bytes_per_device", 0.0)
+    t_c = flops / PEAK_FLOPS
+    t_m = mem / HBM_BW
+    t_x = coll / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+    chips = cell.get("chips", 256)
+    useful = cell.get("model_flops", 0.0) / chips
+    bound = max(t_c, t_m, t_x)
+    return {
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom[1], "bound_s": bound,
+        "useful_flops_per_device": useful,
+        "useful_ratio": useful / flops if flops else 0.0,
+        # fraction of hardware roofline actually doing model math:
+        "roofline_frac": (useful / PEAK_FLOPS) / bound if bound else 0.0,
+    }
+
+
+def table(dirname: str = "experiments/dryrun",
+          mesh_suffix: str = "sp") -> List[Row]:
+    rows: List[Row] = []
+    seen = set()
+    for cell in load_cells(dirname):
+        tag = "mp" if len(cell.get("mesh", {})) == 3 else "sp"
+        if tag != mesh_suffix and cell.get("status") != "SKIP":
+            continue
+        if cell.get("variant", "base") not in ("base", "quantile",
+                                               "histogram"):
+            continue
+        if cell.get("moe_impl", "gather") != "gather":
+            continue
+        name = (f"roofline_{cell['arch']}_{cell['shape']}_{tag}"
+                + (f"_{cell['variant']}" if cell.get("kind") == "merge"
+                   else ""))
+        if name in seen:
+            continue
+        seen.add(name)
+        if cell.get("status") == "SKIP":
+            rows.append((name, 0.0, "SKIP;" + cell.get("reason", "")[:60]))
+            continue
+        if cell.get("status") != "OK":
+            rows.append((name, 0.0, "FAIL"))
+            continue
+        t = roofline_terms(cell)
+        rows.append((name, t["bound_s"] * 1e6,
+                     f"dom={t['dominant']};c={t['compute_s']:.2e};"
+                     f"m={t['memory_s']:.2e};x={t['collective_s']:.2e};"
+                     f"useful_ratio={t['useful_ratio']:.3f};"
+                     f"roofline_frac={t['roofline_frac']:.3f};"
+                     f"peakGiB={cell['peak_memory_per_device']/2**30:.2f}"))
+    return rows
+
+
+def main(quick: bool = True) -> List[Row]:
+    rows = table(mesh_suffix="sp")
+    if not rows:
+        rows = [("roofline", 0.0, "no dry-run artifacts found")]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

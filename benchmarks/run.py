@@ -1,0 +1,51 @@
+"""Benchmark orchestrator — one section per paper table + kernels +
+roofline. Prints ``name,us_per_call,derived`` CSV (deliverable d).
+
+  PYTHONPATH=src python -m benchmarks.run            # quick (CI) sizes
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale sizes
+  PYTHONPATH=src python -m benchmarks.run --only gossip,kernels
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SECTIONS = ("properties", "overhead", "gossip", "kernels", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow on CPU)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of: " + ",".join(SECTIONS))
+    args = ap.parse_args()
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else set(SECTIONS)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for section in SECTIONS:
+        if section not in only:
+            continue
+        if section == "properties":
+            from benchmarks import bench_properties as mod
+        elif section == "overhead":
+            from benchmarks import bench_overhead as mod
+        elif section == "gossip":
+            from benchmarks import bench_gossip as mod
+        elif section == "kernels":
+            from benchmarks import bench_kernels as mod
+        else:
+            from benchmarks import roofline as mod
+        try:
+            for name, us, derived in mod.main(quick=quick):
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # keep the harness running
+            print(f"{section}_ERROR,0,{type(e).__name__}:{e}", flush=True)
+    print(f"# total_wall_s={time.time()-t0:.1f}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Consortium simulation: 10 institutions, network partitions, Byzantine
+contribution, delta-state gossip with int8 compression.
+
+  PYTHONPATH=src python examples/decentralized_consortium.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gossip import GossipNetwork
+from repro.core.trust import TrustState, gated_resolve
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n = 10
+    net = GossipNetwork(n, seed=0, use_deltas=True)
+    base = rng.standard_normal((128, 128)).astype(np.float32) * 0.02
+
+    # 9 honest fine-tunes + 1 poisoned contribution
+    for i, node in enumerate(net.nodes):
+        tau = rng.standard_normal((128, 128)).astype(np.float32) * 0.01
+        if i == 7:
+            tau = tau * 400.0           # poisoned: absurd task vector
+        node.contribute(jnp.asarray(base + tau))
+
+    # the consortium splits into two data centers (partition)
+    net.partition([range(0, 5), range(5, 10)])
+    net.all_pairs_round()
+    print("during partition: distinct roots =", len(set(net.roots())))
+
+    # healing
+    net.heal()
+    net.all_pairs_round()
+    assert net.converged()
+    print(f"healed: all {n} nodes converged "
+          f"(delta gossip sent {net.bytes_sent/1e6:.2f} MB)")
+
+    # Byzantine detection: honest nodes report the outlier; trust evidence
+    # is itself a (grow-only) CRDT, so gating decisions converge too.
+    merged = net.nodes[0].state
+    scores = {eid: float(np.max(np.abs(np.asarray(merged.store[eid]))))
+              for eid in merged.visible()}
+    outlier = max(scores, key=scores.get)
+    trust = TrustState()
+    for reporter in ("node000", "node001", "node002"):
+        trust = trust.merge(TrustState().report(
+            outlier, "statistical_outlier", reporter))
+    print(f"flagged contribution {outlier[:12]}… "
+          f"(|max|={scores[outlier]:.1f}, trust={trust.score(outlier):.2f})")
+
+    clean = gated_resolve(merged, trust, "ties",
+                          base=jnp.asarray(base), threshold=0.5)
+    dirty = net.nodes[0].resolve("ties", base=jnp.asarray(base))
+    print(f"resolve with trust gate: |max|={float(jnp.max(jnp.abs(clean))):.3f}"
+          f"  vs ungated: |max|={float(jnp.max(jnp.abs(dirty))):.3f}")
+    print("gated merge excludes the poisoned model deterministically on "
+          "every honest node.")
+
+
+if __name__ == "__main__":
+    main()

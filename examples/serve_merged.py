@@ -1,0 +1,64 @@
+"""Serve a CRDT-merged model: merge two fine-tunes, batch-decode requests.
+
+  PYTHONPATH=src python examples/serve_merged.py --arch phi3-mini-3.8b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ShapeSpec, smoke_config
+from repro.core.resolve import resolve
+from repro.core.state import CRDTMergeState
+from repro.data.synthetic import make_batch
+from repro.models.model import Model
+from repro.train.serve import greedy_decode
+from repro.train.step import init_train_state, make_train_step
+
+
+def quick_finetune(model, state, task_id, steps=10):
+    from repro.data.synthetic import SyntheticTask
+    step = jax.jit(make_train_step(model, total_steps=steps))
+    task = SyntheticTask(model.cfg.vocab_size, 64, task_id=task_id)
+    for i in range(steps):
+        state, _ = step(state, {"tokens": jnp.asarray(task.batch(i, 8))})
+    return state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi3-mini-3.8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch).replace(grad_accum=1)
+    model = Model(cfg)
+    base_state = init_train_state(model, jax.random.PRNGKey(0))
+    base = base_state["params"]
+
+    print("fine-tuning two branches…")
+    ft1 = quick_finetune(model, jax.tree_util.tree_map(jnp.copy, base_state), 1)
+    ft2 = quick_finetune(model, jax.tree_util.tree_map(jnp.copy, base_state), 2)
+
+    s = (CRDTMergeState()
+         .add(ft1["params"], node="serve-a")
+         .add(ft2["params"], node="serve-b"))
+    merged = resolve(s, "ties", base=base)
+    print(f"merged 2 contributions via TIES "
+          f"(root {s.merkle_root().hex()[:12]}…)")
+
+    batch = {k: jnp.asarray(v) for k, v in make_batch(
+        cfg, ShapeSpec("serve", 16, args.batch, "prefill")).items()}
+    t0 = time.time()
+    out = greedy_decode(model, merged, batch, steps=args.gen)
+    dt = time.time() - t0
+    print(f"served {args.batch} requests x {args.gen} tokens in {dt:.2f}s "
+          f"({args.batch*args.gen/dt:.1f} tok/s incl. compile)")
+    print("sample continuation:", np.asarray(out[0]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.checkpoint.ckpt import (  # noqa: F401
+    save_checkpoint, restore_checkpoint, latest_checkpoint,
+    save_crdt_state, restore_crdt_state)
+from repro.checkpoint.ckpt import save_checkpoint_async  # noqa: F401,E402

@@ -1,0 +1,163 @@
+"""Atomic, mesh-agnostic checkpointing.
+
+Layout: <dir>/step_<n>/ holding one .npy per tensor (keyed by flattened
+pytree path) plus manifest.json (treedef paths, dtypes, step, user
+metadata such as the data cursor). Writes go to a temp directory then an
+atomic rename — a crash mid-save never corrupts the latest checkpoint.
+Restore is mesh-agnostic: tensors load as host numpy and are device_put
+against whatever shardings the new mesh dictates (elastic re-scaling).
+
+CRDT state checkpoints serialize (A, R, V) as JSON and the content-
+addressed payload store as tensors — a restarted node rejoins the gossip
+with its full causal history (fault tolerance for the merge layer).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+_ASYNC_POOL = ThreadPoolExecutor(max_workers=1,
+                                 thread_name_prefix="ckpt-writer")
+
+from repro.core.state import AddEntry, CRDTMergeState
+from repro.core.version_vector import VersionVector
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(p): np.asarray(v) for p, v in flat}
+
+
+def save_checkpoint(directory: str, state: Any, step: int,
+                    metadata: Optional[Dict] = None, keep: int = 2) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    tensors = _flatten(state)
+    names = {}
+    for i, (path, arr) in enumerate(sorted(tensors.items())):
+        fname = f"t{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        names[path] = {"file": fname, "dtype": str(arr.dtype),
+                       "shape": list(arr.shape)}
+    manifest = {"step": step, "tensors": names,
+                "metadata": metadata or {}}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic commit
+    _retain(directory, keep)
+    return final
+
+
+def save_checkpoint_async(directory: str, state: Any, step: int,
+                          metadata: Optional[Dict] = None,
+                          keep: int = 2) -> "Future[str]":
+    """Snapshot to host memory synchronously (cheap), write to disk on a
+    background thread — training continues during the (slow) I/O. The
+    returned future resolves to the committed path; exceptions surface on
+    `.result()`. Writes are serialized on one thread, so checkpoints
+    commit in order."""
+    host_state = jax.tree_util.tree_map(lambda x: np.asarray(x), state)
+    return _ASYNC_POOL.submit(save_checkpoint, directory, host_state, step,
+                              metadata, keep)
+
+
+def _retain(directory: str, keep: int) -> None:
+    ckpts = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in ckpts[:-keep]:
+        shutil.rmtree(os.path.join(directory, d))
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    ckpts = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    return os.path.join(directory, ckpts[-1]) if ckpts else None
+
+
+def restore_checkpoint(path: str, like: Any,
+                       shardings: Any = None) -> Tuple[Any, Dict]:
+    """Restore into the structure of `like`; optionally device_put with
+    per-leaf shardings (resharding onto a different mesh is free here)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    tensors = manifest["tensors"]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat:
+        key = jax.tree_util.keystr(p)
+        info = tensors[key]
+        arr = np.load(os.path.join(path, info["file"]))
+        leaves.append(arr)
+    state = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        state = jax.device_put(state, shardings)
+    else:
+        state = jax.tree_util.tree_map(jax.numpy.asarray, state)
+    return state, manifest["metadata"]
+
+
+# ---------------------------------------------------------------------------
+# CRDT state
+# ---------------------------------------------------------------------------
+
+
+def save_crdt_state(directory: str, state: CRDTMergeState, node: str) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"crdt_{node}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    meta = {
+        "adds": [[e.element_id, e.tag, e.node] for e in sorted(state.adds)],
+        "removes": sorted(state.removes),
+        "vv": state.vv.to_dict(),
+        "store": {},
+    }
+    for eid, tree in state.store.items():
+        tensors = _flatten(tree)
+        entry = {}
+        for i, (path, arr) in enumerate(sorted(tensors.items())):
+            fname = f"{eid[:16]}_{i:04d}.npy"
+            np.save(os.path.join(tmp, fname), arr)
+            entry[path] = fname
+        meta["store"][eid] = entry
+    with open(os.path.join(tmp, "crdt.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def restore_crdt_state(path: str, like_contribution: Any) -> CRDTMergeState:
+    with open(os.path.join(path, "crdt.json")) as f:
+        meta = json.load(f)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like_contribution)
+    store = {}
+    for eid, entry in meta["store"].items():
+        leaves = []
+        for p, leaf in flat:
+            key = jax.tree_util.keystr(p)
+            leaves.append(jax.numpy.asarray(
+                np.load(os.path.join(path, entry[key]))))
+        store[eid] = jax.tree_util.tree_unflatten(treedef, leaves)
+    return CRDTMergeState(
+        frozenset(AddEntry(*a) for a in meta["adds"]),
+        frozenset(meta["removes"]),
+        VersionVector(meta["vv"]), store)

@@ -1,0 +1,4 @@
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, MoEConfig, MLAConfig, MambaConfig, ShapeSpec,
+    SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K,
+    get_config, list_archs, register, smoke_config)

@@ -1,0 +1,4 @@
+from repro.core.state import CRDTMergeState, AddEntry  # noqa: F401
+from repro.core.resolve import resolve, canonical_order, seed_from_root  # noqa: F401
+from repro.core.version_vector import VersionVector  # noqa: F401
+from repro.core.dotted_vv import DottedVersionVector  # noqa: F401

@@ -1,0 +1,90 @@
+"""Deterministic gossip payload compression (beyond paper: L1 bandwidth).
+
+Symmetric per-tensor int8 quantization with an fp32 scale. Quantization
+and dequantization are pure elementwise fp32 ops, so every replica
+reconstructs bit-identical tensors from identical wire bytes — CRDT
+determinism (Assumption 10) is preserved end to end. Content identity is
+defined on the *wire format* (the dequantized tensors), so a compressed
+contribution has a stable element_id everywhere.
+
+Also provides top-k sparsification for task-vector deltas (transmitting
+(indices, values) of the largest-|tau| entries), the classic gradient/
+delta compression trick adapted to model merging.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class CompressedLeaf:
+    q: np.ndarray            # int8 payload
+    scale: np.float32
+    shape: Tuple[int, ...]
+    dtype: str
+
+
+@dataclass
+class CompressedTree:
+    leaves: List[CompressedLeaf]
+    treedef: Any
+
+    def nbytes(self) -> int:
+        return sum(l.q.nbytes + 8 for l in self.leaves)
+
+
+def compress_tree(tree) -> CompressedTree:
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    leaves = []
+    for x in flat:
+        a = np.asarray(x, np.float32)
+        scale = np.float32(np.max(np.abs(a)) / 127.0 + 1e-12)
+        q = np.clip(np.round(a / scale), -127, 127).astype(np.int8)
+        leaves.append(CompressedLeaf(q, scale, a.shape, str(x.dtype)))
+    return CompressedTree(leaves, treedef)
+
+
+def decompress_tree(ct: CompressedTree):
+    outs = []
+    for l in ct.leaves:
+        a = (l.q.astype(np.float32) * l.scale).reshape(l.shape)
+        outs.append(jnp.asarray(a, l.dtype))
+    return jax.tree_util.tree_unflatten(ct.treedef, outs)
+
+
+# ---------------------------------------------------------------------------
+# Top-k sparsification of task-vector deltas
+# ---------------------------------------------------------------------------
+
+
+def topk_sparsify(tree, base, k_frac: float = 0.05):
+    """Per-leaf: keep the top k_frac fraction of |leaf - base| entries.
+
+    Returns a pytree of (indices int32 [m], values fp32 [m], size) tuples.
+    Deterministic (ties broken by index via stable argsort on (-|v|, i)).
+    """
+    def leaf(x, b):
+        tau = (np.asarray(x, np.float32) - np.asarray(b, np.float32)).ravel()
+        m = max(1, int(len(tau) * k_frac))
+        order = np.lexsort((np.arange(len(tau)), -np.abs(tau)))
+        idx = np.sort(order[:m]).astype(np.int32)
+        return (idx, tau[idx], tau.size)
+    return jax.tree_util.tree_map(leaf, tree, base)
+
+
+def topk_reconstruct(sparse_tree, base):
+    def leaf(sp, b):
+        idx, vals, size = sp
+        tau = np.zeros((size,), np.float32)
+        tau[idx] = vals
+        b = np.asarray(b, np.float32)
+        return jnp.asarray((b.ravel() + tau).reshape(b.shape))
+    return jax.tree_util.tree_map(
+        leaf, sparse_tree, base,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3
+        and isinstance(x[2], (int, np.integer)))

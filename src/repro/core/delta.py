@@ -1,0 +1,78 @@
+"""Delta-state CRDT propagation (paper §7.2 L1 / Almeida et al. [2]).
+
+The OR-Set merge decomposes into independent set unions, so a delta is
+simply (new add entries, new removed tags, payloads for new elements).
+`apply_delta(S, delta_since(S', vv_seen)) == S.merge(S')` whenever
+vv_seen captures what the receiver already has — property-tested in
+tests/test_delta.py. Payloads may be int8-compressed (deterministic
+quantization, core.compression) for gossip bandwidth.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, FrozenSet, Optional
+
+import numpy as np
+
+from repro.core.compression import CompressedTree, compress_tree, \
+    decompress_tree
+from repro.core.state import AddEntry, CRDTMergeState
+from repro.core.version_vector import VersionVector
+
+
+@dataclass
+class Delta:
+    adds: FrozenSet[AddEntry]
+    removes: FrozenSet[str]
+    vv: VersionVector
+    payloads: Dict[str, Any] = field(default_factory=dict)
+    compressed: bool = False
+
+    def approx_bytes(self) -> int:
+        meta = 96 * (len(self.adds) + len(self.removes))
+        data = 0
+        for v in self.payloads.values():
+            if isinstance(v, CompressedTree):
+                data += v.nbytes()
+            else:
+                import jax
+                data += sum(np.asarray(x).nbytes
+                            for x in jax.tree_util.tree_leaves(v))
+        return meta + data
+
+
+def delta_since(state: CRDTMergeState, seen: VersionVector,
+                compress: bool = False) -> Delta:
+    """Entries the peer (whose knowledge is `seen`) may be missing.
+
+    Conservative per-node clock filter: an add/remove originating at node
+    n with clock > seen[n] is included. Tags embed no clock, so removes
+    are filtered by the remove-set difference heuristic: all removes are
+    sent when the peer's vv is stale anywhere (removes are tiny).
+    """
+    new_adds = frozenset(
+        e for e in state.adds
+        if state.vv.get(e.node) > seen.get(e.node))
+    stale = any(state.vv.get(k) > seen.get(k)
+                for k in state.vv.to_dict())
+    new_removes = state.removes if stale else frozenset()
+    need = {e.element_id for e in new_adds}
+    payloads: Dict[str, Any] = {}
+    for eid in need:
+        if eid in state.store:
+            p = state.store[eid]
+            payloads[eid] = compress_tree(p) if compress else p
+    return Delta(new_adds, new_removes, state.vv, payloads,
+                 compressed=compress)
+
+
+def apply_delta(state: CRDTMergeState, delta: Delta) -> CRDTMergeState:
+    store = dict(state.store)
+    for eid, payload in delta.payloads.items():
+        if eid not in store:
+            store[eid] = (decompress_tree(payload)
+                          if isinstance(payload, CompressedTree)
+                          else payload)
+    return CRDTMergeState(state.adds | delta.adds,
+                          state.removes | delta.removes,
+                          state.vv.merge(delta.vv), store)

@@ -1,0 +1,157 @@
+"""Multi-node convergence simulation (paper Tier 3, §6.5).
+
+In-process network of CRDT nodes with explicit message delivery so tests
+can control ordering, duplication, loss and partitions. Two protocols:
+
+  * all-pairs push (the paper's prototype: n(n-1) directed merges/round);
+  * epidemic (randomised fanout) push gossip [18] — the paper's suggested
+    production protocol beyond ~50 nodes (O(n·fanout)/round).
+
+Delta-state propagation (paper §7.2 L1, implemented in core.delta) plugs
+in via `use_deltas=True`: nodes send only add/remove entries the peer has
+not acknowledged, with optional int8 payload compression.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.delta import Delta, delta_since, apply_delta
+from repro.core.resolve import resolve
+from repro.core.state import CRDTMergeState
+
+
+class GossipNode:
+    def __init__(self, node_id: str):
+        self.node_id = node_id
+        self.state = CRDTMergeState()
+        self.known: Dict[str, dict] = {}     # peer -> last seen vv (delta sync)
+        self.merge_calls = 0
+
+    def contribute(self, contribution, element_id: Optional[str] = None):
+        self.state = self.state.add(contribution, self.node_id,
+                                    element_id=element_id)
+
+    def retract(self, element_id: str):
+        self.state = self.state.remove(element_id, self.node_id)
+
+    def receive_state(self, other: CRDTMergeState):
+        self.state = self.state.merge(other)
+        self.merge_calls += 1
+
+    def receive_delta(self, delta: Delta):
+        self.state = apply_delta(self.state, delta)
+        self.merge_calls += 1
+
+    def root(self) -> bytes:
+        return self.state.merkle_root()
+
+    def resolve(self, strategy: str, base=None, **cfg):
+        return resolve(self.state, strategy, base=base, **cfg)
+
+
+class GossipNetwork:
+    def __init__(self, n: int, seed: int = 0, use_deltas: bool = False):
+        self.nodes = [GossipNode(f"node{i:03d}") for i in range(n)]
+        self.rng = random.Random(seed)
+        self.use_deltas = use_deltas
+        self.partitions: Optional[List[Set[int]]] = None
+        self.bytes_sent = 0
+
+    # ------------------------------------------------------------ topology
+
+    def partition(self, groups: Sequence[Sequence[int]]):
+        self.partitions = [set(g) for g in groups]
+
+    def heal(self):
+        self.partitions = None
+
+    def _can_send(self, i: int, j: int) -> bool:
+        if self.partitions is None:
+            return True
+        return any(i in g and j in g for g in self.partitions)
+
+    # ------------------------------------------------------------ delivery
+
+    def _send(self, i: int, j: int):
+        src, dst = self.nodes[i], self.nodes[j]
+        if self.use_deltas:
+            from repro.core.version_vector import VersionVector
+            seen = VersionVector(src.known.get(dst.node_id, {}))
+            d = delta_since(src.state, seen)
+            dst.receive_delta(d)
+            self.bytes_sent += d.approx_bytes()
+            src.known[dst.node_id] = src.state.vv.to_dict()
+        else:
+            dst.receive_state(src.state)
+
+    def all_pairs_round(self, order: Optional[List[Tuple[int, int]]] = None):
+        """The paper's prototype: every directed pair, in a (possibly
+        shuffled) order."""
+        n = len(self.nodes)
+        pairs = order or [(i, j) for i in range(n) for j in range(n)
+                          if i != j]
+        if order is None:
+            self.rng.shuffle(pairs)
+        for i, j in pairs:
+            if self._can_send(i, j):
+                self._send(i, j)
+
+    def epidemic_round(self, fanout: int = 3):
+        n = len(self.nodes)
+        for i in range(n):
+            peers = [j for j in range(n) if j != i and self._can_send(i, j)]
+            if not peers:
+                continue
+            for j in self.rng.sample(peers, min(fanout, len(peers))):
+                self._send(i, j)
+
+    def run_epidemic(self, fanout: int = 3, max_rounds: int = 64) -> int:
+        """Gossip until all (reachable) roots agree; returns rounds used."""
+        for r in range(1, max_rounds + 1):
+            self.epidemic_round(fanout)
+            if self.converged():
+                return r
+        return max_rounds
+
+    # ---------------------------------------------------------- inspection
+
+    def roots(self) -> List[bytes]:
+        return [n.root() for n in self.nodes]
+
+    def converged(self) -> bool:
+        if self.partitions is None:
+            rs = self.roots()
+            return all(r == rs[0] for r in rs)
+        for g in self.partitions:
+            rs = [self.nodes[i].root() for i in g]
+            if not all(r == rs[0] for r in rs):
+                return False
+        return True
+
+    def resolve_all(self, strategy: str, base=None, **cfg):
+        return [n.resolve(strategy, base=base, **cfg) for n in self.nodes]
+
+    # ------------------------------------------------- tombstone GC (L3)
+
+    def stable_tombstones(self) -> set:
+        """Causal stability (paper §7.2 L3 / Baquero et al. [3]): a
+        tombstone is stable once EVERY node has observed it."""
+        if not self.nodes:
+            return set()
+        stable = set(self.nodes[0].state.removes)
+        for n in self.nodes[1:]:
+            stable &= n.state.removes
+        return stable
+
+    def gc_round(self) -> int:
+        """Prune causally-stable tombstones everywhere. Must run only
+        after resolve() outputs have been disseminated (the paper's GC
+        precondition) — callers sequence this after a resolve round.
+        Returns the number of tombstones collected."""
+        stable = self.stable_tombstones()
+        if stable:
+            for n in self.nodes:
+                n.state = n.state.gc_tombstones(stable)
+        return len(stable)

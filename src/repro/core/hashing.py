@@ -1,0 +1,92 @@
+"""Content hashing for model contributions.
+
+Two tiers:
+  * `tensor_digest` / `pytree_digest`: SHA-256 over canonical bytes
+    (dtype | shape | row-major data, keys in sorted order). The paper's
+    canonical identifier (Assumption 11).
+  * `fingerprint2x32`: a jittable, *sharding-invariant* integer fingerprint
+    (beyond paper): each element contributes `word * mix(global_index)`
+    under exact wrap-around uint32 arithmetic, so partial sums from any
+    sharding combine with an integer psum to the identical value. Used as
+    the intra-cluster fast path for dedup; SHA-256 remains the canonical
+    identity.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_MIX_A = np.uint32(2654435761)   # Knuth multiplicative
+_MIX_B = np.uint32(0x9E3779B9)
+_MIX_C = np.uint32(0x85EBCA6B)
+_MIX_D = np.uint32(0xC2B2AE35)
+
+
+def tensor_digest(arr) -> bytes:
+    a = np.asarray(arr)
+    h = hashlib.sha256()
+    h.update(str(a.dtype).encode())
+    h.update(b"|")
+    h.update(str(a.shape).encode())
+    h.update(b"|")
+    h.update(np.ascontiguousarray(a).tobytes())
+    return h.digest()
+
+
+def pytree_digest(tree) -> bytes:
+    """SHA-256 of a parameter pytree: leaves hashed, combined in path order."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    h = hashlib.sha256()
+    for path, leaf in sorted(flat, key=lambda kv: jax.tree_util.keystr(kv[0])):
+        h.update(jax.tree_util.keystr(path).encode())
+        h.update(tensor_digest(leaf))
+    return h.digest()
+
+
+def hexdigest(tree) -> str:
+    return pytree_digest(tree).hex()
+
+
+# ---------------------------------------------------------------------------
+# Jittable order-independent fingerprint
+# ---------------------------------------------------------------------------
+
+
+def _words_u32(x: jax.Array) -> jax.Array:
+    x = x.reshape(-1)
+    if x.dtype == jnp.float32:
+        return jax.lax.bitcast_convert_type(x, jnp.uint32)
+    if x.dtype == jnp.bfloat16:
+        return jax.lax.bitcast_convert_type(x, jnp.uint16).astype(jnp.uint32)
+    if x.dtype in (jnp.int32, jnp.uint32):
+        return x.astype(jnp.uint32)
+    return jax.lax.bitcast_convert_type(
+        x.astype(jnp.float32), jnp.uint32)
+
+
+def fingerprint2x32(x: jax.Array) -> jax.Array:
+    """Returns uint32[2]; exact, associative-commutative accumulation."""
+    w = _words_u32(x)
+    i = jax.lax.iota(jnp.uint32, w.shape[0])
+    k1 = (i * _MIX_A + _MIX_B) ^ (i >> 7)
+    k2 = (i * _MIX_C + _MIX_D) ^ (i << 3)
+    lane1 = jnp.sum(w * k1, dtype=jnp.uint32)
+    lane2 = jnp.sum((w ^ k2) * _MIX_A, dtype=jnp.uint32)
+    return jnp.stack([lane1, lane2])
+
+
+@jax.jit
+def tree_fingerprint(tree) -> jax.Array:
+    """uint32[2] fingerprint of a whole pytree (leaf order = path order)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    acc = jnp.zeros((2,), jnp.uint32)
+    for idx, (path, leaf) in enumerate(
+            sorted(flat, key=lambda kv: jax.tree_util.keystr(kv[0]))):
+        fp = fingerprint2x32(leaf)
+        rot = jnp.uint32(idx * 0x9E3779B9 + 1)
+        acc = acc + fp * rot
+    return acc

@@ -1,0 +1,59 @@
+"""Merkle hash tree over the canonically-ordered visible set (paper §4.2).
+
+Leaves are contribution content hashes sorted ascending; interior nodes
+hash child pairs (odd nodes promote). The root provides O(log n)
+convergence verification, delta-sync divergence detection, and the
+deterministic seed for Layer 2 (paper Def. 6).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import List, Optional, Sequence, Tuple
+
+_EMPTY = hashlib.sha256(b"crdt-merge/empty").digest()
+
+
+def _h(a: bytes, b: bytes) -> bytes:
+    return hashlib.sha256(b"\x01" + a + b).digest()
+
+
+def merkle_levels(leaves: Sequence[bytes]) -> List[List[bytes]]:
+    """All tree levels, bottom-up. Level 0 = sorted leaf hashes."""
+    if not leaves:
+        return [[_EMPTY]]
+    level = sorted(leaves)
+    levels = [list(level)]
+    while len(level) > 1:
+        nxt = []
+        for i in range(0, len(level) - 1, 2):
+            nxt.append(_h(level[i], level[i + 1]))
+        if len(level) % 2:
+            nxt.append(level[-1])
+        level = nxt
+        levels.append(list(level))
+    return levels
+
+
+def merkle_root(leaves: Sequence[bytes]) -> bytes:
+    return merkle_levels(leaves)[-1][0]
+
+
+def merkle_proof(leaves: Sequence[bytes], leaf: bytes) -> List[Tuple[str, bytes]]:
+    """Audit path [(side, sibling_hash)] from leaf to root."""
+    levels = merkle_levels(leaves)
+    idx = levels[0].index(leaf)
+    proof = []
+    for level in levels[:-1]:
+        sib = idx ^ 1
+        if sib < len(level):
+            proof.append(("L" if sib < idx else "R", level[sib]))
+        idx //= 2
+    return proof
+
+
+def verify_proof(leaf: bytes, proof: List[Tuple[str, bytes]],
+                 root: bytes) -> bool:
+    h = leaf
+    for side, sib in proof:
+        h = _h(sib, h) if side == "L" else _h(h, sib)
+    return h == root

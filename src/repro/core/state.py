@@ -1,0 +1,133 @@
+"""CRDTMergeState — Layer 1 of the two-layer architecture (paper §4.2).
+
+State S = (A, R, V, H):
+  A — add entries (element_id, tag, node); element_id = SHA-256 content hash
+      of the contribution (dedup + canonical ordering, paper Def. 5);
+  R — removed tags (tombstones; OR-Set add-wins semantics);
+  V — version vector (optimisation metadata, not needed for correctness);
+  H — Merkle root over the visible element ids (recomputed lazily).
+
+merge(S1, S2) = (A1 ∪ A2, R1 ∪ R2, max(V1, V2), H') — commutative,
+associative, idempotent (Theorem 8; verified in tests/test_crdt_state.py
+including hypothesis property sweeps).
+
+Contribution payloads (parameter pytrees) live in a content-addressed
+store keyed by element_id, carried alongside the metadata. The store
+union is also a semilattice (keys are content hashes, so equal keys bind
+equal values — Assumption 11).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, FrozenSet, Iterable, Optional, Tuple
+
+from repro.core.hashing import pytree_digest
+from repro.core.merkle import merkle_root
+from repro.core.version_vector import VersionVector
+
+
+@dataclass(frozen=True, order=True)
+class AddEntry:
+    element_id: str      # hex SHA-256 of contribution content
+    tag: str             # unique tag (hash of element, node, node clock)
+    node: str
+
+
+class CRDTMergeState:
+    """Immutable-style OR-Set state over model contributions."""
+
+    __slots__ = ("adds", "removes", "vv", "store", "_root")
+
+    def __init__(self,
+                 adds: FrozenSet[AddEntry] = frozenset(),
+                 removes: FrozenSet[str] = frozenset(),
+                 vv: Optional[VersionVector] = None,
+                 store: Optional[Dict[str, Any]] = None):
+        self.adds = frozenset(adds)
+        self.removes = frozenset(removes)
+        self.vv = vv or VersionVector()
+        self.store = dict(store or {})
+        self._root: Optional[bytes] = None
+
+    # ------------------------------------------------------------- update
+
+    def add(self, contribution: Any, node: str,
+            element_id: Optional[str] = None) -> "CRDTMergeState":
+        """Contribute a model (paper: participant publishes a fine-tune)."""
+        eid = element_id or pytree_digest(contribution).hex()
+        clock = self.vv.get(node) + 1
+        tag = hashlib.sha256(
+            f"{eid}|{node}|{clock}".encode()).hexdigest()[:32]
+        store = dict(self.store)
+        store[eid] = contribution
+        return CRDTMergeState(
+            self.adds | {AddEntry(eid, tag, node)},
+            self.removes, self.vv.increment(node), store)
+
+    def remove(self, element_id: str, node: str) -> "CRDTMergeState":
+        """Retract: tombstone all *observed* tags of the element (OR-Set:
+        concurrent adds elsewhere survive — add-wins)."""
+        observed = {e.tag for e in self.adds if e.element_id == element_id}
+        return CRDTMergeState(self.adds, self.removes | observed,
+                              self.vv.increment(node), self.store)
+
+    # -------------------------------------------------------------- query
+
+    def visible(self) -> FrozenSet[str]:
+        return frozenset(e.element_id for e in self.adds
+                         if e.tag not in self.removes)
+
+    def visible_contributions(self) -> Dict[str, Any]:
+        return {eid: self.store[eid] for eid in self.visible()
+                if eid in self.store}
+
+    def merkle_root(self) -> bytes:
+        if self._root is None:
+            leaves = [bytes.fromhex(e) for e in sorted(self.visible())]
+            self._root = merkle_root(leaves)
+        return self._root
+
+    # -------------------------------------------------------------- merge
+
+    def merge(self, other: "CRDTMergeState") -> "CRDTMergeState":
+        store = dict(self.store)
+        store.update(other.store)
+        return CRDTMergeState(self.adds | other.adds,
+                              self.removes | other.removes,
+                              self.vv.merge(other.vv), store)
+
+    __or__ = merge
+
+    # ------------------------------------------------------ partial order
+
+    def leq(self, other: "CRDTMergeState") -> bool:
+        """S1 ⊑ S2 on metadata (paper Eq. 9)."""
+        return (self.adds <= other.adds and self.removes <= other.removes
+                and self.vv <= other.vv)
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, CRDTMergeState):
+            return NotImplemented
+        return (self.adds == other.adds and self.removes == other.removes
+                and self.vv == other.vv)
+
+    def __hash__(self):
+        return hash((self.adds, self.removes))
+
+    # ----------------------------------------------------- garbage collect
+
+    def gc_tombstones(self, stable_tags: Iterable[str]) -> "CRDTMergeState":
+        """Causal-stability GC (paper §7.2 L3): drop tombstoned add entries
+        and their tombstones once observed by all replicas. Must only be
+        invoked after resolve() output dissemination."""
+        stable = set(stable_tags) & self.removes
+        adds = frozenset(e for e in self.adds if e.tag not in stable)
+        removes = self.removes - stable
+        live = {e.element_id for e in adds}
+        store = {k: v for k, v in self.store.items() if k in live}
+        return CRDTMergeState(adds, removes, self.vv, store)
+
+    def __repr__(self) -> str:
+        return (f"CRDTMergeState(|A|={len(self.adds)}, |R|={len(self.removes)}"
+                f", visible={len(self.visible())}, vv={self.vv})")

@@ -1,0 +1,89 @@
+"""Trust-as-CRDT Byzantine extension (paper §7.2 L4 sketch, implemented).
+
+Trust evidence is a grow-only set (a monotonic CRDT): each entry names an
+element_id, an evidence kind, a reporting node and a severity. The
+evidence-set union is trivially a semilattice, so all honest nodes
+converge to the same evidence — and therefore to the same trust scores
+and the same gating decision at the Layer-2 boundary. `gated_visible`
+deterministically excludes contributions whose converged score falls
+below threshold; resolve() then runs on the gated set.
+
+This gives consensus-free Byzantine *isolation* (not full BFT): with at
+most f adversaries and evidence reaching all honest nodes, the n-f honest
+replicas agree bitwise on what to merge. Complements (does not replace)
+robust aggregation [4].
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, Optional
+
+from repro.core.state import CRDTMergeState
+
+DEFAULT_WEIGHTS = {
+    "equivocation": 1.0,         # same node, conflicting roots
+    "divergent_root": 0.6,       # Merkle-root mismatch on re-computation
+    "fingerprint_anomaly": 0.5,  # content hash != announced hash
+    "statistical_outlier": 0.25, # parameter-distribution anomaly
+}
+
+
+@dataclass(frozen=True, order=True)
+class Evidence:
+    element_id: str
+    kind: str
+    reporter: str
+    severity: float = 1.0
+
+
+class TrustState:
+    """Grow-only evidence set + derived scores."""
+
+    __slots__ = ("evidence",)
+
+    def __init__(self, evidence: FrozenSet[Evidence] = frozenset()):
+        self.evidence = frozenset(evidence)
+
+    def report(self, element_id: str, kind: str, reporter: str,
+               severity: float = 1.0) -> "TrustState":
+        return TrustState(self.evidence |
+                          {Evidence(element_id, kind, reporter, severity)})
+
+    def merge(self, other: "TrustState") -> "TrustState":
+        return TrustState(self.evidence | other.evidence)
+
+    def score(self, element_id: str,
+              weights: Optional[Dict[str, float]] = None) -> float:
+        """1.0 = fully trusted; decreases with distinct-reporter evidence."""
+        w = weights or DEFAULT_WEIGHTS
+        penalty = 0.0
+        for ev in sorted(self.evidence):
+            if ev.element_id == element_id:
+                penalty += w.get(ev.kind, 0.25) * ev.severity
+        return max(0.0, 1.0 - penalty)
+
+    def __eq__(self, other):
+        return isinstance(other, TrustState) and \
+            self.evidence == other.evidence
+
+    def __hash__(self):
+        return hash(self.evidence)
+
+
+def gated_visible(state: CRDTMergeState, trust: TrustState,
+                  threshold: float = 0.5) -> FrozenSet[str]:
+    """Deterministic trust gate at the Layer-2 boundary."""
+    return frozenset(e for e in state.visible()
+                     if trust.score(e) >= threshold)
+
+
+def gated_resolve(state: CRDTMergeState, trust: TrustState,
+                  strategy: str, base=None, threshold: float = 0.5, **cfg):
+    from repro.core.resolve import apply_strategy, seed_from_root
+    from repro.core.merkle import merkle_root
+    ids = sorted(gated_visible(state, trust, threshold))
+    if not ids:
+        raise ValueError("all contributions gated out")
+    root = merkle_root([bytes.fromhex(i) for i in ids])
+    return apply_strategy(strategy, [state.store[i] for i in ids],
+                          base=base, seed=seed_from_root(root), **cfg)

@@ -1,0 +1,1 @@
+from repro.data.synthetic import SyntheticTask, batch_shapes  # noqa: F401

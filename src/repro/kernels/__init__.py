@@ -1,0 +1,4 @@
+from repro.kernels.ops import (  # noqa: F401
+    ties_merge, dare_merge, weighted_merge, weight_average_merge,
+    task_arithmetic_merge, slerp_merge)
+from repro.kernels.flash_attention import flash_attention  # noqa: F401,E402

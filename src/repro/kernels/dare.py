@@ -1,0 +1,56 @@
+"""Fused DARE kernel: in-kernel counter-based RNG -> mask -> rescale -> mean.
+
+The Bernoulli mask is derived from the Merkle seed and the *global*
+element index via a stateless uint32 hash, entirely inside the kernel —
+the k x p mask never exists in HBM (vs. the eager pipeline which
+materializes the random tensor, the mask, and the rescaled taus). One
+streaming pass: read (k, BLOCK) + base tile, write merged tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import hash_uniform
+
+
+def _dare_kernel(x_ref, base_ref, seed_ref, out_ref, *, p: float,
+                 npad: int, block: int):
+    x = x_ref[...]                          # [k, B]
+    base = base_ref[...]                    # [1, B]
+    seed = seed_ref[0, 0]
+    k = x.shape[0]
+    i = pl.program_id(0)
+    col = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 1) + \
+        jnp.uint32(i * block)
+    row = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 0)
+    idx = row * jnp.uint32(npad) + col
+    u = hash_uniform(idx, seed)
+    keep = (u >= jnp.float32(p)).astype(jnp.float32)
+    tau = (x - base) * keep * jnp.float32(1.0 / (1.0 - p))
+    out_ref[...] = base + jnp.mean(tau, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("p", "block", "interpret"))
+def dare_pallas(stacked, base, seed, *, p: float = 0.5, block: int = 2048,
+                interpret: bool = True):
+    """stacked: [k, Np] fp32; base: [1, Np]; seed: uint32 [1,1]."""
+    k, npad = stacked.shape
+    grid = (npad // block,)
+    kern = functools.partial(_dare_kernel, p=p, npad=npad, block=block)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, npad), jnp.float32),
+        interpret=interpret,
+    )(stacked, base, seed)

@@ -1,0 +1,111 @@
+"""Jit'd public wrappers over the Pallas merge kernels.
+
+These operate on contribution pytrees (per-leaf), handle flatten/pad/
+unpad, compute the global pieces that need a sort (TIES trim quantiles)
+or a reduction epilogue (SLERP scalars), and dispatch to the kernels.
+interpret=True is chosen automatically off-TPU.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import DEFAULT_BLOCK, default_interpret, \
+    pad_flat, pad_stacked
+from repro.kernels.dare import dare_pallas
+from repro.kernels.nary_accum import nary_accum_pallas
+from repro.kernels.slerp import slerp_pallas
+from repro.kernels.ties import ties_pallas
+
+
+def _per_leaf(contribs: List[Any], base: Optional[Any]):
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(list(xs)), *contribs)
+    if base is None:
+        base = jax.tree_util.tree_map(jnp.zeros_like, contribs[0])
+    ls, treedef = jax.tree_util.tree_flatten(stacked)
+    lb = treedef.flatten_up_to(base)
+    return ls, lb, treedef
+
+
+def _unpad(out, n, shape, dtype):
+    return out.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def ties_merge(contribs, base=None, trim: float = 0.2, *,
+               block: int = DEFAULT_BLOCK, interpret: Optional[bool] = None):
+    interpret = default_interpret() if interpret is None else interpret
+    ls, lb, treedef = _per_leaf(contribs, base)
+    outs = []
+    for s, b in zip(ls, lb):
+        sp, n = pad_stacked(s, block)
+        bp, _ = pad_flat(b, block)
+        # global (sort-based) trim thresholds, fp32, on the unpadded region
+        # (must match the kernel's fp32 tau exactly at the boundary)
+        thr = jnp.quantile(
+            jnp.abs(sp[:, :n] - bp[None, :n]),
+            trim, axis=1).astype(jnp.float32).reshape(-1, 1)
+        out = ties_pallas(sp, bp[None, :], thr, block=block,
+                          interpret=interpret)
+        outs.append(_unpad(out, n, b.shape, s.dtype))
+    return jax.tree_util.tree_unflatten(treedef, outs)
+
+
+def dare_merge(contribs, base=None, seed: int = 0, p: float = 0.5, *,
+               block: int = DEFAULT_BLOCK, interpret: Optional[bool] = None):
+    interpret = default_interpret() if interpret is None else interpret
+    ls, lb, treedef = _per_leaf(contribs, base)
+    outs = []
+    for i, (s, b) in enumerate(zip(ls, lb)):
+        sp, n = pad_stacked(s, block)
+        bp, _ = pad_flat(b, block)
+        sd = jnp.asarray([[seed + i]], jnp.uint32)
+        out = dare_pallas(sp, bp[None, :], sd, p=p, block=block,
+                          interpret=interpret)
+        outs.append(_unpad(out, n, b.shape, s.dtype))
+    return jax.tree_util.tree_unflatten(treedef, outs)
+
+
+def weighted_merge(contribs, weights, base=None, *,
+                   block: int = DEFAULT_BLOCK,
+                   interpret: Optional[bool] = None):
+    """out = base + sum_i w_i (x_i - base). weights: [k] scalars."""
+    interpret = default_interpret() if interpret is None else interpret
+    ls, lb, treedef = _per_leaf(contribs, base)
+    w = jnp.asarray(weights, jnp.float32).reshape(-1, 1)
+    outs = []
+    for s, b in zip(ls, lb):
+        sp, n = pad_stacked(s, block)
+        bp, _ = pad_flat(b, block)
+        out = nary_accum_pallas(sp, bp[None, :], w, block=block,
+                                interpret=interpret)
+        outs.append(_unpad(out, n, b.shape, s.dtype))
+    return jax.tree_util.tree_unflatten(treedef, outs)
+
+
+def weight_average_merge(contribs, base=None, **kw):
+    k = len(contribs)
+    zero = jax.tree_util.tree_map(jnp.zeros_like, contribs[0])
+    return weighted_merge(contribs, jnp.full((k,), 1.0 / k), zero, **kw)
+
+
+def task_arithmetic_merge(contribs, base, lam: float = 1.0, **kw):
+    k = len(contribs)
+    return weighted_merge(contribs, jnp.full((k,), lam), base, **kw)
+
+
+def slerp_merge(a, b_tree, t: float = 0.5, *, block: int = DEFAULT_BLOCK,
+                interpret: Optional[bool] = None):
+    interpret = default_interpret() if interpret is None else interpret
+    la, treedef = jax.tree_util.tree_flatten(a)
+    lb = treedef.flatten_up_to(b_tree)
+    outs = []
+    for u, v in zip(la, lb):
+        up, n = pad_flat(u, block)
+        vp, _ = pad_flat(v, block)
+        out = slerp_pallas(up[None, :], vp[None, :], t=t, block=block,
+                           interpret=interpret)
+        outs.append(_unpad(out, n, u.shape, u.dtype))
+    return jax.tree_util.tree_unflatten(treedef, outs)

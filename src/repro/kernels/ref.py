@@ -1,0 +1,54 @@
+"""Pure-jnp oracles mirroring each kernel's exact computation order.
+
+These are the correctness references for the shape/dtype sweep tests
+(kernels validated with interpret=True on CPU; TPU is the target). The
+DARE oracle reuses the identical uint32 hash, so masks match bitwise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import hash_uniform
+
+
+def ties_ref(stacked, base, thresholds):
+    tau = stacked - base
+    mask = (jnp.abs(tau) >= thresholds).astype(jnp.float32)
+    trimmed = tau * mask
+    elected = jnp.sign(jnp.sum(trimmed, axis=0, keepdims=True))
+    agree = ((jnp.sign(trimmed) == elected) & (trimmed != 0)).astype(
+        jnp.float32)
+    cnt = jnp.maximum(jnp.sum(agree, axis=0, keepdims=True), 1.0)
+    merged = jnp.sum(trimmed * agree, axis=0, keepdims=True) / cnt
+    return base + merged
+
+
+def dare_ref(stacked, base, seed, p=0.5):
+    k, npad = stacked.shape
+    row = jax.lax.broadcasted_iota(jnp.uint32, (k, npad), 0)
+    col = jax.lax.broadcasted_iota(jnp.uint32, (k, npad), 1)
+    idx = row * jnp.uint32(npad) + col
+    u = hash_uniform(idx, seed.reshape(())[()] if hasattr(seed, "reshape")
+                     else seed)
+    keep = (u >= jnp.float32(p)).astype(jnp.float32)
+    tau = (stacked - base) * keep * jnp.float32(1.0 / (1.0 - p))
+    return base + jnp.mean(tau, axis=0, keepdims=True)
+
+
+def nary_accum_ref(stacked, base, weights):
+    return base + jnp.sum(weights * (stacked - base), axis=0, keepdims=True)
+
+
+def slerp_ref(u, v, t=0.5):
+    eps = jnp.float32(1e-12)
+    dot = jnp.sum(u * v)
+    nu = jnp.sqrt(jnp.sum(u * u)) + eps
+    nv = jnp.sqrt(jnp.sum(v * v)) + eps
+    cos = jnp.clip(dot / (nu * nv), -1.0, 1.0)
+    omega = jnp.arccos(cos)
+    so = jnp.sin(omega)
+    w1 = jnp.where(so < 1e-6, 1.0 - t, jnp.sin((1.0 - t) * omega) / so)
+    w2 = jnp.where(so < 1e-6, t, jnp.sin(t * omega) / so)
+    mag = (1.0 - t) * nu + t * nv
+    return (w1 * mag / nu) * u + (w2 * mag / nv) * v

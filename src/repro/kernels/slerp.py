@@ -1,0 +1,70 @@
+"""Two-pass SLERP kernel.
+
+Pass 1 (reduction): blocked partial sums of (u.v, u.u, v.v) — one read of
+each operand. Pass 2 (elementwise): out = (w1*u/nu + w2*v/nv) * mag with
+the trig scalars computed between passes — one more read + one write.
+Total: 2 reads/operand vs 4+ for the eager pipeline (normalize, dot,
+interpolate, rescale).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _reduce_kernel(u_ref, v_ref, out_ref):
+    u = u_ref[...]                      # [1, B]
+    v = v_ref[...]
+    i = pl.program_id(0)
+    out_ref[0, 0] = jnp.sum(u * v)
+    out_ref[0, 1] = jnp.sum(u * u)
+    out_ref[0, 2] = jnp.sum(v * v)
+
+
+def _combine_kernel(u_ref, v_ref, s_ref, out_ref):
+    u = u_ref[...]
+    v = v_ref[...]
+    c1 = s_ref[0, 0]                    # w1 * mag / nu
+    c2 = s_ref[0, 1]                    # w2 * mag / nv
+    out_ref[...] = c1 * u + c2 * v
+
+
+@functools.partial(jax.jit, static_argnames=("t", "block", "interpret"))
+def slerp_pallas(u, v, *, t: float = 0.5, block: int = 2048,
+                 interpret: bool = True):
+    """u, v: [1, Np] fp32 padded. Returns [1, Np]."""
+    npad = u.shape[1]
+    grid = (npad // block,)
+    partials = pl.pallas_call(
+        _reduce_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, block), lambda i: (0, i)),
+                  pl.BlockSpec((1, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, 3), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], 3), jnp.float32),
+        interpret=interpret,
+    )(u, v)
+    dot, uu, vv = (jnp.sum(partials[:, 0]), jnp.sum(partials[:, 1]),
+                   jnp.sum(partials[:, 2]))
+    eps = jnp.float32(1e-12)
+    nu, nv = jnp.sqrt(uu) + eps, jnp.sqrt(vv) + eps
+    cos = jnp.clip(dot / (nu * nv), -1.0, 1.0)
+    omega = jnp.arccos(cos)
+    so = jnp.sin(omega)
+    w1 = jnp.where(so < 1e-6, 1.0 - t, jnp.sin((1.0 - t) * omega) / so)
+    w2 = jnp.where(so < 1e-6, t, jnp.sin(t * omega) / so)
+    mag = (1.0 - t) * nu + t * nv
+    scalars = jnp.stack([w1 * mag / nu, w2 * mag / nv]).reshape(1, 2)
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, block), lambda i: (0, i)),
+                  pl.BlockSpec((1, block), lambda i: (0, i)),
+                  pl.BlockSpec((1, 2), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, npad), jnp.float32),
+        interpret=interpret,
+    )(u, v, scalars)

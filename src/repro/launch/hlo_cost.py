@@ -1,0 +1,275 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's built-in `compiled.cost_analysis()` counts a `while` body ONCE, so
+scan-over-layers and gradient-accumulation loops are undercounted by
+their trip counts (verified empirically; see EXPERIMENTS.md §Dry-run).
+This module re-derives FLOPs / HBM bytes / collective traffic from
+`compiled.as_text()` by:
+
+  1. parsing every computation and instruction (name -> shape/op/operands),
+  2. walking the call graph from ENTRY, multiplying each computation's
+     cost by its execution count (`known_trip_count` for whiles, 1 for
+     fusions/calls; conditionals take the max branch),
+  3. counting dot FLOPs exactly (2 * prod(out) * prod(contracting dims)),
+     elementwise FLOPs approximately (1/elem), HBM bytes at fusion
+     boundaries, and per-collective traffic (all-reduce charged 2x).
+
+Shapes in a compiled SPMD module are per-partition, so all results are
+per-device — exactly what the roofline terms need.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# NOTE: tuple types embed /*index=N*/ comments, so match to the first ')'
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+"
+    r"\[[0-9,]*\](?:\{[^}]*\})?))\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED_RE = re.compile(
+    r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "exponential", "tanh", "negate", "power", "sqrt", "rsqrt", "log",
+    "floor", "ceil", "sign", "cosine", "sine", "logistic", "select",
+    "compare", "and", "or", "xor", "not", "clamp", "atan2",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "remainder", "convert", "exponential-minus-one", "log-plus-one",
+    "erf", "cbrt", "round-nearest-even", "round-nearest-afz",
+}
+NO_DATA = {"parameter", "constant", "tuple", "get-tuple-element",
+           "bitcast", "after-all", "partition-id", "replica-id", "iota",
+           "while", "conditional", "call"}   # bodies account for traffic
+# ops whose HBM traffic is ~ the accessed window, not the full operand
+WINDOWED = {"slice", "dynamic-slice", "gather"}
+COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute"}
+
+
+def _shape_elems_bytes(type_txt: str) -> Tuple[int, int, List[int]]:
+    """(total elems, total bytes, per-component bytes) of an HLO type."""
+    comps = []
+    elems = 0
+    for dt, dims in _SHAPE_RE.findall(type_txt):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        comps.append(n * DTYPE_BYTES[dt])
+        elems += n
+    return elems, sum(comps), comps
+
+
+@dataclass
+class Instr:
+    name: str
+    type_txt: str
+    op: str
+    rest: str
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class CostReport:
+    flops: float = 0.0
+    dot_flops: float = 0.0
+    elementwise_flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_count: Dict[str, int] = field(default_factory=dict)
+    collective_details: List[Tuple[float, str, str]] = \
+        field(default_factory=list)      # (bytes*mult, op, shape) top-N
+    unknown_trip_whiles: int = 0
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def parse_computations(text: str) -> Tuple[Dict[str, List[Instr]], str]:
+    comps: Dict[str, List[Instr]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        m = _COMP_RE.match(line)
+        if m and ("->" in line):
+            cur = m.group(1)
+            comps[cur] = []
+            if line.lstrip().startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi:
+            name, type_txt, op, rest = mi.groups()
+            # operands: %refs inside the top-level parens only (approx:
+            # everything before the first "), attr=" suffix)
+            args = rest.split("), ")[0]
+            operands = _OPERAND_RE.findall(args)
+            comps[cur].append(Instr(name, type_txt, op, rest, operands))
+    if entry is None and comps:
+        entry = next(iter(comps))
+    return comps, entry
+
+
+_PARAM_IDX_RE = re.compile(r"^(\d+)\)")
+
+
+def _param_window_bytes(comps, comp_name, operand_index):
+    """If fused-computation parameter `operand_index` is consumed only by
+    windowed ops (dynamic-slice etc.), return the windowed byte count;
+    else None (charge the full operand)."""
+    instrs = comps.get(comp_name)
+    if not instrs:
+        return None
+    pname = None
+    for i in instrs:
+        if i.op == "parameter":
+            m = _PARAM_IDX_RE.match(i.rest)
+            if m and int(m.group(1)) == operand_index:
+                pname = i.name
+                break
+    if pname is None:
+        return None
+    total = 0
+    for i in instrs:
+        if pname in i.operands:
+            if i.op in WINDOWED:
+                _, ob, _ = _shape_elems_bytes(i.type_txt)
+                total += ob
+            else:
+                return None          # consumed in full somewhere
+    return total if total else None
+
+
+def analyze(text: str) -> CostReport:
+    comps, entry = parse_computations(text)
+    shapes: Dict[str, str] = {}
+    for instrs in comps.values():
+        for i in instrs:
+            shapes[i.name] = i.type_txt
+
+    report = CostReport()
+    # execution multiplier per computation, accumulated over call paths
+    mult: Dict[str, float] = {}
+
+    def visit(comp: str, m: float):
+        mult[comp] = mult.get(comp, 0.0) + m
+        for instr in comps.get(comp, []):
+            op = instr.op
+            if op == "while":
+                tm = _TRIP_RE.search(instr.rest)
+                trip = int(tm.group(1)) if tm else 1
+                if not tm:
+                    report.unknown_trip_whiles += 1
+                called = _CALLED_RE.findall(instr.rest)
+                for c in called:           # body and condition
+                    if c in comps:
+                        visit(c, m * trip)
+            elif op == "conditional":
+                bm = _BRANCHES_RE.search(instr.rest)
+                branches = (_OPERAND_RE.findall(bm.group(1)) if bm else [])
+                if not branches:
+                    branches = _CALLED_RE.findall(instr.rest)
+                for c in branches:
+                    if c in comps:
+                        visit(c, m)
+            elif op in ("fusion", "call", "custom-call", "reduce",
+                        "reduce-window", "scatter", "select-and-scatter",
+                        "map", "sort", "all-reduce", "reduce-scatter"):
+                for c in _CALLED_RE.findall(instr.rest):
+                    if c in comps:
+                        visit(c, m)
+
+    visit(entry, 1.0)
+
+    for comp, instrs in comps.items():
+        m = mult.get(comp, 0.0)
+        if m == 0.0:
+            continue
+        fused = comp.startswith("fused_") or ".fused" in comp
+        for instr in instrs:
+            op = instr.op
+            out_elems, out_bytes, _ = _shape_elems_bytes(instr.type_txt)
+            if op == "dot":
+                cm = _CONTRACT_RE.search(instr.rest)
+                contract = 1
+                if cm and instr.operands:
+                    lhs_shape = shapes.get(instr.operands[0], "")
+                    dims_m = _SHAPE_RE.search(lhs_shape)
+                    if dims_m:
+                        lhs_dims = [int(d) for d in
+                                    dims_m.group(2).split(",") if d]
+                        for ci in cm.group(1).split(","):
+                            if ci and int(ci) < len(lhs_dims):
+                                contract *= lhs_dims[int(ci)]
+                report.dot_flops += m * 2.0 * out_elems * contract
+            elif op in ELEMENTWISE or op in ("reduce", "reduce-window"):
+                report.elementwise_flops += m * out_elems
+            base = op.replace("-start", "")
+            if base in COLLECTIVES and not op.endswith("-done"):
+                _, b, comps_bytes = _shape_elems_bytes(instr.type_txt)
+                size = max(comps_bytes) if comps_bytes else 0
+                traffic = 2.0 * size if base == "all-reduce" else size
+                report.collective_bytes[base] = \
+                    report.collective_bytes.get(base, 0.0) + m * traffic
+                report.collective_count[base] = \
+                    report.collective_count.get(base, 0) + int(m)
+                report.collective_details.append(
+                    (m * traffic, base, instr.type_txt[:80]))
+            # HBM bytes at fusion boundaries only
+            if not fused and op not in NO_DATA:
+                if op in WINDOWED:
+                    nbytes = 2.0 * out_bytes          # read window + write
+                elif op == "dynamic-update-slice":
+                    _, ub, _ = _shape_elems_bytes(
+                        shapes.get(instr.operands[1], "")
+                        if len(instr.operands) > 1 else "")
+                    nbytes = 2.0 * ub                 # read + write update
+                elif op == "scatter":
+                    _, ub, _ = _shape_elems_bytes(
+                        shapes.get(instr.operands[-1], "")
+                        if instr.operands else "")
+                    nbytes = 2.0 * ub
+                elif op == "fusion":
+                    # operands that are only dynamic-sliced INSIDE the
+                    # fusion are charged at the slice window, not the
+                    # full (e.g. layer-stacked) array
+                    called = _CALLED_RE.findall(instr.rest)
+                    nbytes = out_bytes
+                    for oi, o in enumerate(instr.operands):
+                        _, ob, _ = _shape_elems_bytes(shapes.get(o, ""))
+                        if called:
+                            w = _param_window_bytes(comps, called[0], oi)
+                            if w is not None:
+                                ob = min(ob, w)
+                        nbytes += ob
+                else:
+                    nbytes = out_bytes
+                    for o in instr.operands:
+                        _, ob, _ = _shape_elems_bytes(shapes.get(o, ""))
+                        nbytes += ob
+                report.bytes_accessed += m * nbytes
+
+    report.flops = report.dot_flops + report.elementwise_flops
+    return report

@@ -1,0 +1,71 @@
+"""CLI: CRDT-merge trained checkpoints.
+
+  PYTHONPATH=src python -m repro.launch.merge \
+      --arch minitron-8b --smoke --strategy ties \
+      --inputs /tmp/ck_a/step_00000010 /tmp/ck_b/step_00000010 \
+      --base /tmp/ck_base/step_00000000 --out /tmp/merged
+
+Every input checkpoint becomes one OR-Set contribution; the resolve is
+deterministic in the contribution SET (order/duplication of --inputs is
+irrelevant by construction — the point of the paper).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs import get_config, smoke_config
+from repro.core.resolve import resolve, seed_from_root
+from repro.core.state import CRDTMergeState
+from repro.models.model import Model
+from repro.train.step import init_train_state
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--strategy", default="ties")
+    ap.add_argument("--inputs", nargs="+", required=True)
+    ap.add_argument("--base", default="",
+                    help="base checkpoint for task-vector strategies")
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--node", default="merge-cli")
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = Model(cfg)
+    like = init_train_state(model, jax.random.PRNGKey(0))
+
+    state = CRDTMergeState()
+    for path in args.inputs:
+        ckpt, meta = restore_checkpoint(path, like)
+        state = state.add(ckpt["params"], node=args.node)
+        print(f"added {path} (data_step={meta.get('data_step')}) "
+              f"visible={len(state.visible())}")
+
+    base = None
+    if args.base:
+        base_ckpt, _ = restore_checkpoint(args.base, like)
+        base = base_ckpt["params"]
+
+    merged = resolve(state, args.strategy, base=base)
+    print(f"resolved {len(state.visible())} contributions with "
+          f"{args.strategy} (root {state.merkle_root().hex()[:16]}…, "
+          f"seed {seed_from_root(state.merkle_root())})")
+
+    out_state = dict(like)
+    out_state["params"] = merged
+    path = save_checkpoint(args.out, out_state, 0,
+                           metadata={"merged_from": args.inputs,
+                                     "strategy": args.strategy,
+                                     "merkle_root":
+                                         state.merkle_root().hex(),
+                                     "data_step": 0})
+    print(f"wrote merged checkpoint to {path}")
+
+
+if __name__ == "__main__":
+    main()

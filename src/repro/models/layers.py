@@ -1,0 +1,211 @@
+"""Shared layer library: norms, RoPE, MLPs, chunked GQA attention.
+
+Everything is a pure function over a param dict; attention is query-chunked
+(scan) so the 32k-prefill logits tensor never materializes at [S, S] — the
+per-chunk working set is q_chunk x S, which keeps compile-time memory
+analysis honest and maps directly onto VMEM-sized tiles on TPU.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.schema import PDef
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_def(d: int) -> PDef:
+    return PDef((d,), (None,), init="ones")
+
+
+def rmsnorm(w, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    if theta <= 0.0:
+        return x
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                    # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(ang)[..., None, :]                # [..., S, 1, D/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32)
+                  * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_def(d: int, f: int, variant: str, scale: float) -> dict:
+    if variant in ("swiglu", "geglu"):
+        return {
+            "w_gate": PDef((d, f), ("fsdp", "tp"), scale=scale),
+            "w_up": PDef((d, f), ("fsdp", "tp"), scale=scale),
+            "w_down": PDef((f, d), ("tp", "fsdp"), scale=scale),
+        }
+    return {  # non-gated (relu2 / gelu)
+        "w_up": PDef((d, f), ("fsdp", "tp"), scale=scale),
+        "w_down": PDef((f, d), ("tp", "fsdp"), scale=scale),
+    }
+
+
+def mlp(p: dict, x, variant: str, compute_dtype):
+    x = x.astype(compute_dtype)
+    if variant in ("swiglu", "geglu"):
+        g = x @ p["w_gate"].astype(compute_dtype)
+        u = x @ p["w_up"].astype(compute_dtype)
+        act = jax.nn.silu(g) if variant == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        u = x @ p["w_up"].astype(compute_dtype)
+        if variant == "relu2":
+            r = jax.nn.relu(u)
+            h = r * r
+        else:
+            h = jax.nn.gelu(u)
+    return h @ p["w_down"].astype(compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked multi-head attention (GQA, optional sliding window / softcap)
+# ---------------------------------------------------------------------------
+
+
+def attn_def(d: int, n_heads: int, n_kv: int, head_dim: int,
+             scale: float, kv_input_dim: int = 0) -> dict:
+    dk = kv_input_dim or d
+    return {
+        "wq": PDef((d, n_heads * head_dim), ("fsdp", "tp"), scale=scale),
+        "wk": PDef((dk, n_kv * head_dim), ("fsdp", "tp"), scale=scale),
+        "wv": PDef((dk, n_kv * head_dim), ("fsdp", "tp"), scale=scale),
+        "wo": PDef((n_heads * head_dim, d), ("tp", "fsdp"), scale=scale),
+    }
+
+
+def _attn_core(q, k, v, *, q_positions, kv_positions, kv_valid,
+               causal: bool, window: int, softcap: float, q_scale: float,
+               compute_dtype):
+    """q: [B, Sq, H, D]; k/v: [B, Sk, Hk, D]. Positions are 1-D per seq dim.
+
+    Returns [B, Sq, H, D]. Group-broadcast handles GQA. All masking is
+    position-based so ring-buffer (sliding-window) caches work unchanged.
+    """
+    b, sq, h, dh = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    q = q.reshape(b, sq, hk, g, dh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32) * q_scale
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    mask = kv_valid[None, :]                                   # [1, Sk]
+    if causal:
+        mask = mask & (kv_positions[None, :] <= q_positions[:, None])
+    if window > 0:
+        mask = mask & (q_positions[:, None] - kv_positions[None, :] < window)
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(compute_dtype),
+                     v.astype(compute_dtype))
+    return out.reshape(b, sq, h, dh)
+
+
+def chunked_attention(q, k, v, *, q_offset: int = 0, kv_positions=None,
+                      kv_valid=None, causal: bool = True, window: int = 0,
+                      softcap: float = 0.0, q_scale: float = 0.0,
+                      q_chunk: int = 512, compute_dtype=jnp.bfloat16):
+    """Query-chunked attention. q: [B, Sq, H, D]; k/v: [B, Sk, Hk, D]."""
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    if q_scale <= 0.0:
+        q_scale = dh ** -0.5
+    if kv_positions is None:
+        kv_positions = jnp.arange(sk)
+    if kv_valid is None:
+        kv_valid = jnp.ones((sk,), bool)
+
+    if sq <= q_chunk:
+        q_positions = q_offset + jnp.arange(sq)
+        return _attn_core(q, k, v, q_positions=q_positions,
+                          kv_positions=kv_positions, kv_valid=kv_valid,
+                          causal=causal, window=window, softcap=softcap,
+                          q_scale=q_scale, compute_dtype=compute_dtype)
+
+    pad = (-sq) % q_chunk
+    if pad:                       # e.g. whisper's 1500-frame encoder
+        q = jnp.concatenate(
+            [q, jnp.zeros((b, pad, h, dh), q.dtype)], axis=1)
+    n = (sq + pad) // q_chunk
+    qs = q.reshape(b, n, q_chunk, h, dh).transpose(1, 0, 2, 3, 4)
+
+    def body(_, inp):
+        i, qc = inp
+        q_positions = q_offset + i * q_chunk + jnp.arange(q_chunk)
+        out = _attn_core(qc, k, v, q_positions=q_positions,
+                         kv_positions=kv_positions, kv_valid=kv_valid,
+                         causal=causal, window=window, softcap=softcap,
+                         q_scale=q_scale, compute_dtype=compute_dtype)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(n), qs))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, sq + pad, h, dh)
+    return out[:, :sq] if pad else out
+
+
+def gqa_attention(p: dict, x, *, n_heads: int, n_kv: int, head_dim: int,
+                  rope_theta: float, q_offset: int = 0, causal: bool = True,
+                  window: int = 0, softcap: float = 0.0, q_scale: float = 0.0,
+                  q_chunk: int = 512, compute_dtype=jnp.bfloat16,
+                  kv_x=None, use_rope: bool = True):
+    """Full attention sub-layer (projections + chunked core). No cache."""
+    b, s, _ = x.shape
+    x = x.astype(compute_dtype)
+    kv_src = x if kv_x is None else kv_x.astype(compute_dtype)
+    sk = kv_src.shape[1]
+    q = (x @ p["wq"].astype(compute_dtype)).reshape(b, s, n_heads, head_dim)
+    k = (kv_src @ p["wk"].astype(compute_dtype)).reshape(b, sk, n_kv, head_dim)
+    v = (kv_src @ p["wv"].astype(compute_dtype)).reshape(b, sk, n_kv, head_dim)
+    if use_rope and rope_theta > 0.0:
+        q = apply_rope(q, q_offset + jnp.arange(s), rope_theta)
+        k = apply_rope(k, jnp.arange(sk), rope_theta)
+    out = chunked_attention(q, k, v, q_offset=q_offset, causal=causal,
+                            window=window, softcap=softcap, q_scale=q_scale,
+                            q_chunk=q_chunk, compute_dtype=compute_dtype)
+    return out.reshape(b, s, n_heads * head_dim) @ p["wo"].astype(compute_dtype)

@@ -1,0 +1,188 @@
+"""Mamba2 SSD block (state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD form: quadratic attention-like math
+within chunks, a linear recurrence across chunk states. Decode is the O(1)
+recurrent update over a [B, H, P, N] state. The conv1d frontend keeps a
+(d_conv-1)-step ring cache for decode.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaConfig, ModelConfig
+from repro.models.layers import rmsnorm, rmsnorm_def
+from repro.models.schema import PDef
+
+
+def mamba_dims(cfg: ModelConfig):
+    m = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    n_heads = d_inner // m.head_dim
+    conv_dim = d_inner + 2 * m.n_groups * m.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def mamba_def(cfg: ModelConfig) -> dict:
+    m = cfg.mamba
+    d = cfg.d_model
+    d_inner, n_heads, conv_dim = mamba_dims(cfg)
+    scale = 0.02
+    return {
+        # order: [z (d_inner), x (d_inner), B (G*N), C (G*N), dt (H)]
+        "w_in": PDef((d, 2 * d_inner + 2 * m.n_groups * m.d_state + n_heads),
+                     ("fsdp", "tp"), scale=scale),
+        "conv_w": PDef((m.d_conv, conv_dim), (None, "tp"), scale=scale),
+        "conv_b": PDef((conv_dim,), ("tp",), init="zeros"),
+        "a_log": PDef((n_heads,), ("tp",), init="zeros"),
+        "dt_bias": PDef((n_heads,), ("tp",), init="zeros"),
+        "d_skip": PDef((n_heads,), ("tp",), init="ones"),
+        "norm": rmsnorm_def(d_inner),
+        "w_out": PDef((d_inner, d), ("tp", "fsdp"), scale=scale),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    m = cfg.mamba
+    d_inner, n_heads, _ = mamba_dims(cfg)
+    gn = m.n_groups * m.d_state
+    z = zxbcdt[..., :d_inner]
+    x = zxbcdt[..., d_inner:2 * d_inner]
+    bmat = zxbcdt[..., 2 * d_inner:2 * d_inner + gn]
+    cmat = zxbcdt[..., 2 * d_inner + gn:2 * d_inner + 2 * gn]
+    dt = zxbcdt[..., 2 * d_inner + 2 * gn:]
+    return z, x, bmat, cmat, dt
+
+
+def _conv1d(x, w, b, cache=None):
+    """Causal depthwise conv. x: [B, S, C]; w: [K, C]. cache: [B, K-1, C]."""
+    k = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k)) + b
+    new_cache = xp[:, -(k - 1):]
+    return jax.nn.silu(out), new_cache
+
+
+def ssd_chunked(xh, dt, a_log, bmat, cmat, d_skip, m: MambaConfig,
+                init_state=None):
+    """Chunked SSD scan.
+
+    xh:   [B, S, H, P]    (head-split inputs)
+    dt:   [B, S, H]       (softplus'd step sizes)
+    bmat: [B, S, G, N]; cmat: [B, S, G, N]
+    Returns (y [B, S, H, P], final_state [B, H, P, N]).
+    """
+    b, s, h, p = xh.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    cs = min(m.chunk_size, s)
+    assert s % cs == 0
+    nc = s // cs
+    rep = h // g
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                    # [H] (neg)
+    dta = dt * a                                               # [B,S,H]
+    xdt = xh * dt[..., None].astype(xh.dtype)                  # dt-weighted x
+
+    def r(t):  # reshape to chunks
+        return t.reshape((b, nc, cs) + t.shape[2:])
+
+    xdt_c, dta_c = r(xdt), r(dta)
+    b_c = jnp.repeat(r(bmat), rep, axis=3)                     # [B,nc,cs,H,N]
+    c_c = jnp.repeat(r(cmat), rep, axis=3)
+
+    cum = jnp.cumsum(dta_c, axis=2)                            # [B,nc,cs,H]
+    # intra-chunk (lower-triangular) term
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]         # [B,nc,i,j,H]
+    mask = (jnp.arange(cs)[:, None] >= jnp.arange(cs)[None, :])
+    decay = jnp.where(mask[None, None, ..., None], jnp.exp(li), 0.0)
+    cb = jnp.einsum("bnihd,bnjhd->bnijh", c_c.astype(jnp.float32),
+                    b_c.astype(jnp.float32))                   # [B,nc,i,j,H]
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", cb * decay,
+                         xdt_c.astype(jnp.float32))
+
+    # chunk states: sum_j exp(cum_last - cum_j) * B_j (x) xdt_j
+    seg = jnp.exp(cum[:, :, -1:, :] - cum)                     # [B,nc,cs,H]
+    states = jnp.einsum("bnjh,bnjhd,bnjhp->bnhpd",
+                        seg, b_c.astype(jnp.float32),
+                        xdt_c.astype(jnp.float32))             # [B,nc,H,P,N]
+
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                    # [B,nc,H]
+
+    def scan_body(h_prev, inp):
+        st, dec = inp                                          # [B,H,P,N],[B,H]
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    h0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    hT, h_prevs = jax.lax.scan(
+        scan_body, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                 # [B,nc,H,P,N]
+
+    # inter-chunk contribution: C_i · (decay_to_i * h_prev)
+    y_inter = jnp.einsum("bnihd,bnih,bnhpd->bnihp",
+                         c_c.astype(jnp.float32), jnp.exp(cum), h_prevs)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    y = y + xh.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y.astype(xh.dtype), hT
+
+
+def mamba_block(p, x, cfg: ModelConfig, compute_dtype,
+                ssm_state=None, conv_cache=None, decode_pos=None):
+    """Full Mamba2 mixer. Train/prefill when decode_pos is None, else decode.
+
+    Returns (y [B,S,D], (new_ssm_state, new_conv_cache)).
+    """
+    m = cfg.mamba
+    d_inner, n_heads, conv_dim = mamba_dims(cfg)
+    b, s, _ = x.shape
+    zxbcdt = x.astype(compute_dtype) @ p["w_in"].astype(compute_dtype)
+    z, xi, bmat, cmat, dt = _split_proj(zxbcdt, cfg)
+
+    conv_in = jnp.concatenate([xi, bmat, cmat], axis=-1)
+    conv_out, new_conv = _conv1d(conv_in, p["conv_w"].astype(compute_dtype),
+                                 p["conv_b"].astype(compute_dtype),
+                                 cache=conv_cache)
+    xi = conv_out[..., :d_inner]
+    bmat = conv_out[..., d_inner:d_inner + m.n_groups * m.d_state]
+    cmat = conv_out[..., d_inner + m.n_groups * m.d_state:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    xh = xi.reshape(b, s, n_heads, m.head_dim)
+    bm = bmat.reshape(b, s, m.n_groups, m.d_state)
+    cm = cmat.reshape(b, s, m.n_groups, m.d_state)
+
+    if decode_pos is None:
+        y, hT = ssd_chunked(xh, dt, p["a_log"], bm, cm,
+                            p["d_skip"].astype(jnp.float32), m,
+                            init_state=ssm_state)
+    else:
+        # recurrent step (s == 1)
+        a = -jnp.exp(p["a_log"].astype(jnp.float32))
+        dta = jnp.exp(dt[:, 0] * a)                            # [B,H]
+        rep = n_heads // m.n_groups
+        bh = jnp.repeat(bm[:, 0], rep, axis=1)                 # [B,H,N]
+        ch = jnp.repeat(cm[:, 0], rep, axis=1)
+        hs = (ssm_state.astype(jnp.float32) if ssm_state is not None
+              else jnp.zeros((b, n_heads, m.head_dim, m.d_state)))
+        upd = (dt[:, 0, :, None, None] * xh[:, 0, :, :, None]
+               * bh[:, :, None, :].astype(jnp.float32))
+        hT = hs * dta[..., None, None] + upd
+        yv = jnp.einsum("bhpn,bhn->bhp", hT, ch.astype(jnp.float32))
+        yv = yv + (xh[:, 0].astype(jnp.float32)
+                   * p["d_skip"].astype(jnp.float32)[None, :, None])
+        y = yv[:, None].astype(compute_dtype)
+
+    y = y.reshape(b, s, d_inner)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)
+                                           ).astype(y.dtype), cfg.rms_eps)
+    out = y.astype(compute_dtype) @ p["w_out"].astype(compute_dtype)
+    return out, (hT, new_conv)

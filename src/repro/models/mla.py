@@ -1,0 +1,150 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV is compressed into a `kv_lora_rank` latent (plus a shared rope head); the
+KV cache stores only `[B, S, kv_lora + d_rope]` — the MLA memory win. The
+decode path uses the *absorbed* formulation: q_nope is pre-multiplied by
+W_uk so attention runs directly in latent space and the per-token cache
+cost is independent of the number of heads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models.layers import NEG_INF, apply_rope, rmsnorm, rmsnorm_def
+from repro.models.schema import PDef
+
+
+def mla_def(cfg: ModelConfig) -> dict:
+    m = cfg.mla
+    d = cfg.d_model
+    h = cfg.n_heads
+    scale = 0.02
+    q_in = m.q_lora_rank or d
+    p = {
+        "w_dkv": PDef((d, m.kv_lora_rank + m.d_head_rope), ("fsdp", None),
+                      scale=scale),
+        "kv_norm": rmsnorm_def(m.kv_lora_rank),
+        "w_uk": PDef((m.kv_lora_rank, h * m.d_head_nope), (None, "tp"),
+                     scale=scale),
+        "w_uv": PDef((m.kv_lora_rank, h * m.d_head_v), (None, "tp"),
+                     scale=scale),
+        "w_q": PDef((q_in, h * (m.d_head_nope + m.d_head_rope)),
+                    ("fsdp", "tp"), scale=scale),
+        "wo": PDef((h * m.d_head_v, d), ("tp", "fsdp"), scale=scale),
+    }
+    if m.q_lora_rank:
+        p["w_dq"] = PDef((d, m.q_lora_rank), ("fsdp", None), scale=scale)
+        p["q_norm"] = rmsnorm_def(m.q_lora_rank)
+    return p
+
+
+def _project_q(p, x, cfg: ModelConfig, compute_dtype):
+    m = cfg.mla
+    if m.q_lora_rank:
+        cq = x @ p["w_dq"].astype(compute_dtype)
+        cq = rmsnorm(p["q_norm"], cq, cfg.rms_eps)
+        q = cq @ p["w_q"].astype(compute_dtype)
+    else:
+        q = x @ p["w_q"].astype(compute_dtype)
+    b, s, _ = x.shape
+    q = q.reshape(b, s, cfg.n_heads, m.d_head_nope + m.d_head_rope)
+    return q[..., : m.d_head_nope], q[..., m.d_head_nope:]
+
+
+def mla_latent(p, x, cfg: ModelConfig, positions, compute_dtype):
+    """Compress x -> (normalized latent [B,S,R], rotated rope key [B,S,Dr])."""
+    m = cfg.mla
+    ckv = x @ p["w_dkv"].astype(compute_dtype)
+    c, k_rope = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
+    c = rmsnorm(p["kv_norm"], c, cfg.rms_eps)
+    k_rope = apply_rope(k_rope[..., None, :], positions,
+                        cfg.rope_theta)[..., 0, :]
+    return c, k_rope
+
+
+def mla_attention(p, x, cfg: ModelConfig, *, q_offset: int = 0,
+                  q_chunk: int = 512, compute_dtype=jnp.bfloat16):
+    """Training/prefill path (non-absorbed: materializes per-head k/v)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    x = x.astype(compute_dtype)
+    positions = q_offset + jnp.arange(s)
+    c, k_rope = mla_latent(p, x, cfg, positions, compute_dtype)
+    k_nope = (c @ p["w_uk"].astype(compute_dtype)).reshape(
+        b, s, h, m.d_head_nope)
+    v = (c @ p["w_uv"].astype(compute_dtype)).reshape(b, s, h, m.d_head_v)
+    q_nope, q_rope = _project_q(p, x, cfg, compute_dtype)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    scale = (m.d_head_nope + m.d_head_rope) ** -0.5
+    nq = max(1, s // q_chunk) if s > q_chunk else 1
+    assert s % nq == 0
+    cs = s // nq
+
+    def chunk(i):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, i * cs, cs, axis=1)
+        qn, qr = sl(q_nope), sl(q_rope)
+        logits = (jnp.einsum("bqhd,bkhd->bhqk", qn, k_nope,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bqhd,bkd->bhqk", qr, k_rope,
+                               preferred_element_type=jnp.float32)) * scale
+        qpos = q_offset + i * cs + jnp.arange(cs)
+        mask = jnp.arange(s)[None, :] <= qpos[:, None]
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(compute_dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+    if nq == 1:
+        out = chunk(0)
+    else:
+        _, outs = jax.lax.scan(lambda _, i: (None, chunk(i)), None,
+                               jnp.arange(nq))
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, m.d_head_v)
+    return out.reshape(b, s, h * m.d_head_v) @ p["wo"].astype(compute_dtype)
+
+
+def mla_decode(p, x, cache_c, cache_kr, pos, cfg: ModelConfig,
+               compute_dtype=jnp.bfloat16):
+    """Absorbed decode. x: [B,1,D]; cache_c: [B,S,R]; cache_kr: [B,S,Dr].
+
+    Returns (out [B,1,D], new_cache_c, new_cache_kr).
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    x = x.astype(compute_dtype)
+    positions = jnp.full((1,), pos)
+    c_new, kr_new = mla_latent(p, x, cfg, positions, compute_dtype)
+    cache_c = jax.lax.dynamic_update_slice_in_dim(
+        cache_c, c_new.astype(cache_c.dtype), pos, axis=1)
+    cache_kr = jax.lax.dynamic_update_slice_in_dim(
+        cache_kr, kr_new.astype(cache_kr.dtype), pos, axis=1)
+
+    q_nope, q_rope = _project_q(p, x, cfg, compute_dtype)      # [B,1,H,*]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    # absorb W_uk: q_lat[h] = q_nope[h] @ W_uk[h].T  -> attention in latent
+    w_uk = p["w_uk"].astype(compute_dtype).reshape(
+        m.kv_lora_rank, h, m.d_head_nope)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)         # [B,1,H,R]
+
+    s = cache_c.shape[1]
+    scale = (m.d_head_nope + m.d_head_rope) ** -0.5
+    logits = (jnp.einsum("bqhr,bkr->bhqk", q_lat,
+                         cache_c.astype(compute_dtype),
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope,
+                           cache_kr.astype(compute_dtype),
+                           preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(s)[None, :] <= positions[:, None]
+    logits = jnp.where(valid[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(compute_dtype)
+    o_lat = jnp.einsum("bhqk,bkr->bqhr", probs,
+                       cache_c.astype(compute_dtype))          # [B,1,H,R]
+    w_uv = p["w_uv"].astype(compute_dtype).reshape(
+        m.kv_lora_rank, h, m.d_head_v)
+    o = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_uv)
+    out = o.reshape(b, 1, h * m.d_head_v) @ p["wo"].astype(compute_dtype)
+    return out, cache_c, cache_kr

@@ -1,0 +1,684 @@
+"""Assembled model families.
+
+One `Model` class covers all 10 assigned architectures through a
+period-layout abstraction: each architecture is a repeating period of
+sub-layers (attention / MLA / Mamba / gated cross-attention mixers, dense /
+MoE FFNs), scanned over `n_periods` with stacked parameters. Train, prefill
+and decode all share the same sub-layer application code; caches mirror the
+block structure (KV, ring-buffer local KV, MLA latent, SSM state, conv
+state, static cross-attention KV).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models.schema import PDef, init_from_schema, shapes_from_schema, \
+    specs_from_schema
+
+
+@dataclass(frozen=True)
+class SubLayer:
+    mixer: str            # attn | mla | mamba | cross | none
+    ffn: str              # dense | moe | none
+    window: int = 0       # sliding window for attn (0 = global)
+    causal: bool = True
+
+
+# ---------------------------------------------------------------------------
+# Period layout per family
+# ---------------------------------------------------------------------------
+
+
+def period_layout(cfg: ModelConfig) -> Tuple[List[SubLayer], int]:
+    """Returns (sub-layers of one period, n_periods) for the scanned stack."""
+    if cfg.family == "ssm":
+        return [SubLayer("mamba", "none")], cfg.n_layers
+    if cfg.family == "hybrid":
+        per = []
+        for j in range(cfg.hybrid_period):
+            mixer = "attn" if j == cfg.hybrid_attn_index else "mamba"
+            ffn = "moe" if (cfg.moe and j % cfg.moe.interval == cfg.moe.offset
+                            % cfg.moe.interval) else "dense"
+            per.append(SubLayer(mixer, ffn))
+        return per, cfg.n_layers // cfg.hybrid_period
+    if cfg.family == "vlm":
+        n = cfg.cross_attn_interval
+        per = [SubLayer("attn", "dense") for _ in range(n - 1)]
+        per.append(SubLayer("cross", "dense"))
+        return per, cfg.n_layers // n
+    if cfg.family == "moe" and cfg.mla is not None:
+        # deepseek: layer 0 (dense FFN) handled separately as 'first'
+        return [SubLayer("mla", "moe")], cfg.n_layers - 1
+    if cfg.family == "moe":
+        return [SubLayer("attn", "moe")], cfg.n_layers
+    if cfg.local_global_pattern:
+        return [SubLayer("attn", "dense", window=cfg.sliding_window),
+                SubLayer("attn", "dense", window=0)], cfg.n_layers // 2
+    # plain dense (also whisper decoder handled elsewhere)
+    return [SubLayer("attn", "dense")], cfg.n_layers
+
+
+def _stack(schema, n: int):
+    return jax.tree_util.tree_map(
+        lambda p: PDef((n,) + p.shape, (None,) + p.spec, p.init, p.scale,
+                       p.dtype),
+        schema, is_leaf=lambda x: isinstance(x, PDef))
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, moe_impl: str = "gather"):
+        if cfg.pad_heads_to_tp and cfg.n_heads:
+            # TP head padding (Megatron-style): round head counts up to a
+            # multiple of the tensor-parallel degree so attention shards
+            # instead of replicating (minicpm's 36 heads, whisper's 6).
+            m = cfg.pad_heads_to_tp
+            rnd = lambda x: -(-x // m) * m if x else x
+            cfg = cfg.replace(n_heads=rnd(cfg.n_heads),
+                              n_kv_heads=rnd(cfg.n_kv_heads))
+        self.cfg = cfg
+        self.moe_impl = moe_impl
+        self.compute_dtype = jnp.dtype(cfg.compute_dtype)
+        if cfg.family != "encdec":
+            self.layout, self.n_periods = period_layout(cfg)
+
+    # ------------------------------------------------------------- schema
+
+    def _sublayer_schema(self, sl: SubLayer) -> dict:
+        cfg = self.cfg
+        d, hd = cfg.d_model, cfg.resolved_head_dim
+        scale = 0.02
+        sub: Dict[str, Any] = {"pre_norm": L.rmsnorm_def(d)}
+        if sl.mixer == "attn":
+            sub["attn"] = L.attn_def(d, cfg.n_heads, cfg.n_kv_heads, hd,
+                                     scale)
+        elif sl.mixer == "mla":
+            sub["attn"] = MLA.mla_def(cfg)
+        elif sl.mixer == "mamba":
+            sub["mixer"] = M.mamba_def(cfg)
+        elif sl.mixer == "cross":
+            sub["attn"] = L.attn_def(d, cfg.n_heads, cfg.n_kv_heads, hd,
+                                     scale, kv_input_dim=d)
+            sub["gate_attn"] = PDef((), (), init="zeros")
+            sub["gate_ffn"] = PDef((), (), init="zeros")
+        if cfg.sandwich_norms and sl.mixer != "none":
+            sub["post_mixer_norm"] = L.rmsnorm_def(d)
+        if sl.ffn == "dense":
+            sub["ffn_norm"] = L.rmsnorm_def(d)
+            sub["ffn"] = L.mlp_def(d, cfg.d_ff, cfg.mlp_variant, scale)
+        elif sl.ffn == "moe":
+            sub["ffn_norm"] = L.rmsnorm_def(d)
+            sub["ffn"] = MOE.moe_def(cfg)
+        if cfg.sandwich_norms and sl.ffn != "none":
+            sub["post_ffn_norm"] = L.rmsnorm_def(d)
+        return sub
+
+    def schema(self) -> dict:
+        cfg = self.cfg
+        d = cfg.d_model
+        # Embedding: vocab on tp, d replicated. Probed as the cheapest
+        # lookup sharding (experiments/embed_probe); for tied embeddings the
+        # logits matmul is then collective-free with V-sharded outputs.
+        sc: Dict[str, Any] = {
+            "embed": PDef((cfg.vocab_size, d), ("tp", None), scale=0.02),
+            "final_norm": L.rmsnorm_def(d),
+        }
+        if not cfg.tie_embeddings:
+            sc["lm_head"] = PDef((d, cfg.vocab_size), (None, "tp"),
+                                 scale=0.02)
+        if cfg.family == "encdec":
+            enc = {"pre_norm": L.rmsnorm_def(d),
+                   "attn": L.attn_def(d, cfg.n_heads, cfg.n_kv_heads,
+                                      cfg.resolved_head_dim, 0.02),
+                   "ffn_norm": L.rmsnorm_def(d),
+                   "ffn": L.mlp_def(d, cfg.d_ff, cfg.mlp_variant, 0.02)}
+            dec = {"pre_norm": L.rmsnorm_def(d),
+                   "attn": L.attn_def(d, cfg.n_heads, cfg.n_kv_heads,
+                                      cfg.resolved_head_dim, 0.02),
+                   "cross_norm": L.rmsnorm_def(d),
+                   "cross": L.attn_def(d, cfg.n_heads, cfg.n_kv_heads,
+                                       cfg.resolved_head_dim, 0.02),
+                   "ffn_norm": L.rmsnorm_def(d),
+                   "ffn": L.mlp_def(d, cfg.d_ff, cfg.mlp_variant, 0.02)}
+            sc["enc_blocks"] = _stack(enc, cfg.n_encoder_layers)
+            sc["enc_final_norm"] = L.rmsnorm_def(d)
+            sc["dec_blocks"] = _stack(dec, cfg.n_layers)
+            return sc
+        period = {f"sub{j}": self._sublayer_schema(sl)
+                  for j, sl in enumerate(self.layout)}
+        sc["blocks"] = _stack(period, self.n_periods)
+        if cfg.mla is not None:   # deepseek first dense layer
+            first = {"pre_norm": L.rmsnorm_def(d),
+                     "attn": MLA.mla_def(cfg),
+                     "ffn_norm": L.rmsnorm_def(d),
+                     "ffn": L.mlp_def(d, cfg.d_ff, cfg.mlp_variant, 0.02)}
+            sc["first"] = first
+        return sc
+
+    def init(self, key) -> dict:
+        return init_from_schema(self.schema(), key)
+
+    def param_shapes(self):
+        return shapes_from_schema(self.schema())
+
+    def logical_specs(self):
+        return specs_from_schema(self.schema())
+
+    # --------------------------------------------------------- sub-layers
+
+    def _apply_mixer(self, sl: SubLayer, p, x, *, mode, cache, pos, ctx):
+        """Returns (mixer_out, new_cache)."""
+        cfg = self.cfg
+        cd = self.compute_dtype
+        hd = cfg.resolved_head_dim
+        if sl.mixer == "mamba":
+            if mode == "decode":
+                ssm, conv = cache
+                out, (ssm, conv) = M.mamba_block(
+                    p["mixer"], x, cfg, cd, ssm_state=ssm, conv_cache=conv,
+                    decode_pos=pos)
+                return out, (ssm, conv)
+            out, (ssm, conv) = M.mamba_block(p["mixer"], x, cfg, cd)
+            return out, (ssm, conv)
+
+        if sl.mixer == "mla":
+            if mode == "decode":
+                c_cache, kr_cache = cache
+                out, c_cache, kr_cache = MLA.mla_decode(
+                    p["attn"], x, c_cache, kr_cache, pos, cfg, cd)
+                return out, (c_cache, kr_cache)
+            out = MLA.mla_attention(p["attn"], x, cfg,
+                                    q_chunk=cfg.attn_q_chunk,
+                                    compute_dtype=cd)
+            if mode == "prefill":
+                s = x.shape[1]
+                positions = jnp.arange(s)
+                c, kr = MLA.mla_latent(p["attn"], x.astype(cd), cfg,
+                                       positions, cd)
+                pad = (ctx or {}).get("max_len") or s
+                c = _pad_seq(c, pad)
+                kr = _pad_seq(kr, pad)
+                return out, (c, kr)
+            return out, None
+
+        if sl.mixer == "cross":
+            kv_x = ctx["patches"] if "patches" in ctx else ctx["enc"]
+            if mode == "decode":
+                k, v = cache
+                out = self._attn_with_cache(p["attn"], x, k, v, pos,
+                                            causal=False, window=0,
+                                            rope=False)
+                return out, (k, v)
+            out = L.gqa_attention(
+                p["attn"], x, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=hd, rope_theta=0.0, causal=False,
+                q_chunk=cfg.attn_q_chunk, compute_dtype=cd, kv_x=kv_x,
+                use_rope=False)
+            if mode == "prefill":
+                k, v = self._project_kv(p["attn"], kv_x, rope=False)
+                return out, (k, v)
+            return out, None
+
+        # plain / local attention
+        if mode == "decode":
+            k_cache, v_cache = cache
+            k_new, v_new = self._project_kv(p["attn"], x, rope=True, pos=pos,
+                                            window=sl.window)
+            slot = pos % k_cache.shape[1] if sl.window else pos
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                k_cache, k_new.astype(k_cache.dtype), slot, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                v_cache, v_new.astype(v_cache.dtype), slot, axis=1)
+            out = self._attn_with_cache(p["attn"], x, k_cache, v_cache, pos,
+                                        causal=True, window=sl.window,
+                                        rope=True)
+            return out, (k_cache, v_cache)
+
+        out = L.gqa_attention(
+            p["attn"], x, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=hd, rope_theta=cfg.rope_theta, causal=sl.causal,
+            window=sl.window, softcap=cfg.attn_softcap,
+            q_scale=cfg.query_scale, q_chunk=cfg.attn_q_chunk,
+            compute_dtype=cd)
+        if mode == "prefill":
+            k, v = self._project_kv(p["attn"], x, rope=True)
+            s = k.shape[1]
+            pad = (ctx or {}).get("max_len") or s
+            if sl.window:
+                w = min(sl.window, pad)
+                if s >= w:
+                    k = jnp.roll(k[:, -w:], s % w, axis=1)
+                    v = jnp.roll(v[:, -w:], s % w, axis=1)
+                else:
+                    k, v = _pad_seq(k, w), _pad_seq(v, w)
+            else:
+                k, v = _pad_seq(k, pad), _pad_seq(v, pad)
+            return out, (k, v)
+        return out, None
+
+    def _project_kv(self, p, x, *, rope, pos=None, window=0):
+        cfg = self.cfg
+        cd = self.compute_dtype
+        hd = cfg.resolved_head_dim
+        b, s, _ = x.shape
+        xc = x.astype(cd)
+        k = (xc @ p["wk"].astype(cd)).reshape(b, s, cfg.n_kv_heads, hd)
+        v = (xc @ p["wv"].astype(cd)).reshape(b, s, cfg.n_kv_heads, hd)
+        if rope and cfg.rope_theta > 0:
+            positions = (jnp.arange(s) if pos is None
+                         else pos + jnp.arange(s))
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+        return k, v
+
+    def _attn_with_cache(self, p, x, k_cache, v_cache, pos, *, causal,
+                         window, rope):
+        cfg = self.cfg
+        cd = self.compute_dtype
+        hd = cfg.resolved_head_dim
+        b, s, _ = x.shape
+        q = (x.astype(cd) @ p["wq"].astype(cd)).reshape(
+            b, s, cfg.n_heads, hd)
+        if rope and cfg.rope_theta > 0:
+            q = L.apply_rope(q, pos + jnp.arange(s), cfg.rope_theta)
+        sk = k_cache.shape[1]
+        if not causal:
+            # static cross-attention cache (encoder output / patch embeds):
+            # every entry is valid regardless of the decode position
+            kv_positions = jnp.arange(sk)
+            kv_valid = jnp.ones((sk,), bool)
+        elif window and window <= sk:
+            # ring buffer: slot i holds largest q<=pos with q = i (mod W)
+            idx = jnp.arange(sk)
+            kv_positions = pos - jnp.mod(pos - idx, sk)
+            kv_valid = kv_positions >= 0
+        else:
+            kv_positions = jnp.arange(sk)
+            kv_valid = kv_positions <= pos
+        out = L.chunked_attention(
+            q, k_cache.astype(cd), v_cache.astype(cd), q_offset=pos,
+            kv_positions=kv_positions, kv_valid=kv_valid, causal=causal,
+            window=window, softcap=cfg.attn_softcap,
+            q_scale=cfg.query_scale, q_chunk=cfg.attn_q_chunk,
+            compute_dtype=cd)
+        return out.reshape(b, s, cfg.n_heads * hd) @ p["wo"].astype(cd)
+
+    def _barrier(self, t):
+        """bf16_psum: stop XLA from hoisting the f32 convert (for the
+        following rmsnorm/residual) above the tensor-parallel all-reduce
+        of this sublayer output — keeps activation/grad ARs in bf16."""
+        if self.cfg.bf16_psum:
+            return jax.lax.optimization_barrier(t)
+        return t
+
+    def _apply_sublayer(self, sl: SubLayer, p, x, *, mode, cache, pos, ctx):
+        cfg = self.cfg
+        cd = self.compute_dtype
+        aux = jnp.zeros((), jnp.float32)
+        h = L.rmsnorm(p["pre_norm"], x, cfg.rms_eps)
+        mix, new_cache = self._apply_mixer(sl, p, h, mode=mode, cache=cache,
+                                           pos=pos, ctx=ctx)
+        mix = self._barrier(mix)
+        if cfg.sandwich_norms:
+            mix = L.rmsnorm(p["post_mixer_norm"], mix, cfg.rms_eps)
+        if sl.mixer == "cross":
+            mix = jnp.tanh(p["gate_attn"].astype(jnp.float32)).astype(
+                mix.dtype) * mix
+        x = x + cfg.residual_scale * mix
+        if sl.ffn != "none":
+            h = L.rmsnorm(p["ffn_norm"], x, cfg.rms_eps)
+            if sl.ffn == "moe":
+                y, aux = MOE.moe_block(p["ffn"], h, cfg, cd,
+                                       impl=self.moe_impl)
+            else:
+                y = L.mlp(p["ffn"], h, cfg.mlp_variant, cd)
+            y = self._barrier(y)
+            if cfg.sandwich_norms:
+                y = L.rmsnorm(p["post_ffn_norm"], y, cfg.rms_eps)
+            if sl.mixer == "cross":
+                y = jnp.tanh(p["gate_ffn"].astype(jnp.float32)).astype(
+                    y.dtype) * y
+            x = x + cfg.residual_scale * y
+        return x, new_cache, aux
+
+    # ------------------------------------------------------------ drivers
+
+    def _run_stack(self, params, x, *, mode, caches=None, pos=None,
+                   ctx=None):
+        """Scan the period stack. Returns (x, new_caches, aux_sum)."""
+        cfg = self.cfg
+        ctx = ctx or {}
+
+        def body(carry, xs):
+            xc, aux_sum = carry
+            if mode == "decode":
+                bp, cslices = xs
+            else:
+                bp = xs
+                cslices = {f"sub{j}": None for j in range(len(self.layout))}
+            new_cs = {}
+            for j, sl in enumerate(self.layout):
+                xc, nc, aux = self._apply_sublayer(
+                    sl, bp[f"sub{j}"], xc, mode=mode,
+                    cache=cslices.get(f"sub{j}"), pos=pos, ctx=ctx)
+                if nc is not None:
+                    new_cs[f"sub{j}"] = nc
+                aux_sum = aux_sum + aux
+            return (xc, aux_sum), new_cs
+
+        if cfg.remat != "none" and mode == "train":
+            body = jax.checkpoint(body, prevent_cse=False)
+
+        xs = (params["blocks"], caches) if mode == "decode" else \
+            params["blocks"]
+        (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                            xs)
+        return x, new_caches, aux
+
+    # -------------------------------------------------------- embeddings
+
+    def _embed(self, params, tokens):
+        cfg = self.cfg
+        from repro.sharding.policy import activation_constraint
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = activation_constraint(x, ("dp", None, None))
+        x = x.astype(self.compute_dtype) * jnp.asarray(
+            cfg.emb_scale, self.compute_dtype)
+        return x
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        cd = self.compute_dtype
+        x = L.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = x.astype(cd) @ head.astype(cd)
+        logits = logits.astype(jnp.float32) * cfg.logit_mult
+        if cfg.final_softcap > 0:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        return logits
+
+    # -------------------------------------------------------------- loss
+
+    def loss(self, params, batch):
+        """batch: tokens [B,S] (+ frames/patches). Returns (loss, metrics)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        ctx = {}
+        if cfg.family == "vlm":
+            ctx["patches"] = batch["patches"]
+        if cfg.family == "encdec":
+            return self._encdec_loss(params, batch)
+        x = self._embed(params, tokens)
+        if cfg.mla is not None:
+            x, _, _ = self._apply_first(params, x, mode="train", cache=None,
+                                        pos=None)
+        x, _, aux = self._run_stack(params, x, mode="train", ctx=ctx)
+        logits = self._logits(params, x)
+        loss = _causal_ce(logits, tokens)
+        total = loss + (cfg.moe.router_aux_coef * aux if cfg.moe else 0.0)
+        return total, {"ce": loss, "aux": aux}
+
+    def _apply_first(self, params, x, *, mode, cache, pos, ctx=None):
+        """deepseek layer 0 (MLA + dense FFN), outside the scan."""
+        sl = SubLayer("mla", "dense")
+        return self._apply_sublayer(sl, params["first"], x, mode=mode,
+                                    cache=cache, pos=pos, ctx=ctx or {})
+
+    def _encdec_loss(self, params, batch):
+        cfg = self.cfg
+        frames, tokens = batch["frames"], batch["tokens"]
+        enc = self._encode(params, frames)
+        x = self._embed(params, tokens)
+        x = x + L.sinusoidal_positions(tokens.shape[1], cfg.d_model).astype(
+            x.dtype)
+        x, _, _ = self._run_encdec_stack(params, x, enc, mode="train")
+        logits = self._logits(params, x)
+        return _causal_ce(logits, tokens), {"ce": _causal_ce(logits, tokens),
+                                            "aux": jnp.zeros((), jnp.float32)}
+
+    def _encode(self, params, frames):
+        cfg = self.cfg
+        cd = self.compute_dtype
+        x = frames.astype(cd) + L.sinusoidal_positions(
+            frames.shape[1], cfg.d_model).astype(cd)
+
+        def body(xc, bp):
+            h = L.rmsnorm(bp["pre_norm"], xc, cfg.rms_eps)
+            h = L.gqa_attention(bp["attn"], h, n_heads=cfg.n_heads,
+                                n_kv=cfg.n_kv_heads,
+                                head_dim=cfg.resolved_head_dim,
+                                rope_theta=0.0, causal=False,
+                                q_chunk=cfg.attn_q_chunk, compute_dtype=cd,
+                                use_rope=False)
+            xc = xc + h
+            h = L.rmsnorm(bp["ffn_norm"], xc, cfg.rms_eps)
+            xc = xc + L.mlp(bp["ffn"], h, cfg.mlp_variant, cd)
+            return xc, None
+
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        return L.rmsnorm(params["enc_final_norm"], x, cfg.rms_eps)
+
+    def _run_encdec_stack(self, params, x, enc, *, mode, caches=None,
+                          pos=None, max_len=None):
+        cfg = self.cfg
+        cd = self.compute_dtype
+        hd = cfg.resolved_head_dim
+        pad = max_len or x.shape[1]
+
+        def body(carry, xs):
+            xc = carry
+            if mode == "decode":
+                bp, cache = xs
+            else:
+                bp = xs
+                cache = None
+            new_cache = {}
+            # self attention
+            h = L.rmsnorm(bp["pre_norm"], xc, cfg.rms_eps)
+            if mode == "decode":
+                k_cache, v_cache = cache["self"]
+                k_new, v_new = self._project_kv(bp["attn"], h, rope=False)
+                k_cache = jax.lax.dynamic_update_slice_in_dim(
+                    k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
+                v_cache = jax.lax.dynamic_update_slice_in_dim(
+                    v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+                a = self._attn_with_cache(bp["attn"], h, k_cache, v_cache,
+                                          pos, causal=True, window=0,
+                                          rope=False)
+                new_cache["self"] = (k_cache, v_cache)
+            else:
+                a = L.gqa_attention(bp["attn"], h, n_heads=cfg.n_heads,
+                                    n_kv=cfg.n_kv_heads, head_dim=hd,
+                                    rope_theta=0.0, causal=True,
+                                    q_chunk=cfg.attn_q_chunk,
+                                    compute_dtype=cd, use_rope=False)
+                if mode == "prefill":
+                    k, v = self._project_kv(bp["attn"], h, rope=False)
+                    new_cache["self"] = (_pad_seq(k, pad), _pad_seq(v, pad))
+            xc = xc + a
+            # cross attention
+            h = L.rmsnorm(bp["cross_norm"], xc, cfg.rms_eps)
+            if mode == "decode":
+                ck, cv = cache["cross"]
+                a = self._attn_with_cache(bp["cross"], h, ck, cv, pos,
+                                          causal=False, window=0, rope=False)
+                new_cache["cross"] = (ck, cv)
+            else:
+                a = L.gqa_attention(bp["cross"], h, n_heads=cfg.n_heads,
+                                    n_kv=cfg.n_kv_heads, head_dim=hd,
+                                    rope_theta=0.0, causal=False,
+                                    q_chunk=cfg.attn_q_chunk,
+                                    compute_dtype=cd, kv_x=enc,
+                                    use_rope=False)
+                if mode == "prefill":
+                    new_cache["cross"] = self._project_kv(bp["cross"], enc,
+                                                          rope=False)
+            xc = xc + a
+            h = L.rmsnorm(bp["ffn_norm"], xc, cfg.rms_eps)
+            xc = xc + L.mlp(bp["ffn"], h, cfg.mlp_variant, cd)
+            return xc, new_cache
+
+        if cfg.remat != "none" and mode == "train":
+            body = jax.checkpoint(body, prevent_cse=False)
+        xs = ((params["dec_blocks"], caches) if mode == "decode"
+              else params["dec_blocks"])
+        x, new_caches = jax.lax.scan(body, x, xs)
+        return x, new_caches, jnp.zeros((), jnp.float32)
+
+    # ----------------------------------------------------------- serving
+
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        """Full-sequence forward building a decode cache.
+
+        `max_len` (>= prompt length) pre-sizes the KV caches for decode.
+        Returns (last-token logits [B, V], caches).
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        ctx = {"max_len": max_len or tokens.shape[1]}
+        if cfg.family == "vlm":
+            ctx["patches"] = batch["patches"]
+        if cfg.family == "encdec":
+            enc = self._encode(params, batch["frames"])
+            x = self._embed(params, tokens)
+            x = x + L.sinusoidal_positions(
+                tokens.shape[1], cfg.d_model).astype(x.dtype)
+            x, caches, _ = self._run_encdec_stack(
+                params, x, enc, mode="prefill", max_len=ctx["max_len"])
+            logits = self._logits(params, x[:, -1:])
+            return logits[:, 0], caches
+        x = self._embed(params, tokens)
+        caches = {}
+        if cfg.mla is not None:
+            x, first_cache, _ = self._apply_first(params, x, mode="prefill",
+                                                  cache=None, pos=None,
+                                                  ctx=ctx)
+            caches["first"] = first_cache
+        x, stack_caches, _ = self._run_stack(params, x, mode="prefill",
+                                             ctx=ctx)
+        caches["blocks"] = stack_caches
+        logits = self._logits(params, x[:, -1:])
+        return logits[:, 0], caches
+
+    def decode_step(self, params, caches, token, pos, ctx_batch=None):
+        """One decode step. token: [B, 1]; pos: scalar int32.
+
+        Returns (logits [B, V], new caches).
+        """
+        cfg = self.cfg
+        ctx = {}
+        if cfg.family == "vlm":
+            ctx["patches"] = (ctx_batch or {}).get("patches")
+        x = self._embed(params, token)
+        if cfg.family == "encdec":
+            x = x + _sinusoidal_at(pos, cfg.d_model).astype(x.dtype)
+            x, new_caches, _ = self._run_encdec_stack(
+                params, x, None, mode="decode", caches=caches, pos=pos)
+            return self._logits(params, x)[:, 0], new_caches
+        new_caches = {}
+        if cfg.mla is not None:
+            x, fc, _ = self._apply_first(params, x, mode="decode",
+                                         cache=caches["first"], pos=pos)
+            new_caches["first"] = fc
+        x, sc, _ = self._run_stack(params, x, mode="decode",
+                                   caches=caches["blocks"], pos=pos, ctx=ctx)
+        new_caches["blocks"] = sc
+        return self._logits(params, x)[:, 0], new_caches
+
+    # ------------------------------------------------------------- cache
+
+    def init_cache(self, batch_size: int, max_len: int):
+        """Zeroed cache pytree for decode (shapes only used via eval_shape)."""
+        cfg = self.cfg
+        cd = self.compute_dtype
+        hd = cfg.resolved_head_dim
+
+        def attn_cache(window):
+            slen = min(window, max_len) if window else max_len
+            shape = (self.n_periods, batch_size, slen, cfg.n_kv_heads, hd)
+            return (jnp.zeros(shape, cd), jnp.zeros(shape, cd))
+
+        if cfg.family == "encdec":
+            n = cfg.n_layers
+            kv = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, hd)
+            ckv = (cfg.n_layers, batch_size, cfg.encoder_seq,
+                   cfg.n_kv_heads, hd)
+            return {"self": (jnp.zeros(kv, cd), jnp.zeros(kv, cd)),
+                    "cross": (jnp.zeros(ckv, cd), jnp.zeros(ckv, cd))}
+
+        caches: Dict[str, Any] = {}
+        blocks: Dict[str, Any] = {}
+        for j, sl in enumerate(self.layout):
+            if sl.mixer == "attn":
+                blocks[f"sub{j}"] = attn_cache(sl.window)
+            elif sl.mixer == "mla":
+                m = cfg.mla
+                blocks[f"sub{j}"] = (
+                    jnp.zeros((self.n_periods, batch_size, max_len,
+                               m.kv_lora_rank), cd),
+                    jnp.zeros((self.n_periods, batch_size, max_len,
+                               m.d_head_rope), cd))
+            elif sl.mixer == "mamba":
+                d_inner, n_heads, conv_dim = M.mamba_dims(cfg)
+                blocks[f"sub{j}"] = (
+                    jnp.zeros((self.n_periods, batch_size, n_heads,
+                               cfg.mamba.head_dim, cfg.mamba.d_state),
+                              jnp.float32),
+                    jnp.zeros((self.n_periods, batch_size,
+                               cfg.mamba.d_conv - 1, conv_dim), cd))
+            elif sl.mixer == "cross":
+                shape = (self.n_periods, batch_size, cfg.num_patches,
+                         cfg.n_kv_heads, hd)
+                blocks[f"sub{j}"] = (jnp.zeros(shape, cd),
+                                     jnp.zeros(shape, cd))
+        caches["blocks"] = blocks
+        if cfg.mla is not None:
+            m = cfg.mla
+            caches["first"] = (
+                jnp.zeros((batch_size, max_len, m.kv_lora_rank), cd),
+                jnp.zeros((batch_size, max_len, m.d_head_rope), cd))
+        return caches
+
+
+def _pad_seq(t, target: int):
+    """Zero-pad dim 1 (sequence) of t up to `target`."""
+    s = t.shape[1]
+    if s >= target:
+        return t
+    z = jnp.zeros((t.shape[0], target - s) + t.shape[2:], t.dtype)
+    return jnp.concatenate([t, z], axis=1)
+
+
+def _sinusoidal_at(pos, d):
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32)
+                  * (-jnp.log(10000.0) / d))
+    ang = pos.astype(jnp.float32) * div
+    pe = jnp.zeros((d,), jnp.float32)
+    pe = pe.at[0::2].set(jnp.sin(ang))
+    pe = pe.at[1::2].set(jnp.cos(ang))
+    return pe[None, None, :]
+
+
+def _causal_ce(logits, tokens):
+    """Shard-friendly causal cross-entropy (one-hot einsum, no gather)."""
+    v = logits.shape[-1]
+    pred = logits[:, :-1].astype(jnp.float32)
+    tgt = tokens[:, 1:]
+    lse = jax.nn.logsumexp(pred, axis=-1)
+    onehot = jax.nn.one_hot(tgt, v, dtype=jnp.float32)
+    picked = jnp.sum(pred * onehot, axis=-1)
+    return jnp.mean(lse - picked)

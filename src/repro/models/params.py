@@ -1,0 +1,46 @@
+"""Analytic parameter counting (total vs active) from the schema."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models.schema import PDef, _path_str
+
+
+def count_params(cfg: ModelConfig) -> Tuple[int, int]:
+    """(total, active). Active scales routed-expert tensors by top_k/E."""
+    from repro.models.model import Model
+    schema = Model(cfg).schema()
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        schema, is_leaf=lambda x: isinstance(x, PDef))
+    total = 0
+    active = 0.0
+    frac = (cfg.moe.top_k / cfg.moe.num_experts) if cfg.moe else 1.0
+    for path, pdef in flat:
+        n = int(np.prod(pdef.shape)) if pdef.shape else 1
+        total += n
+        p = _path_str(path)
+        active += n * (frac if "experts" in p else 1.0)
+    return total, int(active)
+
+
+def non_embedding_params(cfg: ModelConfig) -> Tuple[int, int]:
+    """(total, active) excluding the token embedding table (lm_head kept)."""
+    from repro.models.model import Model
+    schema = Model(cfg).schema()
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        schema, is_leaf=lambda x: isinstance(x, PDef))
+    total = 0
+    active = 0.0
+    frac = (cfg.moe.top_k / cfg.moe.num_experts) if cfg.moe else 1.0
+    for path, pdef in flat:
+        p = _path_str(path)
+        if p == "embed":
+            continue
+        n = int(np.prod(pdef.shape)) if pdef.shape else 1
+        total += n
+        active += n * (frac if "experts" in p else 1.0)
+    return total, int(active)

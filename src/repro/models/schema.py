@@ -1,0 +1,85 @@
+"""Declarative parameter schema.
+
+A model's parameters are described once as a pytree of `PDef`s; from it we
+derive (a) materialized params (seeded, per-leaf independent keys), (b)
+`jax.ShapeDtypeStruct` trees for dry-runs, and (c) logical sharding specs
+(resolved against a concrete mesh by `repro.sharding.policy`).
+
+Logical axis names used in specs:
+  'fsdp'   -> data(-and-pod) axes          (ZeRO-style parameter sharding)
+  'tp'     -> model axis                   (tensor parallel)
+  'ep'     -> model axis                   (expert parallel)
+  None     -> replicated dimension
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PDef(NamedTuple):
+    shape: Tuple[int, ...]
+    spec: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones
+    scale: float = 0.02
+    dtype: str = "float32"
+
+    def sds(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, jnp.dtype(self.dtype))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _leaf_key(root: jax.Array, path: str) -> jax.Array:
+    digest = hashlib.sha256(path.encode()).digest()
+    fold = int.from_bytes(digest[:4], "little")
+    return jax.random.fold_in(root, fold)
+
+
+def init_from_schema(schema, key: jax.Array):
+    """Materialize parameters from a schema tree (deterministic per path)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        schema, is_leaf=lambda x: isinstance(x, PDef))
+    leaves = []
+    for path, pdef in flat:
+        k = _leaf_key(key, _path_str(path))
+        dt = jnp.dtype(pdef.dtype)
+        if pdef.init == "zeros":
+            leaves.append(jnp.zeros(pdef.shape, dt))
+        elif pdef.init == "ones":
+            leaves.append(jnp.ones(pdef.shape, dt))
+        else:
+            leaves.append(
+                (jax.random.normal(k, pdef.shape, jnp.float32)
+                 * pdef.scale).astype(dt))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def shapes_from_schema(schema):
+    return jax.tree_util.tree_map(
+        lambda p: p.sds(), schema, is_leaf=lambda x: isinstance(x, PDef))
+
+
+def specs_from_schema(schema):
+    return jax.tree_util.tree_map(
+        lambda p: p.spec, schema, is_leaf=lambda x: isinstance(x, PDef))
+
+
+def param_count(schema) -> int:
+    flat = jax.tree_util.tree_leaves(
+        schema, is_leaf=lambda x: isinstance(x, PDef))
+    return int(sum(int(np.prod(p.shape)) for p in flat))

@@ -1,0 +1,2 @@
+from repro.optim.adamw import (  # noqa: F401
+    init_opt_state, adamw_update, lr_schedule)

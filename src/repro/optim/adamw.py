@@ -1,0 +1,117 @@
+"""AdamW with configurable moment storage and WSD / cosine schedules.
+
+Moment storage tiers (opt_state_dtype):
+  float32  — default
+  bfloat16 — >=200 B archs (fits 16 GB/chip; DESIGN.md §7)
+  int8     — blockwise-quantized moments (8-bit Adam, Dettmers et al.):
+             per-row absmax scales, m symmetric int8, v unsigned-range
+             int8; halves moment memory again (398 B params: 3.2 TB of
+             fp32 moments -> 0.8 TB). Updates always compute in fp32.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+B1, B2, EPS = 0.9, 0.95, 1e-8
+WEIGHT_DECAY = 0.1
+CLIP_NORM = 1.0
+
+
+def _q8_rows(x):
+    """Blockwise symmetric int8 quantization (block = trailing dim).
+
+    Shape-preserving on purpose: reshaping a sharded tensor would merge
+    mesh-sharded dims and force GSPMD gathers (the same trap as flattened
+    TIES trims — EXPERIMENTS.md §Perf cell C)."""
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 + 1e-20
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)[..., 0]
+
+
+def _dq8_rows(q, scale, shape):
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def init_opt_state(params, dtype: str = "float32"):
+    if dtype == "int8":
+        def zq(p):
+            return {"q": jnp.zeros(p.shape, jnp.int8),
+                    "s": jnp.zeros(p.shape[:-1], jnp.float32)}
+        return {"m": jax.tree_util.tree_map(zq, params),
+                "v": jax.tree_util.tree_map(zq, params)}
+    dt = jnp.dtype(dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params)}
+
+
+def lr_schedule(step, cfg: ModelConfig, total_steps: int):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    peak = cfg.learning_rate
+    warm = jnp.minimum(1.0, (step + 1.0) / max(cfg.warmup_steps, 1))
+    if cfg.schedule == "wsd":
+        # warmup -> stable -> linear decay over the last 10% of steps
+        decay_start = 0.9 * total_steps
+        frac = jnp.clip((step - decay_start)
+                        / jnp.maximum(total_steps - decay_start, 1.0),
+                        0.0, 1.0)
+        return peak * warm * (1.0 - 0.9 * frac)
+    prog = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+    return peak * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def adamw_update(params, opt_state, grads, step, cfg: ModelConfig,
+                 total_steps: int) -> Tuple[dict, dict, jax.Array]:
+    """Returns (new_params, new_opt_state, grad_norm)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, CLIP_NORM / (gnorm + 1e-12))
+    lr = lr_schedule(step, cfg, total_steps)
+    t = step.astype(jnp.float32) + 1.0
+    c1 = 1.0 - B1 ** t
+    c2 = 1.0 - B2 ** t
+
+    int8_mode = cfg.opt_state_dtype == "int8"
+
+    def upd(p, m, v, g):
+        g = g.astype(jnp.float32) * scale
+        if int8_mode:
+            m_f = _dq8_rows(m["q"], m["s"], p.shape)
+            v_f = _dq8_rows(v["q"], v["s"], p.shape)
+        else:
+            m_f = m.astype(jnp.float32)
+            v_f = v.astype(jnp.float32)
+        m32 = B1 * m_f + (1 - B1) * g
+        v32 = B2 * v_f + (1 - B2) * g * g
+        mhat = m32 / c1
+        vhat = v32 / c2
+        step_vec = mhat / (jnp.sqrt(vhat) + EPS) + WEIGHT_DECAY * \
+            p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * step_vec
+        if int8_mode:
+            mq, ms = _q8_rows(m32)
+            vq, vs = _q8_rows(v32)
+            return (p_new.astype(p.dtype), {"q": mq, "s": ms},
+                    {"q": vq, "s": vs})
+        return (p_new.astype(p.dtype), m32.astype(m.dtype),
+                v32.astype(v.dtype))
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_g = treedef.flatten_up_to(grads)
+    out = [upd(p, m, v, g) for p, m, v, g in
+           zip(flat_p, flat_m, flat_v, flat_g)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}, gnorm

@@ -1,0 +1,3 @@
+from repro.sharding.policy import (  # noqa: F401
+    params_shardings, batch_shardings, cache_shardings, resolve_leaf_spec,
+    set_mesh, expert_activation_constraint, state_shardings)

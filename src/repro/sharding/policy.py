@@ -1,0 +1,180 @@
+"""Logical-axis -> mesh resolution.
+
+Logical axes:
+  fsdp -> ('pod','data')   ZeRO-style parameter/optimizer sharding
+  tp   -> ('model',)       tensor parallel
+  ep   -> ('model',)       expert parallel
+  dp   -> ('pod','data')   batch (activations)
+  sp   -> ('pod','data')   sequence (long-context KV; used when batch=1)
+
+Resolution drops an axis (replicates the dim) when the dimension is not
+divisible by the mesh extent — e.g. minicpm's 36 attention heads or odd
+vocab sizes stay replicated instead of relying on GSPMD padding.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AXIS_MAP = {
+    "fsdp": ("pod", "data"),
+    "dp": ("pod", "data"),
+    "sp": ("pod", "data"),
+    "sp_any": ("pod", "data", "model"),   # KV-cache seq: any free axis
+    "tp": ("model",),
+    "ep": ("model",),
+}
+
+_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def _candidates(axes: Tuple[str, ...], mesh: Mesh):
+    """Prefer the widest sharding: full tuple, then suffixes."""
+    present = tuple(a for a in axes if a in mesh.shape)
+    for i in range(len(present)):
+        yield present[i:]
+
+
+def resolve_leaf_spec(logical: Tuple, shape: Tuple[int, ...],
+                      mesh: Mesh) -> P:
+    used: set = set()
+    entries = []
+    for dim, name in zip(shape, logical):
+        if name is None:
+            entries.append(None)
+            continue
+        chosen = None
+        for trial in _candidates(AXIS_MAP[name], mesh):
+            size = int(np.prod([mesh.shape[a] for a in trial]))
+            if size <= 1 or any(a in used for a in trial):
+                continue
+            if dim % size == 0:
+                chosen = trial
+                break
+        if chosen is None:
+            entries.append(None)
+        else:
+            used.update(chosen)
+            entries.append(chosen if len(chosen) > 1 else chosen[0])
+    return P(*entries)
+
+
+def _tree_spec(logical_tree, shape_tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda lg, sds: NamedSharding(
+            mesh, resolve_leaf_spec(lg, sds.shape, mesh)),
+        logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def params_shardings(model, mesh: Mesh):
+    return _tree_spec(model.logical_specs(), model.param_shapes(), mesh)
+
+
+def state_shardings(model, mesh: Mesh, state_shapes):
+    """Shardings for {'params','m','v','step'}: m/v mirror params.
+    int8 moments: {'q': param sharding, 's': replicated row scales}."""
+    psh = params_shardings(model, mesh)
+    if model.cfg.opt_state_dtype == "int8":
+        def q8(sh):
+            spec = tuple(sh.spec)
+            return {"q": sh,
+                    "s": NamedSharding(mesh, P(*spec[:-1]) if spec else P())}
+        msh = jax.tree_util.tree_map(
+            q8, psh, is_leaf=lambda x: isinstance(x, NamedSharding))
+    else:
+        msh = psh
+    return {"params": psh, "m": msh, "v": msh,
+            "step": NamedSharding(mesh, P())}
+
+
+def batch_shardings(mesh: Mesh, batch_shapes):
+    """Batch dict: leading dim is batch -> dp when divisible."""
+    def leaf(sds):
+        if not sds.shape:
+            return NamedSharding(mesh, P())
+        spec = resolve_leaf_spec(
+            ("dp",) + (None,) * (len(sds.shape) - 1), sds.shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map(leaf, batch_shapes)
+
+
+def cache_shardings(model, mesh: Mesh, cache_shapes):
+    """Decode-cache shardings.
+
+    Rules by leaf rank/owner:
+      attn kv      [L, B, S, Hk, hd] -> (None, dp, sp_any, None, None)
+      mla latent   [L, B, S, R]      -> (None, dp, sp_any, None)
+      ssm state    [L, B, H, P, N]   -> (None, dp, tp via H, None, None)
+      conv cache   [L, B, K, C]      -> (None, dp, None, tp)
+      first (mla)  [B, S, R]         -> (dp, sp_any, None)
+    The cache sequence dim takes ANY free mesh axis ('model' when batch
+    owns data; everything when batch=1) — this is what keeps 32k x 128
+    and 500k x 1 caches inside 16 GB/chip (flash-decoding style partial
+    softmax reductions are psum'd by GSPMD).
+    """
+    layout = getattr(model, "layout", None)
+
+    def attn_like(shape, batch_axis):
+        lg = [None] * len(shape)
+        lg[batch_axis] = "dp"
+        lg[batch_axis + 1] = "sp_any"
+        return tuple(lg)
+
+    def leaf_spec(path, sds):
+        names = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+        shape = sds.shape
+        if "first" in names:
+            lg = ("dp", "sp_any", None)
+        elif model.cfg.family == "encdec":
+            lg = attn_like(shape, 1)
+        else:
+            sub = next((n for n in names if isinstance(n, str)
+                        and n.startswith("sub")), None)
+            mixer = layout[int(sub[3:])].mixer if sub else "attn"
+            if mixer == "mamba":
+                if len(shape) == 5:              # ssm state [L,B,H,P,N]
+                    lg = (None, "dp", "tp", None, None)
+                else:                            # conv [L,B,K,C]
+                    lg = (None, "dp", None, "tp")
+            elif mixer == "mla":
+                lg = (None, "dp", "sp_any", None)
+            else:                                # attn / cross kv
+                lg = attn_like(shape, 1)
+        return NamedSharding(mesh, resolve_leaf_spec(lg, shape, mesh))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf_spec(p, s) for p, s in flat])
+
+
+def activation_constraint(x, logical):
+    """with_sharding_constraint by logical axes; no-op outside a mesh."""
+    if _MESH is None:
+        return x
+    spec = resolve_leaf_spec(tuple(logical), x.shape, _MESH)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
+def expert_activation_constraint(x):
+    """Reshard dispatched expert inputs [G, E, C, D] expert-major (the MoE
+    all-to-all point). No-op outside a mesh context (CPU smoke tests)."""
+    if _MESH is None or "model" not in _MESH.shape:
+        return x
+    g, e, c, d = x.shape
+    spec = resolve_leaf_spec(("dp", "ep", None, None), x.shape, _MESH)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))

@@ -1,0 +1,3 @@
+from repro.strategies.base import (  # noqa: F401
+    Strategy, get_strategy, list_strategies, REGISTRY)
+import repro.strategies.catalog  # noqa: F401,E402  (populates REGISTRY)

@@ -1,0 +1,71 @@
+"""Strategy interface.
+
+A strategy is an n-ary pure function over an ORDERED list of contribution
+pytrees (paper Assumption 9): σ(contribs, base, seed, **cfg) -> merged.
+All randomness must flow from `seed` (Phase 2 derives it from the Merkle
+root; the raw Phase-1 audit feeds varying seeds to reflect default
+stochastic behaviour, per paper Appendix F).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Strategy:
+    name: str
+    fn: Callable                      # fn(stacked_tree, base_tree, seed, **cfg)
+    stochastic: bool = False
+    binary_only: bool = False
+    category: str = "linear"          # linear | sparse | geometry | search
+    defaults: Dict[str, Any] = field(default_factory=dict)
+
+    def __call__(self, contribs: List[Any], *, base: Any = None,
+                 seed: int = 0, **cfg) -> Any:
+        assert len(contribs) >= 1
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(list(xs)), *contribs)
+        if base is None:
+            base = jax.tree_util.tree_map(jnp.zeros_like, contribs[0])
+        kw = dict(self.defaults)
+        kw.update(cfg)
+        return self.fn(stacked, base, seed, **kw)
+
+
+REGISTRY: Dict[str, Strategy] = {}
+
+
+def register(strategy: Strategy) -> Strategy:
+    REGISTRY[strategy.name] = strategy
+    return strategy
+
+
+def get_strategy(name: str) -> Strategy:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown strategy {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def list_strategies() -> List[str]:
+    return sorted(REGISTRY)
+
+
+def leafwise(leaf_fn: Callable, needs_key: bool = False) -> Callable:
+    """Lift a per-leaf function (stacked [k,...], base, [key]) -> leaf."""
+    def nary(stacked, base, seed, **cfg):
+        leaves_s, treedef = jax.tree_util.tree_flatten(stacked)
+        leaves_b = treedef.flatten_up_to(base)
+        outs = []
+        for i, (sl, bl) in enumerate(zip(leaves_s, leaves_b)):
+            if needs_key:
+                key = jax.random.fold_in(
+                    jax.random.PRNGKey(seed & 0x7FFFFFFF), i)
+                outs.append(leaf_fn(sl, bl, key, **cfg))
+            else:
+                outs.append(leaf_fn(sl, bl, **cfg))
+        return jax.tree_util.tree_unflatten(treedef, outs)
+    return nary

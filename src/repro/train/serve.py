@@ -1,0 +1,35 @@
+"""Serving-step factories: prefill and single-token decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+
+def make_prefill(model: Model):
+    def prefill(params, batch):
+        return model.prefill(params, batch)
+    return prefill
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, caches, token, pos):
+        return model.decode_step(params, caches, token, pos)
+    return decode_step
+
+
+def greedy_decode(model: Model, params, batch, steps: int):
+    """Host-driven greedy loop on top of prefill + decode (examples)."""
+    pos = batch["tokens"].shape[1]
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len=pos + steps))
+    decode = jax.jit(make_decode_step(model))
+    logits, caches = prefill(params, batch)
+    out = []
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for i in range(steps):
+        out.append(tok)
+        logits, caches = decode(params, caches, tok,
+                                jnp.asarray(pos + i, jnp.int32))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,129 @@
+"""Compression determinism + optimizer behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import (compress_tree, decompress_tree,
+                                    topk_reconstruct, topk_sparsify)
+from repro.optim.adamw import adamw_update, init_opt_state, lr_schedule
+from repro.configs import get_config
+
+
+def test_compress_roundtrip_deterministic():
+    rng = np.random.default_rng(0)
+    tree = {"a": jnp.asarray(rng.standard_normal((32, 32)) * 5, jnp.float32)}
+    d1 = decompress_tree(compress_tree(tree))
+    d2 = decompress_tree(compress_tree(tree))
+    assert bool(jnp.array_equal(d1["a"], d2["a"]))      # bitwise (Assump 10)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_compress_error_bound(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(257) * rng.uniform(0.1, 10),
+                    jnp.float32)
+    y = decompress_tree(compress_tree(x))
+    maxabs = float(jnp.max(jnp.abs(x)))
+    assert float(jnp.max(jnp.abs(x - y))) <= maxabs / 127.0 + 1e-6
+
+
+def test_topk_sparsify_roundtrip():
+    rng = np.random.default_rng(1)
+    base = jnp.asarray(rng.standard_normal((16, 16)), jnp.float32)
+    x = base + jnp.asarray(
+        (rng.random((16, 16)) < 0.03) * rng.standard_normal((16, 16)) * 5,
+        jnp.float32)
+    sp = topk_sparsify(x, base, k_frac=0.05)
+    rec = topk_reconstruct(sp, base)
+    # the large deltas are exactly recovered; small ones dropped
+    tau = np.abs(np.asarray(x - base)).ravel()
+    thresh = np.sort(tau)[-int(len(tau) * 0.05)]
+    mask = tau >= thresh
+    np.testing.assert_allclose(np.asarray(rec).ravel()[mask],
+                               np.asarray(x).ravel()[mask], rtol=1e-6)
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = get_config("minitron-8b").replace(learning_rate=0.1,
+                                            warmup_steps=1)
+    params = {"w": jnp.asarray([5.0, -3.0, 2.0])}
+    opt = init_opt_state(params, "float32")
+    step = jnp.zeros((), jnp.int32)
+    for i in range(200):
+        grads = {"w": 2 * params["w"]}          # d/dw ||w||^2
+        params, opt, _ = adamw_update(params, opt, grads, step, cfg, 400)
+        step = step + 1
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.1
+
+
+def test_bf16_moments_track_fp32():
+    cfg = get_config("minitron-8b").replace(learning_rate=0.01,
+                                            warmup_steps=1)
+    params = {"w": jnp.ones((8,)) * 2.0}
+    o32 = init_opt_state(params, "float32")
+    o16 = init_opt_state(params, "bfloat16")
+    p32, p16 = params, params
+    step = jnp.zeros((), jnp.int32)
+    for i in range(20):
+        g = {"w": p32["w"] * 0.5}
+        p32, o32, _ = adamw_update(p32, o32, g, step, cfg, 100)
+        g = {"w": p16["w"] * 0.5}
+        p16, o16, _ = adamw_update(p16, o16, g, step, cfg, 100)
+        step = step + 1
+    assert o16["m"]["w"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(p32["w"]), np.asarray(p16["w"]),
+                               rtol=0.05)
+
+
+def test_wsd_schedule_shape():
+    cfg = get_config("minicpm-2b")              # wsd
+    assert cfg.schedule == "wsd"
+    total = 1000
+    lrs = [float(lr_schedule(jnp.asarray(s, jnp.float32), cfg, total))
+           for s in (0, cfg.warmup_steps, 500, 899, 950, 999)]
+    assert lrs[0] < lrs[1]                       # warmup
+    assert abs(lrs[2] - lrs[3]) < 1e-8           # stable plateau
+    assert lrs[4] < lrs[3] and lrs[5] < lrs[4]   # decay
+    cos = get_config("minitron-8b")
+    lr_mid = float(lr_schedule(jnp.asarray(500., jnp.float32), cos, total))
+    lr_end = float(lr_schedule(jnp.asarray(999., jnp.float32), cos, total))
+    assert lr_end < lr_mid
+
+
+def test_param_counts_match_spec():
+    """Analytic totals are in the advertised ballpark per arch."""
+    from repro.configs import get_config
+    expect = {
+        "minitron-8b": (7.5e9, 10.5e9),
+        "minicpm-2b": (2.2e9, 3.3e9),
+        "gemma2-27b": (24e9, 30e9),
+        "phi3-mini-3.8b": (3.3e9, 4.3e9),
+        "qwen3-moe-30b-a3b": (28e9, 33e9),
+        "deepseek-v2-236b": (210e9, 250e9),
+        "whisper-tiny": (2e7, 5e7),
+        "mamba2-780m": (7e8, 9e8),
+        "jamba-1.5-large-398b": (370e9, 420e9),
+        "llama-3.2-vision-90b": (82e9, 95e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        total, active = get_config(arch).param_counts()
+        assert lo <= total <= hi, f"{arch}: {total:.3e} not in [{lo}, {hi}]"
+        assert active <= total
+
+
+def test_int8_adam_converges_and_halves_memory():
+    import numpy as np
+    cfg = get_config("minitron-8b").replace(
+        learning_rate=0.1, warmup_steps=1, opt_state_dtype="int8")
+    params = {"w": jnp.asarray([5.0, -3.0, 2.0, 8.0])}
+    opt = init_opt_state(params, "int8")
+    assert opt["m"]["w"]["q"].dtype == jnp.int8
+    step = jnp.zeros((), jnp.int32)
+    for i in range(250):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(params, opt, grads, step, cfg, 500)
+        step = step + 1
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.2

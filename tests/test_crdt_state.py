@@ -1,0 +1,147 @@
+"""OR-Set / CRDTMergeState laws — unit + hypothesis property tests
+(Theorem 8: commutativity, associativity, idempotency, lattice LUB)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.state import AddEntry, CRDTMergeState
+from repro.core.version_vector import VersionVector
+
+
+def _payload(i):
+    return jnp.full((2, 2), float(i), jnp.float32)
+
+
+def build_state(ops):
+    """ops: list of ('add', node, val) | ('rm', node, idx-of-prior-add)."""
+    s = CRDTMergeState()
+    eids = []
+    for op in ops:
+        if op[0] == "add":
+            s = s.add(_payload(op[2]), node=f"n{op[1]}")
+            eids.append(sorted(s.visible())[-1] if s.visible() else None)
+        elif eids:
+            eid = eids[op[2] % len(eids)]
+            if eid:
+                s = s.remove(eid, node=f"n{op[1]}")
+    return s
+
+
+op_strategy = st.lists(
+    st.one_of(
+        st.tuples(st.just("add"), st.integers(0, 3), st.integers(0, 6)),
+        st.tuples(st.just("rm"), st.integers(0, 3), st.integers(0, 6)),
+    ), min_size=0, max_size=8)
+
+
+@settings(max_examples=60, deadline=None)
+@given(op_strategy, op_strategy)
+def test_merge_commutative(ops1, ops2):
+    s1, s2 = build_state(ops1), build_state(ops2)
+    assert s1.merge(s2) == s2.merge(s1)
+    assert s1.merge(s2).visible() == s2.merge(s1).visible()
+
+
+@settings(max_examples=60, deadline=None)
+@given(op_strategy, op_strategy, op_strategy)
+def test_merge_associative(ops1, ops2, ops3):
+    s1, s2, s3 = (build_state(o) for o in (ops1, ops2, ops3))
+    assert s1.merge(s2).merge(s3) == s1.merge(s2.merge(s3))
+
+
+@settings(max_examples=60, deadline=None)
+@given(op_strategy)
+def test_merge_idempotent(ops):
+    s = build_state(ops)
+    assert s.merge(s) == s
+
+
+@settings(max_examples=40, deadline=None)
+@given(op_strategy, op_strategy)
+def test_merge_is_least_upper_bound(ops1, ops2):
+    s1, s2 = build_state(ops1), build_state(ops2)
+    m = s1.merge(s2)
+    assert s1.leq(m) and s2.leq(m)
+    # any other upper bound dominates m
+    up = m.merge(build_state(ops1[::-1]))
+    assert m.leq(up)
+
+
+@settings(max_examples=40, deadline=None)
+@given(op_strategy, op_strategy,
+       st.lists(st.integers(0, 1), min_size=2, max_size=6))
+def test_convergence_any_delivery_order(ops1, ops2, order):
+    """Duplicated, reordered delivery converges (SEC)."""
+    s1, s2 = build_state(ops1), build_state(ops2)
+    updates = [s1, s2]
+    a = CRDTMergeState()
+    b = CRDTMergeState()
+    for i in order:                      # a receives in given order (dups ok)
+        a = a.merge(updates[i])
+    a = a.merge(s1).merge(s2)
+    b = b.merge(s2).merge(s1)            # b receives in opposite order
+    assert a == b
+    assert a.visible() == b.visible()
+
+
+def test_add_then_remove_hides_element():
+    s = CRDTMergeState().add(_payload(1), "n0")
+    eid = next(iter(s.visible()))
+    s2 = s.remove(eid, "n0")
+    assert eid not in s2.visible()
+
+
+def test_or_set_add_wins_on_concurrent_add_remove():
+    """Paper §2.1: a concurrent re-add (new tag) survives a remove that
+    only observed the old tag."""
+    s = CRDTMergeState().add(_payload(1), "n0")
+    eid = next(iter(s.visible()))
+    # replica A removes (observes only the original tag)
+    a = s.remove(eid, "nA")
+    # replica B concurrently re-adds the same content (new tag)
+    b = s.add(_payload(1), "nB")
+    merged = a.merge(b)
+    assert eid in merged.visible()       # add wins
+
+
+def test_remove_is_per_observed_tags():
+    s = CRDTMergeState().add(_payload(1), "n0").add(_payload(1), "n1")
+    eid = next(iter(s.visible()))
+    assert len([e for e in s.adds if e.element_id == eid]) == 2
+    s2 = s.remove(eid, "n0")
+    assert eid not in s2.visible()       # both observed tags tombstoned
+
+
+def test_content_addressing_dedups():
+    s = CRDTMergeState().add(_payload(7), "n0").add(_payload(7), "n1")
+    assert len(s.visible()) == 1
+    assert len(s.adds) == 2              # two tags, one element
+
+
+def test_merkle_root_tracks_visible_set():
+    s1 = CRDTMergeState().add(_payload(1), "n0")
+    s2 = CRDTMergeState().add(_payload(2), "n1")
+    m = s1.merge(s2)
+    assert s1.merkle_root() != m.merkle_root()
+    # root independent of merge order
+    assert s1.merge(s2).merkle_root() == s2.merge(s1).merkle_root()
+
+
+def test_gc_tombstones_preserves_visible():
+    s = CRDTMergeState().add(_payload(1), "n0").add(_payload(2), "n0")
+    victim = sorted(s.visible())[0]
+    s = s.remove(victim, "n0")
+    stable = set(s.removes)
+    g = s.gc_tombstones(stable)
+    assert g.visible() == s.visible()
+    assert len(g.removes) == 0
+    assert len(g.adds) < len(s.adds)
+
+
+def test_version_vector_tracks_updates():
+    s = CRDTMergeState().add(_payload(1), "a").add(_payload(2), "a")
+    assert s.vv.get("a") == 2
+    t = CRDTMergeState().add(_payload(3), "b")
+    assert s.merge(t).vv.get("a") == 2
+    assert s.merge(t).vv.get("b") == 1

@@ -1,0 +1,131 @@
+"""Dotted version vectors (L1) + causal-stability tombstone GC (L3)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dotted_vv import DottedVersionVector
+from repro.core.gossip import GossipNetwork
+
+ops = st.lists(st.tuples(st.sampled_from("abcd"), st.booleans()),
+               max_size=10)
+
+
+def build(op_list):
+    d = DottedVersionVector()
+    for node, _ in op_list:
+        d = d.increment(node)
+    return d
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops, ops)
+def test_dvv_merge_commutative(o1, o2):
+    a, b = build(o1), build(o2)
+    assert a.merge(b) == b.merge(a)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops, ops, ops)
+def test_dvv_merge_associative(o1, o2, o3):
+    a, b, c = build(o1), build(o2), build(o3)
+    assert a.merge(b).merge(c) == a.merge(b.merge(c))
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops)
+def test_dvv_idempotent_and_monotone(o):
+    a = build(o)
+    assert a.merge(a) == a
+    assert a <= a.increment("z")
+
+
+def test_dvv_compaction():
+    """Contiguous dots fold into the context — the L1 metadata win."""
+    d = DottedVersionVector()
+    for _ in range(5):
+        d = d.increment("a")
+    assert d.context == {"a": 5} and not d.dots
+    # a gap keeps exactly one sparse dot
+    gap = d.add_dot(("a", 7))
+    assert gap.dots == frozenset({("a", 7)})
+    # filling the gap compacts everything
+    full = gap.add_dot(("a", 6))
+    assert full.context == {"a": 7} and not full.dots
+
+
+def test_dvv_contains_and_next_dot():
+    d = DottedVersionVector().increment("a").add_dot(("b", 3))
+    assert d.contains(("a", 1))
+    assert d.contains(("b", 3))
+    assert not d.contains(("b", 1))
+    assert d.next_dot("b") == ("b", 4)
+
+
+def test_dvv_metadata_compactness_vs_vv():
+    """1000 transient nodes, each contributing once, all delivered:
+    the DVV context holds 1000 entries like a VV — but a node that saw
+    only a prefix carries few entries, and merges stay correct."""
+    d = DottedVersionVector()
+    for i in range(50):
+        d = d.add_dot((f"n{i:03d}", 1))
+    assert d.metadata_size() == 50
+    assert all(d.contains((f"n{i:03d}", 1)) for i in range(50))
+
+
+# ---------------------------------------------------------------------------
+# Tombstone GC
+# ---------------------------------------------------------------------------
+
+
+def _net_with_removal(n=6):
+    rng = np.random.default_rng(0)
+    net = GossipNetwork(n, seed=0)
+    for node in net.nodes:
+        node.contribute(jnp.asarray(rng.standard_normal((4, 4)),
+                                    jnp.float32))
+    net.all_pairs_round()
+    victim = sorted(net.nodes[0].state.visible())[0]
+    net.nodes[0].retract(victim)
+    net.all_pairs_round()                       # tombstone disseminates
+    return net, victim
+
+
+def test_gc_prunes_stable_tombstones_preserving_convergence():
+    net, victim = _net_with_removal()
+    before_adds = len(net.nodes[0].state.adds)
+    root_before = net.nodes[0].root()
+    collected = net.gc_round()
+    assert collected >= 1
+    assert len(net.nodes[0].state.adds) < before_adds
+    assert all(len(n.state.removes) == 0 for n in net.nodes)
+    # visible set and Merkle root unchanged; still converged
+    assert net.converged()
+    assert net.nodes[0].root() == root_before
+    assert victim not in net.nodes[0].state.visible()
+    # states remain mergeable after GC
+    merged = net.nodes[0].state.merge(net.nodes[1].state)
+    assert merged.visible() == net.nodes[0].state.visible()
+
+
+def test_gc_defers_until_all_nodes_observed():
+    """A tombstone NOT yet seen by every node must survive GC."""
+    rng = np.random.default_rng(1)
+    net = GossipNetwork(4, seed=1)
+    for node in net.nodes:
+        node.contribute(jnp.asarray(rng.standard_normal((4, 4)),
+                                    jnp.float32))
+    net.all_pairs_round()
+    victim = sorted(net.nodes[0].state.visible())[0]
+    net.nodes[0].retract(victim)                 # NOT disseminated yet
+    assert net.gc_round() == 0
+    assert len(net.nodes[0].state.removes) > 0   # tombstone kept
+    net.all_pairs_round()
+    assert net.gc_round() > 0                    # now stable -> collected
+
+
+def test_gc_then_resolve_identical_across_nodes():
+    net, _ = _net_with_removal()
+    net.gc_round()
+    outs = net.resolve_all("ties", use_cache=False)
+    assert all(bool(jnp.array_equal(outs[0], o)) for o in outs[1:])

@@ -1,0 +1,41 @@
+"""Examples are runnable (subprocess smoke)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(script, *args, timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "examples", script), *args],
+        capture_output=True, text=True, env=env, timeout=timeout)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    return proc.stdout
+
+
+def test_quickstart():
+    out = _run("quickstart.py")
+    assert out.count("True") >= 6
+    assert "after retraction" in out
+
+
+def test_consortium():
+    out = _run("decentralized_consortium.py")
+    assert "healed: all 10 nodes converged" in out
+    assert "gated merge excludes the poisoned model" in out
+
+
+def test_btm_train_fast():
+    out = _run("btm_train.py", "--rounds", "2", "--merge-every", "3",
+               "--branches", "2", "--seq", "32", "--batch", "4")
+    assert "merged model per-task eval loss" in out
+
+
+def test_serve_merged():
+    out = _run("serve_merged.py", "--batch", "2", "--gen", "4")
+    assert "served 2 requests" in out

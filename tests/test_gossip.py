@@ -1,0 +1,139 @@
+"""Tier-3 style convergence tests: orderings, duplication, partitions,
+epidemic gossip, delta-state equivalence, trust gating."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.delta import apply_delta, delta_since
+from repro.core.gossip import GossipNetwork
+from repro.core.state import CRDTMergeState
+from repro.core.trust import TrustState, gated_resolve, gated_visible
+from repro.core.version_vector import VersionVector
+
+
+def _seed_net(n, seed=0, shape=(8, 8), use_deltas=False):
+    net = GossipNetwork(n, seed=seed, use_deltas=use_deltas)
+    rng = np.random.default_rng(seed)
+    for node in net.nodes:
+        node.contribute(jnp.asarray(rng.standard_normal(shape), jnp.float32))
+    return net
+
+
+@pytest.mark.parametrize("ordering_seed", [1, 2, 3, 4, 5])
+def test_allpairs_convergence_any_ordering(ordering_seed):
+    net = _seed_net(8, seed=ordering_seed)
+    net.all_pairs_round()
+    assert net.converged()
+    outs = net.resolve_all("weight_average")
+    assert all(bool(jnp.array_equal(outs[0], o)) for o in outs[1:])
+
+
+def test_resolve_identical_across_strategies_sample():
+    net = _seed_net(6, seed=11)
+    net.all_pairs_round()
+    for strat in ("ties", "dare", "slerp", "emr", "genetic_merge"):
+        outs = net.resolve_all(strat)
+        assert all(bool(jnp.array_equal(outs[0], o)) for o in outs[1:]), strat
+
+
+def test_partition_then_heal():
+    net = _seed_net(10, seed=4)
+    net.partition([range(0, 5), range(5, 10)])
+    net.all_pairs_round()
+    assert net.converged()                      # per-partition convergence
+    roots = net.roots()
+    assert roots[0] != roots[9]                 # distinct partition hashes
+    net.heal()
+    net.all_pairs_round()
+    assert net.converged()
+    assert net.roots()[0] == net.roots()[9]
+
+
+def test_duplicated_and_stale_delivery():
+    net = _seed_net(4, seed=5)
+    for _ in range(3):                          # repeated full exchanges
+        net.all_pairs_round()
+    stale = net.nodes[0].state
+    net.nodes[3].receive_state(stale)           # stale redelivery
+    assert net.converged()
+
+
+def test_epidemic_converges():
+    net = _seed_net(25, seed=6)
+    rounds = net.run_epidemic(fanout=3)
+    assert net.converged()
+    assert rounds <= 10
+
+
+def test_delta_gossip_equals_full_state_gossip():
+    full = _seed_net(9, seed=7)
+    delt = _seed_net(9, seed=7, use_deltas=True)
+    full.all_pairs_round(order=[(i, j) for i in range(9) for j in range(9)
+                                if i != j])
+    delt.all_pairs_round(order=[(i, j) for i in range(9) for j in range(9)
+                                if i != j])
+    assert full.converged() and delt.converged()
+    assert full.roots()[0] == delt.roots()[0]
+    a = full.nodes[0].resolve("ties")
+    b = delt.nodes[0].resolve("ties")
+    assert bool(jnp.array_equal(a, b))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_delta_since_equals_merge(seed):
+    rng = np.random.default_rng(seed)
+    s1 = CRDTMergeState()
+    s2 = CRDTMergeState()
+    for i in range(int(rng.integers(1, 4))):
+        s1 = s1.add(jnp.asarray(rng.standard_normal((3, 3)), jnp.float32),
+                    node="a")
+    for i in range(int(rng.integers(1, 4))):
+        s2 = s2.add(jnp.asarray(rng.standard_normal((3, 3)), jnp.float32),
+                    node="b")
+    if s2.visible() and rng.random() < 0.5:
+        s2 = s2.remove(next(iter(s2.visible())), "b")
+    # receiver s1 knows nothing of s2
+    d = delta_since(s2, VersionVector())
+    assert apply_delta(s1, d) == s1.merge(s2)
+
+
+def test_delta_compression_converges_bitwise():
+    net = GossipNetwork(5, seed=8, use_deltas=True)
+    rng = np.random.default_rng(8)
+    for node in net.nodes:
+        node.contribute(jnp.asarray(rng.standard_normal((16, 16)) * 3,
+                                    jnp.float32))
+    net.all_pairs_round()
+    assert net.converged()
+    outs = net.resolve_all("weight_average")
+    assert all(bool(jnp.array_equal(outs[0], o)) for o in outs[1:])
+
+
+def test_trust_gating_converges_and_filters():
+    s = CRDTMergeState()
+    rng = np.random.default_rng(9)
+    for i in range(5):
+        s = s.add(jnp.asarray(rng.standard_normal((4, 4)), jnp.float32),
+                  node=f"n{i}")
+    bad = sorted(s.visible())[2]
+    # evidence reported by two different honest nodes, merged CRDT-style
+    t1 = TrustState().report(bad, "equivocation", "n0")
+    t2 = TrustState().report(bad, "divergent_root", "n1")
+    merged_t = t1.merge(t2)
+    assert merged_t == t2.merge(t1)
+    vis = gated_visible(s, merged_t, threshold=0.5)
+    assert bad not in vis and len(vis) == 4
+    r1 = gated_resolve(s, merged_t, "weight_average")
+    r2 = gated_resolve(s, t2.merge(t1), "weight_average")
+    assert bool(jnp.array_equal(r1, r2))
+
+
+def test_trust_monotone():
+    t = TrustState()
+    assert t.score("x") == 1.0
+    t = t.report("x", "statistical_outlier", "a")
+    s1 = t.score("x")
+    t = t.report("x", "equivocation", "b")
+    assert t.score("x") < s1

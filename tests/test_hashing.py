@@ -1,0 +1,66 @@
+"""Content hashing + sharding-invariant fingerprints."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hashing import (fingerprint2x32, hexdigest, pytree_digest,
+                                tensor_digest, tree_fingerprint)
+
+
+def test_digest_deterministic_and_content_sensitive():
+    a = jnp.arange(16, dtype=jnp.float32).reshape(4, 4)
+    assert tensor_digest(a) == tensor_digest(jnp.array(a))
+    assert tensor_digest(a) != tensor_digest(a + 1e-7)
+    assert tensor_digest(a) != tensor_digest(a.reshape(2, 8))  # shape-aware
+    assert tensor_digest(a) != tensor_digest(a.astype(jnp.int32))
+
+
+def test_pytree_digest_path_sensitive():
+    a = jnp.ones((2, 2))
+    assert pytree_digest({"x": a}) != pytree_digest({"y": a})
+    assert pytree_digest({"x": a, "y": a}) == pytree_digest({"y": a, "x": a})
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 400), st.integers(0, 2 ** 31 - 1))
+def test_fingerprint_split_invariance(n, seed):
+    """Partial fingerprints over any contiguous split combine (by uint32
+    addition) to the whole-array fingerprint — the sharding-invariance
+    property used for distributed content identity."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    whole = fingerprint2x32(x)
+    cut = n // 2
+    # manual split with index offsets: recompute with iota offset by slicing
+    # the full index space — equivalent to per-shard partial fingerprints.
+    import jax.numpy as jnp2
+    w = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    i = jax.lax.iota(jnp.uint32, n)
+    from repro.core.hashing import _MIX_A, _MIX_B, _MIX_C, _MIX_D
+    k1 = (i * _MIX_A + _MIX_B) ^ (i >> 7)
+    k2 = (i * _MIX_C + _MIX_D) ^ (i << 3)
+    lane1 = (jnp.sum(w[:cut] * k1[:cut], dtype=jnp.uint32)
+             + jnp.sum(w[cut:] * k1[cut:], dtype=jnp.uint32))
+    lane2 = (jnp.sum((w[:cut] ^ k2[:cut]) * _MIX_A, dtype=jnp.uint32)
+             + jnp.sum((w[cut:] ^ k2[cut:]) * _MIX_A, dtype=jnp.uint32))
+    assert int(lane1) == int(whole[0])
+    assert int(lane2) == int(whole[1])
+
+
+def test_fingerprint_collision_smoke():
+    rng = np.random.default_rng(7)
+    seen = set()
+    for _ in range(200):
+        x = jnp.asarray(rng.standard_normal(64), jnp.float32)
+        fp = tuple(int(v) for v in fingerprint2x32(x))
+        assert fp not in seen
+        seen.add(fp)
+
+
+def test_tree_fingerprint_structure_sensitive():
+    a = jnp.ones((4,), jnp.float32)
+    b = jnp.zeros((4,), jnp.float32)
+    f1 = tree_fingerprint({"x": a, "y": b})
+    f2 = tree_fingerprint({"x": b, "y": a})
+    assert not bool(jnp.array_equal(f1, f2))

@@ -1,0 +1,144 @@
+"""Pallas kernel sweep: shapes x dtypes x k vs the pure-jnp oracles
+(interpret=True on CPU; TPU is the compile target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.common import hash_uniform, pad_flat, pad_stacked
+from repro.strategies import get_strategy
+
+SHAPES = [(8,), (33,), (128, 128), (257, 63), (16, 8, 9)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+KS = [2, 3, 8]
+
+
+def _contribs(k, shape, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.standard_normal(shape), dtype)
+            for _ in range(k)], \
+        jnp.asarray(rng.standard_normal(shape) * 0.1, dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("k", KS)
+def test_ties_kernel_sweep(shape, dtype, k):
+    contribs, base = _contribs(k, shape, dtype)
+    out = ops.ties_merge(contribs, base, trim=0.2, interpret=True)
+    cat = get_strategy("ties")(
+        [c.astype(jnp.float32) for c in contribs],
+        base=base.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(cat, np.float32),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("k", KS)
+def test_dare_kernel_matches_ref_bitwise_mask(shape, k):
+    contribs, base = _contribs(k, shape, jnp.float32, seed=1)
+    out = ops.dare_merge(contribs, base, seed=42, interpret=True)
+    sp, n = pad_stacked(jnp.stack(contribs), 2048)
+    bp, _ = pad_flat(base, 2048)
+    r = ref.dare_ref(sp, bp[None, :], jnp.uint32(42))
+    r = r.reshape(-1)[:n].reshape(shape)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_dare_kernel_deterministic_and_seed_sensitive():
+    contribs, base = _contribs(4, (100,), jnp.float32)
+    a = ops.dare_merge(contribs, base, seed=7, interpret=True)
+    b = ops.dare_merge(contribs, base, seed=7, interpret=True)
+    c = ops.dare_merge(contribs, base, seed=8, interpret=True)
+    assert bool(jnp.array_equal(a, b))
+    assert not bool(jnp.array_equal(a, c))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("k", KS)
+def test_weighted_kernel_sweep(shape, k):
+    contribs, base = _contribs(k, shape, jnp.float32, seed=2)
+    w = jnp.linspace(0.1, 1.0, k)
+    out = ops.weighted_merge(contribs, w, base, interpret=True)
+    expect = base + sum(float(w[i]) * (contribs[i] - base)
+                        for i in range(k))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_weight_average_kernel_matches_strategy():
+    contribs, _ = _contribs(5, (64, 64), jnp.float32, seed=3)
+    out = ops.weight_average_merge(contribs, interpret=True)
+    cat = get_strategy("weight_average")(contribs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(cat), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_task_arithmetic_kernel():
+    contribs, base = _contribs(3, (40, 10), jnp.float32, seed=4)
+    out = ops.task_arithmetic_merge(contribs, base, lam=1.0, interpret=True)
+    cat = get_strategy("task_arithmetic")(contribs, base=base)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(cat), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_slerp_kernel_sweep(shape):
+    (u, v), _ = _contribs(2, shape, jnp.float32, seed=5)
+    out = ops.slerp_merge(u, v, interpret=True)
+    cat = get_strategy("slerp")([u, v])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(cat), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_slerp_kernel_identical_inputs():
+    (u, _), _ = _contribs(2, (1000,), jnp.float32, seed=6)
+    out = ops.slerp_merge(u, u, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(u), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_hash_uniform_range_and_determinism():
+    idx = jnp.arange(10_000, dtype=jnp.uint32)
+    u1 = hash_uniform(idx, 3)
+    u2 = hash_uniform(idx, 3)
+    u3 = hash_uniform(idx, 4)
+    assert bool(jnp.array_equal(u1, u2))
+    assert not bool(jnp.array_equal(u1, u3))
+    assert float(jnp.min(u1)) >= 0.0 and float(jnp.max(u1)) < 1.0
+    assert abs(float(jnp.mean(u1)) - 0.5) < 0.02
+
+
+def test_kernels_on_pytrees():
+    rng = np.random.default_rng(10)
+    trees = [{"w": jnp.asarray(rng.standard_normal((17, 5)), jnp.float32),
+              "b": jnp.asarray(rng.standard_normal(11), jnp.float32)}
+             for _ in range(3)]
+    out = ops.ties_merge(trees, interpret=True)
+    assert out["w"].shape == (17, 5) and out["b"].shape == (11,)
+
+
+@pytest.mark.parametrize("spec", [
+    (2, 128, 128, 4, 2, 32, True),     # GQA causal
+    (1, 200, 200, 4, 4, 16, True),     # ragged (padding path)
+    (2, 64, 256, 8, 2, 32, False),     # cross-attention-like
+    (1, 256, 256, 2, 1, 64, True),     # MQA
+])
+def test_flash_attention_vs_reference(spec):
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models.layers import chunked_attention
+    b, sq, sk, h, hk, d, causal = spec
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((b, sq, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, sk, hk, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, sk, hk, d)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                          interpret=True)
+    ref_out = chunked_attention(q, k, v, causal=causal, q_chunk=4096,
+                                compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=2e-4, atol=2e-4)

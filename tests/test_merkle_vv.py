@@ -1,0 +1,79 @@
+"""Merkle tree + version vector unit/property tests."""
+import hashlib
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.merkle import merkle_levels, merkle_proof, merkle_root, \
+    verify_proof
+from repro.core.version_vector import VersionVector
+
+
+def _h(i: int) -> bytes:
+    return hashlib.sha256(str(i).encode()).digest()
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 1000), min_size=0, max_size=40))
+def test_root_order_independent(xs):
+    leaves = [_h(x) for x in xs]
+    import random
+    shuffled = list(leaves)
+    random.Random(0).shuffle(shuffled)
+    assert merkle_root(leaves) == merkle_root(shuffled)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=40, unique=True))
+def test_proofs_verify(xs):
+    leaves = [_h(x) for x in xs]
+    root = merkle_root(leaves)
+    for leaf in leaves[:5]:
+        proof = merkle_proof(leaves, leaf)
+        assert verify_proof(leaf, proof, root)
+
+
+def test_proof_rejects_wrong_leaf():
+    leaves = [_h(i) for i in range(9)]
+    root = merkle_root(leaves)
+    proof = merkle_proof(leaves, sorted(leaves)[0])
+    assert not verify_proof(_h(999), proof, root)
+
+
+def test_root_changes_with_set():
+    assert merkle_root([_h(1)]) != merkle_root([_h(1), _h(2)])
+    assert merkle_root([]) == merkle_root([])
+
+
+vv_strategy = st.dictionaries(st.sampled_from("abcdef"),
+                              st.integers(0, 5), max_size=6)
+
+
+@settings(max_examples=60, deadline=None)
+@given(vv_strategy, vv_strategy)
+def test_vv_merge_commutative(d1, d2):
+    a, b = VersionVector(d1), VersionVector(d2)
+    assert a.merge(b) == b.merge(a)
+
+
+@settings(max_examples=60, deadline=None)
+@given(vv_strategy, vv_strategy, vv_strategy)
+def test_vv_merge_associative(d1, d2, d3):
+    a, b, c = VersionVector(d1), VersionVector(d2), VersionVector(d3)
+    assert a.merge(b).merge(c) == a.merge(b.merge(c))
+
+
+@settings(max_examples=60, deadline=None)
+@given(vv_strategy)
+def test_vv_idempotent_and_leq(d):
+    a = VersionVector(d)
+    assert a.merge(a) == a
+    assert a <= a.merge(a.increment("z"))
+
+
+def test_vv_concurrency():
+    a = VersionVector({"a": 1})
+    b = VersionVector({"b": 1})
+    assert a.concurrent_with(b)
+    assert not a.concurrent_with(a.merge(b))
+    assert a.merge(b).dominates(a)

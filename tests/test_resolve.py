@@ -1,0 +1,132 @@
+"""Layer-2 resolve: canonical ordering, seeding, folds, caching,
+incremental/hierarchical resolve, and the Remark 16 transparency check."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_contribs
+from repro.core.resolve import (IncrementalMean, apply_strategy,
+                                canonical_order, clear_cache,
+                                hierarchical_resolve, resolve,
+                                seed_from_root)
+from repro.core.state import CRDTMergeState
+from repro.strategies import get_strategy
+
+
+def _state_with(contribs):
+    s = CRDTMergeState()
+    for i, c in enumerate(contribs):
+        s = s.add(c, node=f"n{i}")
+    return s
+
+
+def test_canonical_order_is_insertion_independent():
+    contribs = make_contribs(5)
+    s1 = _state_with(contribs)
+    s2 = _state_with(contribs[::-1])
+    assert canonical_order(s1) == canonical_order(s2)
+
+
+def test_resolve_bitwise_identical_across_replicas():
+    contribs = make_contribs(4)
+    s1 = _state_with(contribs)
+    s2 = _state_with(contribs[::-1])
+    for strat in ("weight_average", "dare", "slerp", "evolutionary_merge"):
+        r1 = resolve(s1, strat, use_cache=False)
+        r2 = resolve(s2, strat, use_cache=False)
+        assert bool(jnp.array_equal(r1, r2)), strat
+
+
+def test_seed_depends_on_visible_set():
+    c = make_contribs(3)
+    s1 = _state_with(c[:2])
+    s2 = _state_with(c[:3])
+    assert seed_from_root(s1.merkle_root()) != \
+        seed_from_root(s2.merkle_root())
+
+
+def test_remark16_wrapper_transparency():
+    """CRDT-wrapped resolve == direct strategy call on the same ordered
+    contributions with the same seed — byte-for-byte."""
+    contribs = make_contribs(4)
+    s = _state_with(contribs)
+    ids = canonical_order(s)
+    ordered = [s.store[i] for i in ids]
+    seed = seed_from_root(s.merkle_root())
+    for strat in ("weight_average", "ties", "dare", "slerp",
+                  "task_arithmetic", "fisher_merge"):
+        wrapped = resolve(s, strat, use_cache=False)
+        direct = apply_strategy(strat, ordered, seed=seed)
+        assert bool(jnp.array_equal(wrapped, direct)), strat
+        assert np.asarray(wrapped).tobytes() == \
+            np.asarray(direct).tobytes(), strat
+
+
+def test_fold_vs_tree_reduction_both_deterministic():
+    contribs = make_contribs(7)
+    s = _state_with(contribs)
+    f1 = resolve(s, "slerp", reduction="fold", use_cache=False)
+    f2 = resolve(s, "slerp", reduction="fold", use_cache=False)
+    t1 = resolve(s, "slerp", reduction="tree", use_cache=False)
+    t2 = resolve(s, "slerp", reduction="tree", use_cache=False)
+    assert bool(jnp.array_equal(f1, f2))
+    assert bool(jnp.array_equal(t1, t2))
+    assert not bool(jnp.array_equal(f1, t1))   # different (documented) order
+
+
+def test_fold_weighting_imbalance_remark7():
+    """Sequential fold at t=.5: last contribution gets ~50% weight."""
+    k = 4
+    ones = [jnp.full((8,), float(i + 1)) for i in range(k)]
+    s = _state_with(ones)
+    ids = canonical_order(s)
+    ordered = [s.store[i] for i in ids]
+    folded = apply_strategy("slerp", ordered, seed=0)
+    last = ordered[-1]
+    w_last = float(jnp.mean((folded / last)))
+    # exponential-decay weighting: last element dominates vs uniform 1/k
+    assert abs(float(jnp.mean(folded)) - float(jnp.mean(last))) < \
+        abs(float(jnp.mean(folded)) - float(jnp.mean(ordered[0])))
+
+
+def test_resolve_cache_hits():
+    clear_cache()
+    contribs = make_contribs(3)
+    s = _state_with(contribs)
+    r1 = resolve(s, "weight_average")
+    r2 = resolve(s, "weight_average")
+    assert r1 is r2                     # cached object
+
+
+def test_incremental_mean_matches_weight_average():
+    contribs = make_contribs(6)
+    s = _state_with(contribs)
+    inc = IncrementalMean()
+    for eid in canonical_order(s):
+        inc.add(eid, s.store[eid])
+    full = resolve(s, "weight_average", use_cache=False)
+    assert jnp.allclose(inc.value(), full, atol=1e-6)
+
+
+def test_hierarchical_resolve_deterministic():
+    contribs = make_contribs(9)
+    states = [_state_with([c]) for c in contribs]
+    r1 = hierarchical_resolve(states, "weight_average", group_size=3)
+    r2 = hierarchical_resolve(states[::-1], "weight_average", group_size=3)
+    assert bool(jnp.array_equal(r1, r2))
+
+
+def test_resolve_empty_raises():
+    with pytest.raises(ValueError):
+        resolve(CRDTMergeState(), "weight_average")
+
+
+def test_resolve_on_pytrees():
+    rng = np.random.default_rng(0)
+    def tree(i):
+        return {"a": jnp.asarray(rng.standard_normal((4, 4)), jnp.float32),
+                "b": {"w": jnp.asarray(rng.standard_normal(7), jnp.float32)}}
+    s = _state_with([tree(i) for i in range(3)])
+    out = resolve(s, "ties", use_cache=False)
+    assert out["a"].shape == (4, 4) and out["b"]["w"].shape == (7,)

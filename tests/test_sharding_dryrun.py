@@ -1,0 +1,92 @@
+"""Sharding policy unit tests + a reduced-mesh dry-run integration test
+run in a subprocess (so the 8 fake devices never leak into this process)."""
+import json
+import os
+import subprocess
+import sys
+from types import SimpleNamespace
+
+import pytest
+
+from repro.sharding.policy import resolve_leaf_spec
+
+MESH = SimpleNamespace(shape={"data": 16, "model": 16})
+MESH3 = SimpleNamespace(shape={"pod": 2, "data": 16, "model": 16})
+
+
+def spec(logical, shape, mesh=MESH):
+    return tuple(resolve_leaf_spec(logical, shape, mesh))
+
+
+def test_basic_fsdp_tp():
+    assert spec(("fsdp", "tp"), (4096, 16384)) == ("data", "model")
+    assert spec(("fsdp", "tp"), (4096, 16384), MESH3) == \
+        (("pod", "data"), "model")
+
+
+def test_non_divisible_replicates():
+    # minicpm: 36 heads * 64 = 2304; vocab 122753 is not divisible
+    assert spec(("tp", None), (122753, 2304)) == (None, None)
+    assert spec((None, "tp"), (122753, 2304)) == (None, "model")
+
+
+def test_fsdp_falls_back_to_suffix():
+    # divisible by 16 but not 32 -> multi-pod uses ('data',) only
+    assert spec(("fsdp", None), (16 * 3, 7), MESH3) == ("data", None)
+
+
+def test_no_axis_reuse_within_leaf():
+    # both dims want model -> second gets replicated
+    assert spec(("tp", "ep"), (32, 32)) == ("model", None)
+
+
+def test_sp_any_takes_whatever_is_free():
+    # decode kv cache [L, B, S, H, hd]: B=128 takes data, S takes model
+    got = spec((None, "dp", "sp_any", None, None), (32, 128, 32768, 8, 128))
+    assert got == (None, "data", "model", None, None)
+    # long-context: B=1 -> S takes everything available
+    got = spec((None, "dp", "sp_any", None, None), (9, 1, 524288, 8, 128),
+               MESH3)
+    assert got == (None, None, ("pod", "data", "model"), None, None)
+
+
+def test_scalar_spec():
+    assert spec((), ()) == ()
+
+
+MINI_DRYRUN = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+import jax
+from repro.launch.mesh import make_mesh
+from repro.launch.dryrun import dryrun_cell
+from repro.configs.base import ShapeSpec
+
+mesh2 = make_mesh((2, 4), ("data", "model"))
+mesh3 = make_mesh((2, 2, 2), ("pod", "data", "model"))
+out = []
+for mesh, tag in ((mesh2, "2x4"), (mesh3, "2x2x2")):
+    for arch, shp in (("minitron-8b", ShapeSpec("t", 64, 8, "train")),
+                      ("qwen3-moe-30b-a3b", ShapeSpec("t", 64, 8, "train")),
+                      ("mamba2-780m", ShapeSpec("d", 256, 8, "decode")),
+                      ("gemma2-27b", ShapeSpec("d", 256, 8, "decode"))):
+        r = dryrun_cell(arch, shp.name, mesh=mesh, smoke=True,
+                        shape_override=shp)
+        out.append((arch, tag, r["status"],
+                    r.get("error", "")[:200]))
+print(json.dumps(out))
+"""
+
+
+def test_mini_dryrun_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", MINI_DRYRUN],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    results = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert len(results) == 8
+    for arch, tag, status, err in results:
+        assert status == "OK", f"{arch}@{tag}: {err}"

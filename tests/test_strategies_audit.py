@@ -1,0 +1,150 @@
+"""Tier-1 algebraic audit: raw Phase 1 must match paper Table 3 EXACTLY;
+Phase 2 through CRDTMergeState must be 26/26 x 4 = 104/104 (Table 4).
+Plus the Proposition 4 counterexamples from the paper text."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.properties import (TABLE3_EXPECTED, audit_all_raw,
+                                   audit_all_wrapped, audit_raw,
+                                   audit_wrapped, controlled_tensors)
+from repro.strategies import get_strategy, list_strategies
+
+
+@pytest.fixture(scope="module")
+def x64():
+    with jax.experimental.enable_x64():
+        yield
+
+
+@pytest.fixture(scope="module")
+def tensors(x64):
+    return controlled_tensors(9, dtype=jnp.float64)
+
+
+def test_all_26_strategies_registered():
+    assert len(list_strategies()) == 26
+    assert set(list_strategies()) == set(TABLE3_EXPECTED)
+
+
+@pytest.mark.parametrize("name", sorted(TABLE3_EXPECTED))
+def test_table3_raw_pattern(name, tensors):
+    r = audit_raw(name, tensors)
+    exp_c, exp_a, exp_i = TABLE3_EXPECTED[name]
+    assert r.commutative == exp_c, f"{name} commutativity"
+    assert r.associative == exp_a, f"{name} associativity"
+    assert r.idempotent == exp_i, f"{name} idempotency"
+
+
+def test_table3_totals(tensors):
+    res = audit_all_raw(tensors)
+    assert sum(r.commutative for r in res.values()) == 21
+    assert sum(r.associative for r in res.values()) == 1
+    assert sum(r.idempotent for r in res.values()) == 14
+    assert sum(r.crdt for r in res.values()) == 0      # paper: 0/26
+
+
+@pytest.mark.parametrize("name", sorted(TABLE3_EXPECTED))
+def test_table4_wrapped_pass(name, tensors):
+    r = audit_wrapped(name, tensors)
+    assert r.commutative and r.associative and r.idempotent and \
+        r.convergent, f"{name} fails CRDT-wrapped properties"
+
+
+def test_phase2_is_104_of_104(tensors):
+    res = audit_all_wrapped(tensors)
+    total = sum(r.commutative + r.associative + r.idempotent + r.convergent
+                for r in res.values())
+    assert total == 104
+
+
+# ---------------------------------------------------------------------------
+# Proposition 4 concrete counterexamples (paper §3.2)
+# ---------------------------------------------------------------------------
+
+
+def test_weight_average_eqs_4_5(x64):
+    """f(f(a,b),c) = (a+b+2c)/4 vs f(a,f(b,c)) = (2a+b+c)/4."""
+    s = get_strategy("weight_average")
+    a, b, c = (jnp.asarray(x, jnp.float64)
+               for x in np.random.default_rng(1).standard_normal((3, 4, 4)))
+    left = s([s([a, b]), c])
+    right = s([a, s([b, c])])
+    assert jnp.allclose(left, (a + b + 2 * c) / 4)
+    assert jnp.allclose(right, (2 * a + b + c) / 4)
+    assert not jnp.allclose(left, right)
+
+
+def test_slerp_unit_vector_counterexample(x64):
+    """Paper: e1,e2,e3 -> left ~ (.5,.5,.707), right ~ (.707,.5,.5)."""
+    s = get_strategy("slerp")
+    v1 = jnp.asarray([1.0, 0.0, 0.0], jnp.float64)
+    v2 = jnp.asarray([0.0, 1.0, 0.0], jnp.float64)
+    v3 = jnp.asarray([0.0, 0.0, 1.0], jnp.float64)
+    left = s([s([v1, v2]), v3])
+    right = s([v1, s([v2, v3])])
+    assert jnp.allclose(left, jnp.asarray([0.5, 0.5, np.sqrt(0.5)]),
+                        atol=1e-9)
+    assert jnp.allclose(right, jnp.asarray([np.sqrt(0.5), 0.5, 0.5]),
+                        atol=1e-9)
+    assert not jnp.allclose(left, right)
+
+
+def test_slerp_commutative_only_at_half(x64):
+    s = get_strategy("slerp")
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.standard_normal(16), jnp.float64)
+    b = jnp.asarray(rng.standard_normal(16), jnp.float64)
+    assert jnp.allclose(s([a, b], t=0.5), s([b, a], t=0.5), atol=1e-9)
+    assert not jnp.allclose(s([a, b], t=0.3), s([b, a], t=0.3), atol=1e-5)
+
+
+def test_ties_thresholding_counterexample(x64):
+    """Thresholding breaks associativity (paper's 3-vector example shape)."""
+    s = get_strategy("ties")
+    a = jnp.asarray([10.0, 1.0, 0.1], jnp.float64)
+    b = jnp.asarray([0.1, 10.0, 1.0], jnp.float64)
+    c = jnp.asarray([1.0, 0.1, 10.0], jnp.float64)
+    left = s([s([a, b], trim=1 / 3), c], trim=1 / 3)
+    right = s([a, s([b, c], trim=1 / 3)], trim=1 / 3)
+    assert not jnp.allclose(left, right, atol=1e-6)
+
+
+def test_task_arithmetic_associative_but_not_idempotent(x64):
+    s = get_strategy("task_arithmetic")
+    rng = np.random.default_rng(5)
+    a, b, c = (jnp.asarray(x, jnp.float64)
+               for x in rng.standard_normal((3, 4, 4)))
+    left = s([s([a, b]), c])
+    right = s([a, s([b, c])])
+    assert jnp.allclose(left, right, atol=1e-9)        # associative
+    assert not jnp.allclose(s([a, a]), a, atol=1e-5)   # not idempotent
+
+
+# ---------------------------------------------------------------------------
+# Production-shape (Tier-2 style) checks on synthetic weights
+# ---------------------------------------------------------------------------
+
+
+def test_tier2_slices_wrapped_pass():
+    from repro.core.properties import production_slices
+    from repro.configs import get_config
+    base, tensors = production_slices(get_config("minitron-8b"), n=9,
+                                      slice_dim=128)
+    for name in ("weight_average", "ties", "dare", "slerp",
+                 "task_arithmetic", "fisher_merge"):
+        r = audit_wrapped(name, tensors, base=base)
+        assert r.crdt, f"{name} fails wrapped at 128x128"
+
+
+def test_cross_resolution_consistency():
+    """The paper's 128 vs 512 cross-resolution check (§6.3): our wrapped
+    architecture must agree bitwise at BOTH resolutions."""
+    from repro.core.properties import production_slices
+    from repro.configs import get_config
+    cfg = get_config("minitron-8b")
+    for dim in (128, 512):
+        base, tensors = production_slices(cfg, n=9, slice_dim=dim)
+        r = audit_wrapped("ada_merging", tensors, base=base)
+        assert r.crdt, f"ada_merging wrapped fails at {dim}x{dim}"
