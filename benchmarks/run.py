@@ -11,7 +11,8 @@ import argparse
 import sys
 import time
 
-SECTIONS = ("properties", "overhead", "gossip", "kernels", "roofline")
+SECTIONS = ("properties", "overhead", "gossip", "antientropy", "kernels",
+            "roofline")
 
 
 def main() -> None:
@@ -35,6 +36,8 @@ def main() -> None:
             from benchmarks import bench_overhead as mod
         elif section == "gossip":
             from benchmarks import bench_gossip as mod
+        elif section == "antientropy":
+            from benchmarks import bench_antientropy as mod
         elif section == "kernels":
             from benchmarks import bench_kernels as mod
         else:

@@ -58,6 +58,31 @@ def decompress_tree(ct: CompressedTree):
 
 
 # ---------------------------------------------------------------------------
+# Wire-format support (repro.net.wire)
+# ---------------------------------------------------------------------------
+#
+# A CompressedTree holds an opaque jax treedef, which has no stable byte
+# representation. For the wire we re-materialise the original container
+# structure with CompressedLeaf objects at the leaf positions; the codec
+# serialises that structure recursively (dict/list/tuple + leaf frames)
+# and `compressed_tree_from_structure` rebuilds the CompressedTree on the
+# receiving side.
+
+
+def compressed_tree_to_structure(ct: CompressedTree):
+    """Container tree (dict/list/tuple nesting) with CompressedLeaf leaves."""
+    return jax.tree_util.tree_unflatten(ct.treedef, ct.leaves)
+
+
+def compressed_tree_from_structure(structure) -> CompressedTree:
+    leaves, treedef = jax.tree_util.tree_flatten(
+        structure, is_leaf=lambda x: isinstance(x, CompressedLeaf))
+    if not all(isinstance(l, CompressedLeaf) for l in leaves):
+        raise TypeError("structure leaves must all be CompressedLeaf")
+    return CompressedTree(leaves, treedef)
+
+
+# ---------------------------------------------------------------------------
 # Top-k sparsification of task-vector deltas
 # ---------------------------------------------------------------------------
 

@@ -66,6 +66,29 @@ def delta_since(state: CRDTMergeState, seen: VersionVector,
                  compressed=compress)
 
 
+def delta_for_entries(state: CRDTMergeState,
+                      adds: FrozenSet[AddEntry],
+                      removes: FrozenSet[str],
+                      include_payloads: bool = False,
+                      compress: bool = False) -> Delta:
+    """Delta carrying an *explicit* entry subset of `state`.
+
+    Anti-entropy (repro.net.antientropy) localises the symmetric
+    difference via Merkle bucket digests and ships exactly those entries;
+    this builds the Delta for them. Payloads are optional because the
+    sync protocol transfers blobs in a separate request/response phase
+    (ship only what the peer's store actually lacks).
+    """
+    payloads: Dict[str, Any] = {}
+    if include_payloads:
+        for eid in {e.element_id for e in adds}:
+            if eid in state.store:
+                p = state.store[eid]
+                payloads[eid] = compress_tree(p) if compress else p
+    return Delta(frozenset(adds), frozenset(removes), state.vv, payloads,
+                 compressed=compress)
+
+
 def apply_delta(state: CRDTMergeState, delta: Delta) -> CRDTMergeState:
     store = dict(state.store)
     for eid, payload in delta.payloads.items():

@@ -10,6 +10,15 @@ can control ordering, duplication, loss and partitions. Two protocols:
 Delta-state propagation (paper §7.2 L1, implemented in core.delta) plugs
 in via `use_deltas=True`: nodes send only add/remove entries the peer has
 not acknowledged, with optional int8 payload compression.
+
+Transports (repro.net): passing `transport=` routes every send through
+the versioned wire codec and a repro.net.transport.Transport (in-memory
+queues or loopback TCP sockets), so gossip is an actual byte protocol;
+`bytes_sent` then counts real frame bytes. The default (None) keeps the
+zero-copy in-process delivery as a fast path for pure convergence tests.
+Digest-driven Merkle anti-entropy — the production sync primitive —
+lives in repro.net.antientropy and the simulator ports of these
+protocols in repro.net.simulator.
 """
 from __future__ import annotations
 
@@ -20,6 +29,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 from repro.core.delta import Delta, delta_since, apply_delta
 from repro.core.resolve import resolve
 from repro.core.state import CRDTMergeState
+from repro.core.version_vector import VersionVector
 
 
 class GossipNode:
@@ -44,6 +54,18 @@ class GossipNode:
         self.state = apply_delta(self.state, delta)
         self.merge_calls += 1
 
+    def receive_wire(self, msg) -> None:
+        """Apply a decoded wire message (StateMsg or DeltaMsg)."""
+        from repro.net.wire import DeltaMsg, StateMsg, msg_to_delta, \
+            msg_to_state
+        if isinstance(msg, StateMsg):
+            self.receive_state(msg_to_state(msg))
+        elif isinstance(msg, DeltaMsg):
+            self.receive_delta(msg_to_delta(msg))
+        else:
+            raise TypeError(f"GossipNode cannot apply {type(msg)}; "
+                            "sync messages need repro.net.SyncNode")
+
     def root(self) -> bytes:
         return self.state.merkle_root()
 
@@ -52,10 +74,16 @@ class GossipNode:
 
 
 class GossipNetwork:
-    def __init__(self, n: int, seed: int = 0, use_deltas: bool = False):
+    def __init__(self, n: int, seed: int = 0, use_deltas: bool = False,
+                 transport=None, compress_payloads: bool = False):
         self.nodes = [GossipNode(f"node{i:03d}") for i in range(n)]
         self.rng = random.Random(seed)
         self.use_deltas = use_deltas
+        self.compress_payloads = compress_payloads
+        self.transport = transport
+        if transport is not None:
+            for node in self.nodes:
+                transport.register(node.node_id)
         self.partitions: Optional[List[Set[int]]] = None
         self.bytes_sent = 0
 
@@ -76,8 +104,9 @@ class GossipNetwork:
 
     def _send(self, i: int, j: int):
         src, dst = self.nodes[i], self.nodes[j]
-        if self.use_deltas:
-            from repro.core.version_vector import VersionVector
+        if self.transport is not None:
+            self._send_wire(src, dst)
+        elif self.use_deltas:
             seen = VersionVector(src.known.get(dst.node_id, {}))
             d = delta_since(src.state, seen)
             dst.receive_delta(d)
@@ -85,6 +114,41 @@ class GossipNetwork:
             src.known[dst.node_id] = src.state.vv.to_dict()
         else:
             dst.receive_state(src.state)
+
+    def _send_wire(self, src: GossipNode, dst: GossipNode):
+        """Serialize through the wire codec and a repro.net transport;
+        delivery stays synchronous (the rounds are the schedule)."""
+        from repro.net.wire import delta_to_msg, state_to_msg
+        if self.use_deltas:
+            seen = VersionVector(src.known.get(dst.node_id, {}))
+            d = delta_since(src.state, seen,
+                            compress=self.compress_payloads)
+            msg = delta_to_msg(d, src.node_id)
+            src.known[dst.node_id] = src.state.vv.to_dict()
+        else:
+            msg = state_to_msg(src.state, src.node_id)
+        self.bytes_sent += self.transport.send(src.node_id, dst.node_id,
+                                               msg)
+        for _peer, received in self.transport.recv_ready(dst.node_id):
+            dst.receive_wire(received)
+
+    def drain(self, max_iters: int = 10_000):
+        """Deliver every in-flight transport frame (socket transports may
+        lag a send by a kernel round trip; queues are drained in order)."""
+        if self.transport is None:
+            return
+        import time as _time
+        for _ in range(max_iters):
+            progressed = False
+            for node in self.nodes:
+                for _src, msg in self.transport.recv_ready(node.node_id):
+                    node.receive_wire(msg)
+                    progressed = True
+            if not progressed:
+                if self.transport.pending() == 0:
+                    return
+                _time.sleep(0.001)
+        raise RuntimeError("transport did not drain")
 
     def all_pairs_round(self, order: Optional[List[Tuple[int, int]]] = None):
         """The paper's prototype: every directed pair, in a (possibly
@@ -97,6 +161,7 @@ class GossipNetwork:
         for i, j in pairs:
             if self._can_send(i, j):
                 self._send(i, j)
+        self.drain()
 
     def epidemic_round(self, fanout: int = 3):
         n = len(self.nodes)
@@ -106,6 +171,7 @@ class GossipNetwork:
                 continue
             for j in self.rng.sample(peers, min(fanout, len(peers))):
                 self._send(i, j)
+        self.drain()
 
     def run_epidemic(self, fanout: int = 3, max_rounds: int = 64) -> int:
         """Gossip until all (reachable) roots agree; returns rounds used."""

@@ -17,6 +17,7 @@ Beyond-paper L3 mitigations implemented here:
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -25,7 +26,27 @@ import jax.numpy as jnp
 from repro.core.state import CRDTMergeState
 from repro.strategies import get_strategy
 
-_CACHE: Dict[Tuple[bytes, str, str], Any] = {}
+# Bounded LRU: resolve outputs are whole model pytrees, so an unbounded
+# map is a memory leak under long-running gossip (every new Merkle root
+# is a new key). Hits return the identical cached object; eviction only
+# costs recomputation, which is byte-identical by Def. 6 determinism.
+_CACHE: "OrderedDict[Tuple[bytes, str, str, str], Any]" = OrderedDict()
+_CACHE_LIMIT = 64
+
+
+def set_cache_limit(limit: int) -> None:
+    """Set the max number of cached resolve outputs (evicts LRU-first)."""
+    global _CACHE_LIMIT
+    if limit < 1:
+        raise ValueError("cache limit must be >= 1")
+    _CACHE_LIMIT = limit
+    while len(_CACHE) > _CACHE_LIMIT:
+        _CACHE.popitem(last=False)
+
+
+def cache_info() -> Tuple[int, int]:
+    """(current entries, limit)."""
+    return len(_CACHE), _CACHE_LIMIT
 
 
 def seed_from_root(root: bytes) -> int:
@@ -36,6 +57,18 @@ def canonical_order(state: CRDTMergeState) -> List[str]:
     return sorted(state.visible())
 
 
+def _cfg_key(base: Any, cfg: Dict[str, Any]) -> str:
+    """Cache-key component for everything that shapes the output besides
+    the state: strategy knobs and the base model. Without this, two
+    resolves differing only in e.g. `t=` or `base=` would alias to one
+    entry and the second caller would get the first caller's pytree."""
+    parts = [f"{k}={cfg[k]!r}" for k in sorted(cfg)]
+    if base is not None:
+        from repro.core.hashing import pytree_digest
+        parts.append("base=" + pytree_digest(base).hex())
+    return ";".join(parts)
+
+
 def resolve(state: CRDTMergeState, strategy_name: str,
             base: Any = None, *, reduction: str = "fold",
             use_cache: bool = True, **cfg) -> Any:
@@ -43,8 +76,10 @@ def resolve(state: CRDTMergeState, strategy_name: str,
     ids = canonical_order(state)
     if not ids:
         raise ValueError("resolve() requires a non-empty visible set")
-    key = (state.merkle_root(), strategy_name, reduction)
+    key = (state.merkle_root(), strategy_name, reduction,
+           _cfg_key(base, cfg))
     if use_cache and key in _CACHE:
+        _CACHE.move_to_end(key)
         return _CACHE[key]
     contribs = [state.store[i] for i in ids]
     seed = seed_from_root(state.merkle_root())
@@ -52,6 +87,9 @@ def resolve(state: CRDTMergeState, strategy_name: str,
                          reduction=reduction, **cfg)
     if use_cache:
         _CACHE[key] = out
+        _CACHE.move_to_end(key)
+        while len(_CACHE) > _CACHE_LIMIT:
+            _CACHE.popitem(last=False)
     return out
 
 

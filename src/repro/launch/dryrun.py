@@ -179,6 +179,8 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         t_compile = time.time() - t0 - t_lower
 
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):   # jax<=0.4.x: list of per-device
+            ca = ca[0] if ca else {}        # dicts; 0.5+: a single dict
         ma = compiled.memory_analysis()
         hlo = compiled.as_text()
         # trip-count-aware cost model (XLA's cost_analysis counts while

@@ -1,0 +1,309 @@
+"""Merkle-partitioned anti-entropy reconciliation (digest-driven sync).
+
+The production sync primitive for state-based CRDTs (Preguiça, arXiv:
+1806.10254 §5): instead of pushing full states (O(state) per message) or
+trusting version-vector bookkeeping (delta_since — kept as the fast
+path), two replicas compare digests and ship exactly the symmetric
+difference of their OR-Set entries plus the store blobs the peer lacks.
+
+Session flow (initiator A, responder B), all messages via repro.net.wire:
+
+    A -> B  SyncReq(root_A, bits, vv_A)
+    B -> A  SyncDone(vv_B)                 if root_B == root_A
+            BucketsMsg(bucket digests)     otherwise
+    A -> B  BucketItemsMsg(A's entries in differing buckets, want=those)
+    B -> A  BucketItemsMsg(B's entries in want buckets)  [+ BlobReq]
+    A -> B  BlobReq(eids A's store lacks)
+    B -> A  BlobResp(blobs)                [symmetrically A -> B]
+
+The reconciliation root covers the *full* item set — every add entry and
+every tombstone, not just the visible elements — because sync must also
+propagate removals. Entry exchange is a CRDT join (set union + vv merge),
+so duplicated, reordered, or half-completed sessions are harmless; a
+lost message only means the remaining difference is picked up by the
+next session (anti-entropy is retried forever by design).
+
+A replica merges a peer's version vector only together with the peer's
+entries for every differing bucket (or on root equality), so the vv
+never claims knowledge ahead of the entry set and delta_since stays
+sound when both sync paths are mixed.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import Counter
+from typing import Any, Dict, FrozenSet, Iterable, List, Optional, Tuple
+
+from repro.core.delta import Delta, apply_delta
+from repro.core.merkle import bucket_digests, diff_buckets, pick_bucket_bits, \
+    prefix_bucket
+from repro.core.resolve import resolve
+from repro.core.state import AddEntry, CRDTMergeState
+from repro.core.version_vector import VersionVector
+from repro.net.wire import (BlobReq, BlobResp, BucketItemsMsg, BucketsMsg,
+                            DeltaMsg, Message, StateMsg, SyncDone, SyncReq,
+                            msg_to_delta, msg_to_state)
+
+Reply = Tuple[str, Message]
+
+
+# ---------------------------------------------------------------------------
+# Reconciliation items: hashable wire identities for OR-Set entries
+# ---------------------------------------------------------------------------
+
+
+def _add_hash(e: AddEntry) -> bytes:
+    return hashlib.sha256(
+        f"add|{e.element_id}|{e.tag}|{e.node}".encode()).digest()
+
+
+def _rm_hash(tag: str) -> bytes:
+    return hashlib.sha256(f"rm|{tag}".encode()).digest()
+
+
+def state_items(state: CRDTMergeState) -> Dict[bytes, Tuple[str, Any]]:
+    """hash -> ('add', AddEntry) | ('rm', tag) over the full item set."""
+    items: Dict[bytes, Tuple[str, Any]] = {}
+    for e in state.adds:
+        items[_add_hash(e)] = ("add", e)
+    for tag in state.removes:
+        items[_rm_hash(tag)] = ("rm", tag)
+    return items
+
+
+def _root_of_items(items: Dict[bytes, Tuple[str, Any]]) -> bytes:
+    h = hashlib.sha256(b"antientropy/root")
+    for item in sorted(items):
+        h.update(item)
+    return h.digest()
+
+
+def reconcile_root(state: CRDTMergeState) -> bytes:
+    """Digest of the full item set (adds ∪ tombstones), order-independent."""
+    return _root_of_items(state_items(state))
+
+
+def _entries_in_buckets(items: Dict[bytes, Tuple[str, Any]], bits: int,
+                        wanted: Iterable[int]
+                        ) -> Tuple[FrozenSet[AddEntry], FrozenSet[str]]:
+    wanted = set(wanted)
+    adds, removes = [], []
+    for h, (kind, val) in items.items():
+        if prefix_bucket(h, bits) in wanted:
+            (adds if kind == "add" else removes).append(val)
+    return frozenset(adds), frozenset(removes)
+
+
+_MAX_BITS = 16          # prefix_bucket's domain; wire allows a full u8
+
+
+def _bits_ok(bits: int) -> bool:
+    return 0 <= bits <= _MAX_BITS
+
+
+# ---------------------------------------------------------------------------
+# SyncNode
+# ---------------------------------------------------------------------------
+
+
+class SyncNode:
+    """A replica that speaks the full repro.net message set.
+
+    handle(msg) -> [(dst, reply), ...] is transport-agnostic: the
+    synchronous pump (transport.pump), the discrete-event simulator, and
+    loopback sockets all drive the same handler. Also accepts plain
+    StateMsg/DeltaMsg pushes, so the legacy gossip protocols and
+    anti-entropy can interoperate on one node.
+    """
+
+    def __init__(self, node_id: str,
+                 state: Optional[CRDTMergeState] = None,
+                 compress_blobs: bool = False):
+        self.node_id = node_id
+        self.state = state or CRDTMergeState()
+        self.compress_blobs = compress_blobs
+        self.known: Dict[str, dict] = {}      # peer -> last-sent vv (deltas)
+        self.merge_calls = 0
+        self.stats: Counter = Counter()
+        self._sid = 0
+        self._blob_inflight: set = set()   # eids requested, response pending
+        # item-hash memo: states are immutable, so the per-entry SHA-256
+        # pass is recomputed only when self.state is replaced (mirrors
+        # CRDTMergeState._root). Keyed by identity; holding the state ref
+        # keeps the id stable.
+        self._items_for: Optional[CRDTMergeState] = None
+        self._items: Dict[bytes, Tuple[str, Any]] = {}
+
+    # -- local updates -----------------------------------------------------
+
+    def contribute(self, contribution: Any,
+                   element_id: Optional[str] = None) -> None:
+        self.state = self.state.add(contribution, self.node_id,
+                                    element_id=element_id)
+
+    def retract(self, element_id: str) -> None:
+        self.state = self.state.remove(element_id, self.node_id)
+
+    def root(self) -> bytes:
+        return self.state.merkle_root()
+
+    def resolve(self, strategy: str, base=None, **cfg):
+        return resolve(self.state, strategy, base=base, **cfg)
+
+    def missing_blobs(self) -> Tuple[str, ...]:
+        """Visible elements whose payload the store lacks. Tombstoned
+        elements are excluded: resolve() never reads them, GC drops their
+        blobs, and requesting them forever would re-ship dead payloads in
+        every session (or never terminate once no peer retains them)."""
+        return tuple(sorted(self.state.visible() - self.state.store.keys()))
+
+    def items(self) -> Dict[bytes, Tuple[str, Any]]:
+        """Reconciliation items of the current state (memoized)."""
+        if self._items_for is not self.state:
+            self._items = state_items(self.state)
+            self._items_for = self.state
+        return self._items
+
+    # -- session initiation ------------------------------------------------
+
+    def begin_sync(self, peer: str) -> SyncReq:
+        """Start an anti-entropy session; send the returned msg to `peer`.
+
+        Sessions carry no server-side bookkeeping: the bucket bit-width
+        travels in every message that needs it (SyncReq, BucketsMsg,
+        BucketItemsMsg), so a replica can answer any session message
+        statelessly and a lost frame leaves nothing behind."""
+        self._sid += 1
+        # A lost BlobReq/BlobResp must not pin eids as in-flight forever:
+        # each new session makes every still-missing blob requestable.
+        self._blob_inflight.clear()
+        bits = pick_bucket_bits(len(self.items()))
+        self.stats["sessions_started"] += 1
+        return SyncReq(self.node_id, self._sid,
+                       _root_of_items(self.items()), bits, self.state.vv)
+
+    # -- message handling --------------------------------------------------
+
+    def handle(self, msg: Message) -> List[Reply]:
+        if isinstance(msg, StateMsg):
+            self.state = self.state.merge(msg_to_state(msg))
+            self.merge_calls += 1
+            return []
+        if isinstance(msg, DeltaMsg):
+            self.state = apply_delta(self.state, msg_to_delta(msg))
+            self.merge_calls += 1
+            return []
+        if isinstance(msg, SyncReq):
+            return self._on_sync_req(msg)
+        if isinstance(msg, BucketsMsg):
+            return self._on_buckets(msg)
+        if isinstance(msg, BucketItemsMsg):
+            return self._on_bucket_items(msg)
+        if isinstance(msg, BlobReq):
+            return self._on_blob_req(msg)
+        if isinstance(msg, BlobResp):
+            return self._on_blob_resp(msg)
+        if isinstance(msg, SyncDone):
+            self.state = CRDTMergeState(self.state.adds, self.state.removes,
+                                        self.state.vv.merge(msg.vv),
+                                        self.state.store)
+            self.stats["sessions_in_sync"] += 1
+            return self._maybe_blob_req(msg.sender, msg.sid)
+        raise TypeError(f"unknown message {type(msg)}")
+
+    def _protocol_error(self, what: str) -> List[Reply]:
+        """Semantically invalid (but well-framed) message: drop it. The
+        session silently dies; anti-entropy's retry-forever design makes
+        that safe, and the replica state is untouched."""
+        self.stats[f"protocol_error_{what}"] += 1
+        return []
+
+    # responder: digest comparison entry point
+    def _on_sync_req(self, msg: SyncReq) -> List[Reply]:
+        if not _bits_ok(msg.bits):
+            return self._protocol_error("bits")
+        if _root_of_items(self.items()) == msg.root:
+            # Item sets identical => safe to adopt the peer's vv; reply
+            # symmetrically and fetch any blobs we still lack.
+            self.state = CRDTMergeState(self.state.adds, self.state.removes,
+                                        self.state.vv.merge(msg.vv),
+                                        self.state.store)
+            done = SyncDone(self.node_id, msg.sid, self.state.vv)
+            return [(msg.sender, done)] + self._maybe_blob_req(
+                msg.sender, msg.sid)
+        digests = bucket_digests(list(self.items()), msg.bits)
+        return [(msg.sender,
+                 BucketsMsg(self.node_id, msg.sid, msg.bits, digests))]
+
+    # initiator: localise difference, ship our side, request theirs
+    def _on_buckets(self, msg: BucketsMsg) -> List[Reply]:
+        if not _bits_ok(msg.bits):
+            return self._protocol_error("bits")
+        mine = bucket_digests(list(self.items()), msg.bits)
+        differing = diff_buckets(mine, msg.digests)
+        self.stats["buckets_diffed"] += len(differing)
+        adds, removes = _entries_in_buckets(self.items(), msg.bits,
+                                            differing)
+        return [(msg.sender,
+                 BucketItemsMsg(self.node_id, msg.sid, msg.bits, adds,
+                                removes, self.state.vv,
+                                want=tuple(differing)))]
+
+    def _on_bucket_items(self, msg: BucketItemsMsg) -> List[Reply]:
+        if not _bits_ok(msg.bits):
+            return self._protocol_error("bits")
+        replies: List[Reply] = []
+        if msg.want:
+            adds, removes = _entries_in_buckets(self.items(), msg.bits,
+                                                msg.want)
+            replies.append((msg.sender,
+                            BucketItemsMsg(self.node_id, msg.sid, msg.bits,
+                                           adds, removes, self.state.vv)))
+        # Join the peer's entries (a payload-less delta). The peer sent
+        # everything it holds in every differing bucket, so after this
+        # join we dominate its item set there and merging its vv is sound.
+        self.state = apply_delta(self.state, Delta(msg.adds, msg.removes,
+                                                   msg.vv))
+        self.merge_calls += 1
+        self.stats["items_received"] += len(msg.adds) + len(msg.removes)
+        replies.extend(self._maybe_blob_req(msg.sender, msg.sid))
+        return replies
+
+    def _on_blob_req(self, msg: BlobReq) -> List[Reply]:
+        have = {eid: self.state.store[eid] for eid in msg.eids
+                if eid in self.state.store}
+        if not have:
+            return []
+        if self.compress_blobs:
+            from repro.core.compression import compress_tree
+            have = {eid: compress_tree(p) for eid, p in have.items()}
+        self.stats["blobs_served"] += len(have)
+        return [(msg.sender, BlobResp(self.node_id, msg.sid, have,
+                                      self.compress_blobs))]
+
+    def _on_blob_resp(self, msg: BlobResp) -> List[Reply]:
+        from repro.core.compression import CompressedTree, decompress_tree
+        store = dict(self.state.store)
+        for eid, payload in msg.payloads.items():
+            if eid not in store:
+                store[eid] = (decompress_tree(payload)
+                              if isinstance(payload, CompressedTree)
+                              else payload)
+        self.stats["blobs_received"] += len(msg.payloads)
+        self.state = CRDTMergeState(self.state.adds, self.state.removes,
+                                    self.state.vv, store)
+        # Whatever this response did not carry the peer simply lacks;
+        # make those eids requestable again in future sessions.
+        self._blob_inflight.clear()
+        return []
+
+    def _maybe_blob_req(self, peer: str, sid: int) -> List[Reply]:
+        # Skip eids with a response already pending (concurrent sessions
+        # in one gossip round would otherwise fetch every blob
+        # fanout-times over).
+        missing = tuple(e for e in self.missing_blobs()
+                        if e not in self._blob_inflight)
+        if not missing:
+            return []
+        self._blob_inflight.update(missing)
+        return [(peer, BlobReq(self.node_id, sid, missing))]

@@ -1,0 +1,279 @@
+"""Asynchronous network simulator: event loop with a virtual clock.
+
+Messages are encoded to wire frames at send time, experience per-link
+latency, bandwidth serialization delay, probabilistic loss, duplication,
+and reordering jitter, and are delivered to node handlers in virtual-time
+order. The event loop is deterministic for a fixed seed, so convergence
+under adversarial network conditions is reproducible — the scenario axis
+(loss/latency/partition sweeps) the in-process GossipNetwork cannot
+express.
+
+SimGossipNetwork ports the existing gossip protocols (all-pairs push,
+epidemic push) plus Merkle anti-entropy onto the simulator; every node
+is a repro.net.antientropy.SyncNode, so modes interoperate and all
+traffic crosses the codec.
+"""
+from __future__ import annotations
+
+import heapq
+import random
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.net.antientropy import SyncNode
+from repro.net.wire import (Message, decode_frame, delta_to_msg,
+                            encode_message, state_to_msg)
+
+Handler = Callable[["SimNetwork", str, str, Message], None]
+#          (net, dst, src, msg) -> None; may call net.send() to reply
+
+
+@dataclass
+class LinkSpec:
+    """Per-directed-link network conditions."""
+    latency: float = 0.001          # propagation delay, seconds
+    jitter: float = 0.0             # uniform extra delay in [0, jitter]
+    bandwidth: Optional[float] = None   # bytes/sec; None = unlimited
+    loss: float = 0.0               # P(frame silently dropped)
+    duplicate: float = 0.0          # P(frame delivered twice)
+    reorder: float = 0.0            # P(frame gets extra delay -> overtaken)
+    reorder_delay: float = 0.01     # the extra delay applied when reordered
+
+
+class SimNetwork:
+    """Discrete-event loop: heapq of (time, seq, dst, src, frame)."""
+
+    def __init__(self, seed: int = 0,
+                 default_link: Optional[LinkSpec] = None):
+        self.rng = random.Random(seed)
+        self.default_link = default_link or LinkSpec()
+        self.links: Dict[Tuple[str, str], LinkSpec] = {}
+        self.handlers: Dict[str, Handler] = {}
+        self.clock = 0.0
+        self._events: List[Tuple[float, int, str, str, bytes]] = []
+        self._seq = 0
+        self._link_busy_until: Dict[Tuple[str, str], float] = {}
+        self.partitions: Optional[List[Set[str]]] = None
+        # accounting
+        self.bytes_sent = 0
+        self.msgs_sent = 0
+        self.msgs_delivered = 0
+        self.msgs_dropped = 0
+        self.msgs_duplicated = 0
+
+    # ------------------------------------------------------------ topology
+
+    def register(self, node_id: str, handler: Handler) -> None:
+        self.handlers[node_id] = handler
+
+    def set_link(self, src: str, dst: str, spec: LinkSpec) -> None:
+        self.links[(src, dst)] = spec
+
+    def partition(self, groups: Sequence[Sequence[str]]) -> None:
+        self.partitions = [set(g) for g in groups]
+
+    def heal(self) -> None:
+        self.partitions = None
+
+    def _reachable(self, src: str, dst: str) -> bool:
+        if self.partitions is None:
+            return True
+        return any(src in g and dst in g for g in self.partitions)
+
+    # ------------------------------------------------------------- sending
+
+    def send(self, src: str, dst: str, msg: Message) -> int:
+        """Encode, apply link conditions, schedule delivery. Returns frame
+        bytes (counted even for frames the link then drops — they were
+        transmitted)."""
+        frame = encode_message(msg)
+        n = len(frame)
+        self.bytes_sent += n
+        self.msgs_sent += 1
+        if not self._reachable(src, dst):
+            self.msgs_dropped += 1
+            return n
+        spec = self.links.get((src, dst), self.default_link)
+        if spec.loss and self.rng.random() < spec.loss:
+            self.msgs_dropped += 1
+            return n
+        copies = 1
+        if spec.duplicate and self.rng.random() < spec.duplicate:
+            copies = 2
+            self.msgs_duplicated += 1
+        for _ in range(copies):
+            start = self.clock
+            if spec.bandwidth:
+                key = (src, dst)
+                start = max(start, self._link_busy_until.get(key, 0.0))
+                tx = n / spec.bandwidth
+                self._link_busy_until[key] = start + tx
+                start += tx
+            delay = spec.latency
+            if spec.jitter:
+                delay += self.rng.random() * spec.jitter
+            if spec.reorder and self.rng.random() < spec.reorder:
+                delay += spec.reorder_delay
+            self._seq += 1
+            heapq.heappush(self._events,
+                           (start + delay, self._seq, dst, src, frame))
+        return n
+
+    # ---------------------------------------------------------- event loop
+
+    def idle(self) -> bool:
+        return not self._events
+
+    def step(self) -> bool:
+        """Deliver the next event; returns False when the queue is empty."""
+        if not self._events:
+            return False
+        t, _seq, dst, src, frame = heapq.heappop(self._events)
+        self.clock = max(self.clock, t)
+        handler = self.handlers.get(dst)
+        if handler is not None:
+            msg, _ = decode_frame(frame)
+            self.msgs_delivered += 1
+            handler(self, dst, src, msg)
+        return True
+
+    def run(self, until: Optional[float] = None,
+            max_events: int = 10_000_000) -> int:
+        """Drain the event loop (optionally up to virtual time `until`)."""
+        n = 0
+        while self._events and n < max_events:
+            if until is not None and self._events[0][0] > until:
+                break
+            self.step()
+            n += 1
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Gossip protocols ported onto the simulator
+# ---------------------------------------------------------------------------
+
+
+class SimGossipNetwork:
+    """GossipNetwork's protocols over the simulator + wire codec.
+
+    mode:
+      * 'state'       — full-state push (the paper's prototype semantics);
+      * 'delta'       — vv-filtered delta push (paper §7.2 L1);
+      * 'antientropy' — Merkle-diff sessions (the production primitive).
+    """
+
+    def __init__(self, n: int, seed: int = 0, mode: str = "antientropy",
+                 link: Optional[LinkSpec] = None,
+                 compress_blobs: bool = False,
+                 delta_refresh_every: int = 4):
+        if mode not in ("state", "delta", "antientropy"):
+            raise ValueError(f"unknown mode {mode!r}")
+        self.mode = mode
+        # vv-delta push records known[peer] optimistically at send time,
+        # which is sound only on reliable channels: a dropped frame would
+        # otherwise suppress its entries forever (the receiver's vv never
+        # catches up, but the sender believes it has). Periodically
+        # forgetting the bookkeeping bounds that staleness — the resent
+        # delta is redundant on clean links, corrective on lossy ones.
+        # Merkle anti-entropy needs no such crutch; that is its point.
+        self.delta_refresh_every = delta_refresh_every
+        self._round = 0
+        self.net = SimNetwork(seed=seed, default_link=link)
+        self.rng = random.Random(seed ^ 0x5EED)
+        self.nodes: List[SyncNode] = [
+            SyncNode(f"node{i:03d}", compress_blobs=compress_blobs)
+            for i in range(n)]
+        self.by_id: Dict[str, SyncNode] = {x.node_id: x for x in self.nodes}
+        for node in self.nodes:
+            self.net.register(node.node_id, self._make_handler(node))
+
+    def _make_handler(self, node: SyncNode) -> Handler:
+        def handler(net: SimNetwork, _dst: str, _src: str,
+                    msg: Message) -> None:
+            for peer, reply in node.handle(msg):
+                net.send(node.node_id, peer, reply)
+        return handler
+
+    # ------------------------------------------------------------- seeding
+
+    def contribute_all(self, make_contribution) -> None:
+        """make_contribution(i) -> payload for node i."""
+        for i, node in enumerate(self.nodes):
+            node.contribute(make_contribution(i))
+
+    # -------------------------------------------------------------- rounds
+
+    def _push(self, src: SyncNode, dst: SyncNode) -> None:
+        if self.mode == "state":
+            self.net.send(src.node_id, dst.node_id,
+                          state_to_msg(src.state, src.node_id))
+        elif self.mode == "delta":
+            from repro.core.delta import delta_since
+            from repro.core.version_vector import VersionVector
+            seen = VersionVector(src.known.get(dst.node_id, {}))
+            d = delta_since(src.state, seen)
+            self.net.send(src.node_id, dst.node_id,
+                          delta_to_msg(d, src.node_id))
+            src.known[dst.node_id] = src.state.vv.to_dict()
+        else:
+            self.net.send(src.node_id, dst.node_id,
+                          src.begin_sync(dst.node_id))
+
+    def _start_round(self) -> None:
+        self._round += 1
+        if (self.mode == "delta" and self.delta_refresh_every
+                and self._round % self.delta_refresh_every == 0):
+            for node in self.nodes:
+                node.known.clear()
+
+    def all_pairs_round(self) -> None:
+        self._start_round()
+        n = len(self.nodes)
+        pairs = [(i, j) for i in range(n) for j in range(n) if i != j]
+        self.rng.shuffle(pairs)
+        for i, j in pairs:
+            self._push(self.nodes[i], self.nodes[j])
+        self.net.run()
+
+    def epidemic_round(self, fanout: int = 3) -> None:
+        self._start_round()
+        n = len(self.nodes)
+        for i in range(n):
+            peers = [j for j in range(n) if j != i]
+            for j in self.rng.sample(peers, min(fanout, len(peers))):
+                self._push(self.nodes[i], self.nodes[j])
+        self.net.run()
+
+    def run_epidemic(self, fanout: int = 3, max_rounds: int = 64,
+                     require_blobs: bool = False) -> int:
+        """Rounds until all roots agree (or max_rounds). Lossy links may
+        need several rounds — anti-entropy retries are the recovery
+        mechanism, not retransmission. With require_blobs, also gossip
+        until every store holds every referenced payload (metadata roots
+        converge first; blob shipping can trail by a round under loss)."""
+        for r in range(1, max_rounds + 1):
+            self.epidemic_round(fanout)
+            if self.converged(require_blobs=require_blobs):
+                return r
+        return max_rounds
+
+    # ---------------------------------------------------------- inspection
+
+    def roots(self) -> List[bytes]:
+        return [x.root() for x in self.nodes]
+
+    def converged(self, require_blobs: bool = False) -> bool:
+        rs = self.roots()
+        if not all(r == rs[0] for r in rs):
+            return False
+        if require_blobs:
+            return all(not x.missing_blobs() for x in self.nodes)
+        return True
+
+    def resolve_all(self, strategy: str, base=None, **cfg):
+        return [x.resolve(strategy, base=base, **cfg) for x in self.nodes]
+
+    @property
+    def bytes_sent(self) -> int:
+        return self.net.bytes_sent

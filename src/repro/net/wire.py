@@ -1,0 +1,629 @@
+"""Versioned binary wire format for CRDT gossip and anti-entropy.
+
+Frame layout (all integers big-endian):
+
+    magic   2B  b"RN"
+    version 1B  0x01
+    type    1B  message type tag (MSG_*)
+    length  4B  payload byte count
+    payload length bytes
+    crc32   4B  zlib.crc32 over the payload
+
+The payload is a canonical encoding of one message dataclass: sets are
+written in sorted order, dict keys sorted, so encoding is a pure function
+of the message value and `encode_message(decode_message(b)) == b` for any
+frame this module produced. Tensors travel as raw row-major bytes with a
+dtype/shape header; int8-quantized payloads (core.compression) travel as
+q-bytes + fp32 scale and reconstruct bit-identically on every replica,
+preserving CRDT determinism (paper Assumption 10) across the network
+boundary.
+
+Pytree payload values support dict/list/tuple containers and
+tensor / CompressedLeaf / scalar leaves — the shapes model contributions
+actually take. Unknown structure raises WireError at encode time rather
+than producing frames a peer cannot parse.
+"""
+from __future__ import annotations
+
+import struct
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, FrozenSet, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.compression import (CompressedLeaf, CompressedTree,
+                                    compressed_tree_from_structure,
+                                    compressed_tree_to_structure,
+                                    decompress_tree)
+from repro.core.delta import Delta
+from repro.core.state import AddEntry, CRDTMergeState
+from repro.core.version_vector import VersionVector
+
+MAGIC = b"RN"
+VERSION = 1
+HEADER = struct.Struct(">2sBBI")        # magic, version, type, payload len
+TRAILER = struct.Struct(">I")           # crc32
+FRAME_OVERHEAD = HEADER.size + TRAILER.size
+
+# message type tags
+MSG_STATE = 0x01
+MSG_DELTA = 0x02
+MSG_SYNC_REQ = 0x10
+MSG_BUCKETS = 0x11
+MSG_BUCKET_ITEMS = 0x12
+MSG_BLOB_REQ = 0x13
+MSG_BLOB_RESP = 0x14
+MSG_SYNC_DONE = 0x15
+
+# value (pytree) node tags
+_T_DICT = 0x01
+_T_LIST = 0x02
+_T_TUPLE = 0x03
+_T_TENSOR = 0x04
+_T_QLEAF = 0x05
+_T_CTREE = 0x06
+_T_NONE = 0x07
+_T_FLOAT = 0x08
+_T_INT = 0x09
+_T_STR = 0x0A
+_T_BOOL = 0x0B
+
+
+class WireError(ValueError):
+    """Malformed frame, bad checksum, or unsupported value."""
+
+
+# ---------------------------------------------------------------------------
+# Messages
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StateMsg:
+    """Full-state push: complete (A, R, V) metadata plus store payloads."""
+    sender: str
+    adds: FrozenSet[AddEntry]
+    removes: FrozenSet[str]
+    vv: VersionVector
+    payloads: Dict[str, Any] = field(default_factory=dict)
+
+    type = MSG_STATE
+
+
+@dataclass(frozen=True)
+class DeltaMsg:
+    """Delta-state push (vv-filtered or bucket-selected entries)."""
+    sender: str
+    adds: FrozenSet[AddEntry]
+    removes: FrozenSet[str]
+    vv: VersionVector
+    payloads: Dict[str, Any] = field(default_factory=dict)
+    compressed: bool = False
+
+    type = MSG_DELTA
+
+
+@dataclass(frozen=True)
+class SyncReq:
+    """Anti-entropy round 1: initiator's reconciliation root + bucketing."""
+    sender: str
+    sid: int
+    root: bytes
+    bits: int
+    vv: VersionVector
+
+    type = MSG_SYNC_REQ
+
+
+@dataclass(frozen=True)
+class BucketsMsg:
+    """Round 2: responder's sparse bucket digest vector (roots differ)."""
+    sender: str
+    sid: int
+    bits: int
+    digests: Dict[int, bytes]
+
+    type = MSG_BUCKETS
+
+
+@dataclass(frozen=True)
+class BucketItemsMsg:
+    """Rounds 3/4: entries in differing buckets; `want` asks the peer to
+    reply with its entries for those bucket indices (empty = no reply).
+    Carries the session's bucket bit-width so the receiver needs no
+    session bookkeeping to interpret `want`."""
+    sender: str
+    sid: int
+    bits: int
+    adds: FrozenSet[AddEntry]
+    removes: FrozenSet[str]
+    vv: VersionVector
+    want: Tuple[int, ...] = ()
+
+    type = MSG_BUCKET_ITEMS
+
+
+@dataclass(frozen=True)
+class BlobReq:
+    """Request store payloads the requester's store lacks."""
+    sender: str
+    sid: int
+    eids: Tuple[str, ...]
+
+    type = MSG_BLOB_REQ
+
+
+@dataclass(frozen=True)
+class BlobResp:
+    sender: str
+    sid: int
+    payloads: Dict[str, Any] = field(default_factory=dict)
+    compressed: bool = False
+
+    type = MSG_BLOB_RESP
+
+
+@dataclass(frozen=True)
+class SyncDone:
+    """Roots matched (or session closed); carries vv for metadata merge."""
+    sender: str
+    sid: int
+    vv: VersionVector
+
+    type = MSG_SYNC_DONE
+
+
+Message = Any  # any of the dataclasses above
+
+
+# ---------------------------------------------------------------------------
+# Primitive encoders
+# ---------------------------------------------------------------------------
+
+
+def _p_u8(buf: bytearray, v: int) -> None:
+    buf += struct.pack(">B", v)
+
+
+def _p_u16(buf: bytearray, v: int) -> None:
+    buf += struct.pack(">H", v)
+
+
+def _p_u32(buf: bytearray, v: int) -> None:
+    buf += struct.pack(">I", v)
+
+
+def _p_u64(buf: bytearray, v: int) -> None:
+    buf += struct.pack(">Q", v)
+
+
+def _p_bytes(buf: bytearray, b: bytes) -> None:
+    _p_u32(buf, len(b))
+    buf += b
+
+
+def _p_str(buf: bytearray, s: str) -> None:
+    _p_bytes(buf, s.encode("utf-8"))
+
+
+class _Reader:
+    __slots__ = ("buf", "pos")
+
+    def __init__(self, buf: bytes, pos: int = 0):
+        self.buf = buf
+        self.pos = pos
+
+    def take(self, n: int) -> bytes:
+        if self.pos + n > len(self.buf):
+            raise WireError("truncated payload")
+        b = self.buf[self.pos:self.pos + n]
+        self.pos += n
+        return b
+
+    def u8(self) -> int:
+        return self.take(1)[0]
+
+    def u16(self) -> int:
+        return struct.unpack(">H", self.take(2))[0]
+
+    def u32(self) -> int:
+        return struct.unpack(">I", self.take(4))[0]
+
+    def u64(self) -> int:
+        return struct.unpack(">Q", self.take(8))[0]
+
+    def bytes_(self) -> bytes:
+        return self.take(self.u32())
+
+    def str_(self) -> str:
+        return self.bytes_().decode("utf-8")
+
+
+# ---------------------------------------------------------------------------
+# Pytree value codec
+# ---------------------------------------------------------------------------
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _is_tensor(v: Any) -> bool:
+    return isinstance(v, np.ndarray) or type(v).__module__.startswith(
+        ("jax", "jaxlib"))
+
+
+def _enc_tensor_header(buf: bytearray, dtype: str,
+                       shape: Tuple[int, ...]) -> None:
+    _p_str(buf, dtype)
+    _p_u8(buf, len(shape))
+    for d in shape:
+        _p_u32(buf, d)
+
+
+def _dec_tensor_header(r: _Reader) -> Tuple[str, Tuple[int, ...]]:
+    dtype = r.str_()
+    shape = tuple(r.u32() for _ in range(r.u8()))
+    return dtype, shape
+
+
+def encode_value(buf: bytearray, v: Any) -> None:
+    """Canonical recursive pytree encoding (dict keys sorted)."""
+    if isinstance(v, CompressedTree):
+        _p_u8(buf, _T_CTREE)
+        encode_value(buf, compressed_tree_to_structure(v))
+    elif isinstance(v, CompressedLeaf):
+        _p_u8(buf, _T_QLEAF)
+        _enc_tensor_header(buf, v.dtype, tuple(v.shape))
+        buf += np.float32(v.scale).tobytes()
+        _p_bytes(buf, np.ascontiguousarray(v.q).tobytes())
+    elif isinstance(v, dict):
+        _p_u8(buf, _T_DICT)
+        _p_u32(buf, len(v))
+        for k in sorted(v):
+            if not isinstance(k, str):
+                raise WireError(f"dict keys must be str, got {type(k)}")
+            _p_str(buf, k)
+            encode_value(buf, v[k])
+    elif isinstance(v, list):
+        _p_u8(buf, _T_LIST)
+        _p_u32(buf, len(v))
+        for x in v:
+            encode_value(buf, x)
+    elif isinstance(v, tuple):
+        _p_u8(buf, _T_TUPLE)
+        _p_u32(buf, len(v))
+        for x in v:
+            encode_value(buf, x)
+    elif isinstance(v, bool):               # before int (bool is int)
+        _p_u8(buf, _T_BOOL)
+        _p_u8(buf, 1 if v else 0)
+    elif isinstance(v, int) and not isinstance(v, np.generic):
+        _p_u8(buf, _T_INT)
+        buf += struct.pack(">q", v)
+    elif isinstance(v, float):
+        _p_u8(buf, _T_FLOAT)
+        buf += struct.pack(">d", v)
+    elif isinstance(v, str):
+        _p_u8(buf, _T_STR)
+        _p_str(buf, v)
+    elif v is None:
+        _p_u8(buf, _T_NONE)
+    elif _is_tensor(v) or isinstance(v, np.generic):
+        a = np.asarray(v)
+        _p_u8(buf, _T_TENSOR)
+        _enc_tensor_header(buf, str(a.dtype), a.shape)
+        _p_bytes(buf, np.ascontiguousarray(a).tobytes())
+    else:
+        raise WireError(f"unsupported payload value: {type(v)}")
+
+
+def decode_value(r: _Reader) -> Any:
+    tag = r.u8()
+    if tag == _T_CTREE:
+        return compressed_tree_from_structure(decode_value(r))
+    if tag == _T_QLEAF:
+        dtype, shape = _dec_tensor_header(r)
+        scale = np.frombuffer(r.take(4), np.float32)[0]
+        q = np.frombuffer(r.bytes_(), np.int8).reshape(shape).copy()
+        return CompressedLeaf(q, scale, shape, dtype)
+    if tag == _T_DICT:
+        return {r.str_(): decode_value(r) for _ in range(r.u32())}
+    if tag == _T_LIST:
+        return [decode_value(r) for _ in range(r.u32())]
+    if tag == _T_TUPLE:
+        return tuple(decode_value(r) for _ in range(r.u32()))
+    if tag == _T_TENSOR:
+        dtype, shape = _dec_tensor_header(r)
+        a = np.frombuffer(r.bytes_(), _np_dtype(dtype)).reshape(shape)
+        import jax.numpy as jnp
+        return jnp.asarray(a)
+    if tag == _T_BOOL:
+        return bool(r.u8())
+    if tag == _T_INT:
+        return struct.unpack(">q", r.take(8))[0]
+    if tag == _T_FLOAT:
+        return struct.unpack(">d", r.take(8))[0]
+    if tag == _T_STR:
+        return r.str_()
+    if tag == _T_NONE:
+        return None
+    raise WireError(f"unknown value tag 0x{tag:02x}")
+
+
+# ---------------------------------------------------------------------------
+# Component codecs
+# ---------------------------------------------------------------------------
+
+
+def _enc_adds(buf: bytearray, adds: FrozenSet[AddEntry]) -> None:
+    _p_u32(buf, len(adds))
+    for e in sorted(adds):
+        _p_str(buf, e.element_id)
+        _p_str(buf, e.tag)
+        _p_str(buf, e.node)
+
+
+def _dec_adds(r: _Reader) -> FrozenSet[AddEntry]:
+    return frozenset(AddEntry(r.str_(), r.str_(), r.str_())
+                     for _ in range(r.u32()))
+
+
+def _enc_removes(buf: bytearray, removes: FrozenSet[str]) -> None:
+    _p_u32(buf, len(removes))
+    for tag in sorted(removes):
+        _p_str(buf, tag)
+
+
+def _dec_removes(r: _Reader) -> FrozenSet[str]:
+    return frozenset(r.str_() for _ in range(r.u32()))
+
+
+def _enc_vv(buf: bytearray, vv: VersionVector) -> None:
+    clocks = {k: v for k, v in vv.to_dict().items() if v}
+    _p_u32(buf, len(clocks))
+    for k in sorted(clocks):
+        _p_str(buf, k)
+        _p_u64(buf, clocks[k])
+
+
+def _dec_vv(r: _Reader) -> VersionVector:
+    return VersionVector({r.str_(): r.u64() for _ in range(r.u32())})
+
+
+def _enc_payloads(buf: bytearray, payloads: Dict[str, Any]) -> None:
+    _p_u32(buf, len(payloads))
+    for eid in sorted(payloads):
+        _p_str(buf, eid)
+        encode_value(buf, payloads[eid])
+
+
+def _dec_payloads(r: _Reader) -> Dict[str, Any]:
+    return {r.str_(): decode_value(r) for _ in range(r.u32())}
+
+
+# ---------------------------------------------------------------------------
+# Message codecs
+# ---------------------------------------------------------------------------
+
+
+def _enc_state(buf: bytearray, m: StateMsg) -> None:
+    _p_str(buf, m.sender)
+    _enc_adds(buf, m.adds)
+    _enc_removes(buf, m.removes)
+    _enc_vv(buf, m.vv)
+    _enc_payloads(buf, m.payloads)
+
+
+def _dec_state(r: _Reader) -> StateMsg:
+    return StateMsg(r.str_(), _dec_adds(r), _dec_removes(r), _dec_vv(r),
+                    _dec_payloads(r))
+
+
+def _enc_delta(buf: bytearray, m: DeltaMsg) -> None:
+    _p_str(buf, m.sender)
+    _p_u8(buf, 1 if m.compressed else 0)
+    _enc_adds(buf, m.adds)
+    _enc_removes(buf, m.removes)
+    _enc_vv(buf, m.vv)
+    _enc_payloads(buf, m.payloads)
+
+
+def _dec_delta(r: _Reader) -> DeltaMsg:
+    sender = r.str_()
+    compressed = bool(r.u8())
+    return DeltaMsg(sender, _dec_adds(r), _dec_removes(r), _dec_vv(r),
+                    _dec_payloads(r), compressed)
+
+
+def _enc_sync_req(buf: bytearray, m: SyncReq) -> None:
+    _p_str(buf, m.sender)
+    _p_u64(buf, m.sid)
+    _p_bytes(buf, m.root)
+    _p_u8(buf, m.bits)
+    _enc_vv(buf, m.vv)
+
+
+def _dec_sync_req(r: _Reader) -> SyncReq:
+    return SyncReq(r.str_(), r.u64(), r.bytes_(), r.u8(), _dec_vv(r))
+
+
+def _enc_buckets(buf: bytearray, m: BucketsMsg) -> None:
+    _p_str(buf, m.sender)
+    _p_u64(buf, m.sid)
+    _p_u8(buf, m.bits)
+    _p_u32(buf, len(m.digests))
+    for idx in sorted(m.digests):
+        _p_u16(buf, idx)
+        _p_bytes(buf, m.digests[idx])
+
+
+def _dec_buckets(r: _Reader) -> BucketsMsg:
+    sender, sid, bits = r.str_(), r.u64(), r.u8()
+    digests = {r.u16(): r.bytes_() for _ in range(r.u32())}
+    return BucketsMsg(sender, sid, bits, digests)
+
+
+def _enc_bucket_items(buf: bytearray, m: BucketItemsMsg) -> None:
+    _p_str(buf, m.sender)
+    _p_u64(buf, m.sid)
+    _p_u8(buf, m.bits)
+    _enc_adds(buf, m.adds)
+    _enc_removes(buf, m.removes)
+    _enc_vv(buf, m.vv)
+    _p_u32(buf, len(m.want))
+    for idx in sorted(m.want):
+        _p_u16(buf, idx)
+
+
+def _dec_bucket_items(r: _Reader) -> BucketItemsMsg:
+    sender, sid, bits = r.str_(), r.u64(), r.u8()
+    adds, removes, vv = _dec_adds(r), _dec_removes(r), _dec_vv(r)
+    want = tuple(r.u16() for _ in range(r.u32()))
+    return BucketItemsMsg(sender, sid, bits, adds, removes, vv, want)
+
+
+def _enc_blob_req(buf: bytearray, m: BlobReq) -> None:
+    _p_str(buf, m.sender)
+    _p_u64(buf, m.sid)
+    _p_u32(buf, len(m.eids))
+    for eid in sorted(m.eids):
+        _p_str(buf, eid)
+
+
+def _dec_blob_req(r: _Reader) -> BlobReq:
+    sender, sid = r.str_(), r.u64()
+    eids = tuple(r.str_() for _ in range(r.u32()))
+    return BlobReq(sender, sid, eids)
+
+
+def _enc_blob_resp(buf: bytearray, m: BlobResp) -> None:
+    _p_str(buf, m.sender)
+    _p_u64(buf, m.sid)
+    _p_u8(buf, 1 if m.compressed else 0)
+    _enc_payloads(buf, m.payloads)
+
+
+def _dec_blob_resp(r: _Reader) -> BlobResp:
+    sender, sid = r.str_(), r.u64()
+    compressed = bool(r.u8())
+    return BlobResp(sender, sid, _dec_payloads(r), compressed)
+
+
+def _enc_sync_done(buf: bytearray, m: SyncDone) -> None:
+    _p_str(buf, m.sender)
+    _p_u64(buf, m.sid)
+    _enc_vv(buf, m.vv)
+
+
+def _dec_sync_done(r: _Reader) -> SyncDone:
+    return SyncDone(r.str_(), r.u64(), _dec_vv(r))
+
+
+_ENCODERS = {
+    MSG_STATE: _enc_state, MSG_DELTA: _enc_delta,
+    MSG_SYNC_REQ: _enc_sync_req, MSG_BUCKETS: _enc_buckets,
+    MSG_BUCKET_ITEMS: _enc_bucket_items, MSG_BLOB_REQ: _enc_blob_req,
+    MSG_BLOB_RESP: _enc_blob_resp, MSG_SYNC_DONE: _enc_sync_done,
+}
+_DECODERS = {
+    MSG_STATE: _dec_state, MSG_DELTA: _dec_delta,
+    MSG_SYNC_REQ: _dec_sync_req, MSG_BUCKETS: _dec_buckets,
+    MSG_BUCKET_ITEMS: _dec_bucket_items, MSG_BLOB_REQ: _dec_blob_req,
+    MSG_BLOB_RESP: _dec_blob_resp, MSG_SYNC_DONE: _dec_sync_done,
+}
+
+
+# ---------------------------------------------------------------------------
+# Framing
+# ---------------------------------------------------------------------------
+
+
+def encode_message(msg: Message) -> bytes:
+    """Message dataclass -> framed bytes."""
+    mtype = getattr(msg, "type", None)
+    enc = _ENCODERS.get(mtype)
+    if enc is None:
+        raise WireError(f"not a wire message: {type(msg)}")
+    payload = bytearray()
+    enc(payload, msg)
+    return (HEADER.pack(MAGIC, VERSION, mtype, len(payload))
+            + bytes(payload)
+            + TRAILER.pack(zlib.crc32(bytes(payload)) & 0xFFFFFFFF))
+
+
+def decode_frame(buf: bytes, pos: int = 0) -> Tuple[Message, int]:
+    """Decode one frame starting at `pos`; returns (message, next_pos).
+
+    Validates magic, version, length, and checksum; raises WireError on
+    any mismatch so corrupted frames are rejected, never half-applied.
+    """
+    if len(buf) - pos < HEADER.size:
+        raise WireError("truncated header")
+    magic, version, mtype, plen = HEADER.unpack_from(buf, pos)
+    if magic != MAGIC:
+        raise WireError(f"bad magic {magic!r}")
+    if version != VERSION:
+        raise WireError(f"unsupported wire version {version}")
+    body_start = pos + HEADER.size
+    body_end = body_start + plen
+    if len(buf) < body_end + TRAILER.size:
+        raise WireError("truncated frame")
+    payload = buf[body_start:body_end]
+    (crc,) = TRAILER.unpack_from(buf, body_end)
+    if crc != (zlib.crc32(payload) & 0xFFFFFFFF):
+        raise WireError("checksum mismatch")
+    dec = _DECODERS.get(mtype)
+    if dec is None:
+        raise WireError(f"unknown message type 0x{mtype:02x}")
+    r = _Reader(payload)
+    msg = dec(r)
+    if r.pos != len(payload):
+        raise WireError(f"{len(payload) - r.pos} trailing payload bytes")
+    return msg, body_end + TRAILER.size
+
+
+def decode_message(buf: bytes) -> Message:
+    """Decode exactly one frame occupying the whole buffer."""
+    msg, end = decode_frame(buf)
+    if end != len(buf):
+        raise WireError(f"{len(buf) - end} trailing bytes after frame")
+    return msg
+
+
+def frame_size(msg: Message) -> int:
+    return len(encode_message(msg))
+
+
+# ---------------------------------------------------------------------------
+# State/Delta conversions
+# ---------------------------------------------------------------------------
+
+
+def state_to_msg(state: CRDTMergeState, sender: str) -> StateMsg:
+    return StateMsg(sender, state.adds, state.removes, state.vv,
+                    dict(state.store))
+
+
+def msg_to_state(msg: StateMsg) -> CRDTMergeState:
+    # Compressed blobs decompress on arrival: the store always holds the
+    # dequantized wire-format tensors (content identity, Assumption 11).
+    store = {eid: (decompress_tree(p) if isinstance(p, CompressedTree)
+                   else p)
+             for eid, p in msg.payloads.items()}
+    return CRDTMergeState(msg.adds, msg.removes, msg.vv, store)
+
+
+def delta_to_msg(delta: Delta, sender: str) -> DeltaMsg:
+    return DeltaMsg(sender, delta.adds, delta.removes, delta.vv,
+                    dict(delta.payloads), delta.compressed)
+
+
+def msg_to_delta(msg: DeltaMsg) -> Delta:
+    return Delta(msg.adds, msg.removes, msg.vv, dict(msg.payloads),
+                 msg.compressed)

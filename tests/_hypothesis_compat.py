@@ -1,0 +1,36 @@
+"""Degrade gracefully when hypothesis is absent.
+
+The container that runs tier-1 may not have hypothesis installed (it is
+declared in requirements.txt for CI). Importing `given`, `settings`, and
+`st` from here instead of from hypothesis keeps every module collectable
+either way: with hypothesis present these are re-exports; without it,
+property tests become individually-skipped tests (so the plain unit
+tests in the same module still run) and strategy construction at module
+scope returns inert placeholders.
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """st.* calls return inert placeholders; never executed because
+        @given marks the test skipped."""
+
+        def __getattr__(self, name):
+            def make(*args, **kwargs):
+                return None
+            return make
+
+    st = _StrategyStub()
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco

@@ -3,7 +3,7 @@ epidemic gossip, delta-state equivalence, trust gating."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.delta import apply_delta, delta_since
 from repro.core.gossip import GossipNetwork

@@ -2,7 +2,7 @@
 import hashlib
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.merkle import merkle_levels, merkle_proof, merkle_root, \
     verify_proof

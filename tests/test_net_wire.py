@@ -1,0 +1,207 @@
+"""Wire codec: framing, checksums, and round-trip fidelity.
+
+The load-bearing property is canonical round-tripping: for any message m
+produced by this codec, decode(encode(m)) reconstructs an equal message
+and encode(decode(encode(m))) == encode(m) byte-for-byte — states,
+deltas, and tensor frames included (paper Assumption 10 across the
+network boundary).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.compression import (CompressedTree, compress_tree,
+                                    decompress_tree)
+from repro.core.delta import delta_since
+from repro.core.state import CRDTMergeState
+from repro.core.version_vector import VersionVector
+from repro.net.wire import (BlobReq, BlobResp, BucketItemsMsg, BucketsMsg,
+                            DeltaMsg, StateMsg, SyncDone, SyncReq, WireError,
+                            decode_frame, decode_message, delta_to_msg,
+                            encode_message, msg_to_delta, msg_to_state,
+                            state_to_msg)
+
+
+def tree_equal(a, b) -> bool:
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    if ta != tb or len(la) != len(lb):
+        return False
+    for x, y in zip(la, lb):
+        if isinstance(x, (str, bool)) or isinstance(y, (str, bool)):
+            if x != y:
+                return False
+        elif not (bool(jnp.array_equal(x, y))
+                  and jnp.asarray(x).dtype == jnp.asarray(y).dtype):
+            return False
+    return True
+
+
+def payloads_equal(pa, pb) -> bool:
+    if set(pa) != set(pb):
+        return False
+    for k in pa:
+        x, y = pa[k], pb[k]
+        if isinstance(x, CompressedTree) != isinstance(y, CompressedTree):
+            return False
+        if isinstance(x, CompressedTree):
+            x, y = decompress_tree(x), decompress_tree(y)
+        if not tree_equal(x, y):
+            return False
+    return True
+
+
+def _rand_state(seed: int, n_adds: int = 3, removes: bool = True,
+                nested: bool = False) -> CRDTMergeState:
+    rng = np.random.default_rng(seed)
+    s = CRDTMergeState()
+    for i in range(n_adds):
+        if nested:
+            payload = {"w": jnp.asarray(rng.standard_normal((4, 4)),
+                                        jnp.float32),
+                       "b": [jnp.asarray(rng.standard_normal(3),
+                                         jnp.float32),
+                             {"s": jnp.asarray(rng.standard_normal(2),
+                                               jnp.bfloat16)}]}
+        else:
+            payload = jnp.asarray(rng.standard_normal((5, 5)), jnp.float32)
+        s = s.add(payload, node=f"n{i % 3}")
+    if removes and s.visible():
+        s = s.remove(sorted(s.visible())[0], "n0")
+    return s
+
+
+def roundtrip(msg):
+    frame = encode_message(msg)
+    out = decode_message(frame)
+    assert encode_message(out) == frame          # canonical re-encode
+    return out
+
+
+# ---------------------------------------------------------------- framing
+
+
+def test_frame_rejects_corruption():
+    msg = SyncReq("a", 1, b"\x00" * 32, 4, VersionVector({"a": 1}))
+    frame = bytearray(encode_message(msg))
+    frame[len(frame) // 2] ^= 0xFF               # flip a payload byte
+    with pytest.raises(WireError):
+        decode_message(bytes(frame))
+
+
+def test_frame_rejects_bad_magic_version_truncation():
+    frame = encode_message(SyncDone("a", 1, VersionVector()))
+    with pytest.raises(WireError):
+        decode_message(b"XX" + frame[2:])
+    with pytest.raises(WireError):
+        decode_message(frame[:1])
+    with pytest.raises(WireError):
+        decode_message(frame[:-2])
+    bad_version = frame[:2] + b"\x7f" + frame[3:]
+    with pytest.raises(WireError):
+        decode_message(bad_version)
+
+
+def test_multiple_frames_in_one_buffer():
+    m1 = SyncDone("a", 1, VersionVector({"a": 2}))
+    m2 = BlobReq("b", 2, ("e1", "e2"))
+    buf = encode_message(m1) + encode_message(m2)
+    out1, pos = decode_frame(buf)
+    out2, end = decode_frame(buf, pos)
+    assert out1 == m1 and out2 == m2 and end == len(buf)
+
+
+# ----------------------------------------------------- state/delta frames
+
+
+def test_state_roundtrip_nested_pytrees():
+    s = _rand_state(0, nested=True)
+    msg = state_to_msg(s, "node000")
+    out = roundtrip(msg)
+    assert (out.adds, out.removes, out.vv) == (msg.adds, msg.removes, msg.vv)
+    assert payloads_equal(out.payloads, msg.payloads)
+    s2 = msg_to_state(out)
+    assert s2 == s
+    assert s2.merkle_root() == s.merkle_root()
+
+
+def test_delta_roundtrip_plain_and_compressed():
+    s = _rand_state(1, n_adds=4, nested=True)
+    for compress in (False, True):
+        d = delta_since(s, VersionVector(), compress=compress)
+        msg = delta_to_msg(d, "node001")
+        out = roundtrip(msg)
+        assert out.compressed == compress
+        d2 = msg_to_delta(out)
+        assert d2.adds == d.adds and d2.removes == d.removes
+        assert payloads_equal(d2.payloads, d.payloads)
+
+
+def test_compressed_payload_bit_identical_after_wire():
+    """Quantized frames must reconstruct to the same bytes everywhere."""
+    rng = np.random.default_rng(2)
+    tree = {"a": jnp.asarray(rng.standard_normal((16, 16)) * 3, jnp.float32)}
+    ct = compress_tree(tree)
+    d = delta_since(_rand_state(2), VersionVector())
+    msg = DeltaMsg("x", d.adds, d.removes, d.vv, {"e": ct}, True)
+    out = roundtrip(msg)
+    local = decompress_tree(ct)
+    remote = decompress_tree(out.payloads["e"])
+    assert np.asarray(local["a"]).tobytes() == np.asarray(remote["a"]).tobytes()
+
+
+def test_tensor_dtypes_survive():
+    vals = {"f32": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "i32": jnp.arange(4, dtype=jnp.int32),
+            "bf16": jnp.asarray([1.5, -2.25], jnp.bfloat16),
+            "scalars": (1, 2.5, "tag", None, True)}
+    msg = BlobResp("a", 1, {"e": vals})
+    out = roundtrip(msg)
+    assert tree_equal(out.payloads["e"], vals)
+
+
+# ----------------------------------------------------------- sync frames
+
+
+def test_sync_message_roundtrips():
+    vv = VersionVector({"a": 3, "b": 1})
+    msgs = [
+        SyncReq("a", 7, b"\x01" * 32, 5, vv),
+        BucketsMsg("b", 7, 5, {0: b"\x02" * 32, 9: b"\x03" * 32}),
+        BucketItemsMsg("a", 7, 5, frozenset(_rand_state(3).adds),
+                       frozenset({"t1", "t2"}), vv, want=(1, 5, 9)),
+        BlobReq("b", 7, ("e1",)),
+        BlobResp("a", 7, {"e1": jnp.ones((2, 2), jnp.float32)}),
+        SyncDone("b", 7, vv),
+    ]
+    for m in msgs:
+        out = roundtrip(m)
+        if not isinstance(m, BlobResp):
+            assert out == m
+
+
+# ------------------------------------------------- seeded property sweep
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_roundtrip_sweep_states_and_deltas(seed):
+    s = _rand_state(seed, n_adds=1 + seed % 4, removes=bool(seed % 2),
+                    nested=bool(seed % 3))
+    roundtrip(state_to_msg(s, f"node{seed:03d}"))
+    seen = VersionVector({"n0": seed % 2})
+    roundtrip(delta_to_msg(delta_since(s, seen, compress=bool(seed % 2)),
+                           f"node{seed:03d}"))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_roundtrip_property(seed):
+    rng = np.random.default_rng(seed)
+    s = _rand_state(seed, n_adds=int(rng.integers(1, 5)),
+                    removes=bool(rng.integers(2)),
+                    nested=bool(rng.integers(2)))
+    msg = state_to_msg(s, "p")
+    out = roundtrip(msg)
+    assert msg_to_state(out).merkle_root() == s.merkle_root()

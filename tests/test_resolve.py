@@ -7,9 +7,9 @@ import pytest
 
 from conftest import make_contribs
 from repro.core.resolve import (IncrementalMean, apply_strategy,
-                                canonical_order, clear_cache,
+                                cache_info, canonical_order, clear_cache,
                                 hierarchical_resolve, resolve,
-                                seed_from_root)
+                                seed_from_root, set_cache_limit)
 from repro.core.state import CRDTMergeState
 from repro.strategies import get_strategy
 
@@ -97,6 +97,45 @@ def test_resolve_cache_hits():
     r1 = resolve(s, "weight_average")
     r2 = resolve(s, "weight_average")
     assert r1 is r2                     # cached object
+
+
+def test_resolve_cache_is_bounded_lru():
+    """The cache evicts least-recently-used entries at the limit, and an
+    evicted key recomputes a byte-identical pytree."""
+    clear_cache()
+    set_cache_limit(3)
+    try:
+        states = [_state_with(make_contribs(2, seed=s)) for s in range(5)]
+        outs = [resolve(s, "weight_average") for s in states]
+        assert cache_info() == (3, 3)
+        # oldest two evicted; newest three still hits
+        for s, out in zip(states[2:], outs[2:]):
+            assert resolve(s, "weight_average") is out
+        recomputed = resolve(states[0], "weight_average")
+        assert recomputed is not outs[0]            # evicted => recomputed
+        assert np.asarray(recomputed).tobytes() == \
+            np.asarray(outs[0]).tobytes()           # but byte-identical
+    finally:
+        set_cache_limit(64)
+        clear_cache()
+
+
+def test_resolve_cache_lru_recency_order():
+    clear_cache()
+    set_cache_limit(2)
+    try:
+        s1 = _state_with(make_contribs(2, seed=10))
+        s2 = _state_with(make_contribs(2, seed=11))
+        s3 = _state_with(make_contribs(2, seed=12))
+        r1 = resolve(s1, "weight_average")
+        resolve(s2, "weight_average")
+        assert resolve(s1, "weight_average") is r1   # refresh s1's recency
+        resolve(s3, "weight_average")                # evicts s2, not s1
+        assert resolve(s1, "weight_average") is r1
+        assert cache_info()[0] == 2
+    finally:
+        set_cache_limit(64)
+        clear_cache()
 
 
 def test_incremental_mean_matches_weight_average():
