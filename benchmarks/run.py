@@ -11,8 +11,8 @@ import argparse
 import sys
 import time
 
-SECTIONS = ("properties", "overhead", "gossip", "antientropy", "kernels",
-            "roofline")
+SECTIONS = ("properties", "overhead", "gossip", "antientropy",
+            "blobstream", "kernels", "roofline")
 
 
 def main() -> None:
@@ -38,6 +38,8 @@ def main() -> None:
             from benchmarks import bench_gossip as mod
         elif section == "antientropy":
             from benchmarks import bench_antientropy as mod
+        elif section == "blobstream":
+            from benchmarks import bench_blobstream as mod
         elif section == "kernels":
             from benchmarks import bench_kernels as mod
         else:

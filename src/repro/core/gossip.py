@@ -13,7 +13,8 @@ not acknowledged, with optional int8 payload compression.
 
 Transports (repro.net): passing `transport=` routes every send through
 the versioned wire codec and a repro.net.transport.Transport (in-memory
-queues or loopback TCP sockets), so gossip is an actual byte protocol;
+queues, per-frame loopback TCP, or persistent per-peer TCP
+connections), so gossip is an actual byte protocol;
 `bytes_sent` then counts real frame bytes. The default (None) keeps the
 zero-copy in-process delivery as a fast path for pure convergence tests.
 Digest-driven Merkle anti-entropy — the production sync primitive —
@@ -134,10 +135,13 @@ class GossipNetwork:
 
     def drain(self, max_iters: int = 10_000):
         """Deliver every in-flight transport frame (socket transports may
-        lag a send by a kernel round trip; queues are drained in order)."""
+        lag a send by a kernel round trip; queues are drained in order).
+        Spooling transports (persistent connections) are flushed each
+        pass so bytes the kernel deferred keep moving toward the wire."""
         if self.transport is None:
             return
         import time as _time
+        flush = getattr(self.transport, "flush", None)
         for _ in range(max_iters):
             progressed = False
             for node in self.nodes:
@@ -145,6 +149,8 @@ class GossipNetwork:
                     node.receive_wire(msg)
                     progressed = True
             if not progressed:
+                if flush is not None:
+                    flush()
                 if self.transport.pending() == 0:
                     return
                 _time.sleep(0.001)

@@ -57,12 +57,27 @@ def canonical_order(state: CRDTMergeState) -> List[str]:
     return sorted(state.visible())
 
 
+def _cfg_fragment(k: str, v: Any) -> str:
+    """One cfg knob's cache-key contribution. Plain scalars repr exactly;
+    anything array-like is content-hashed — numpy/JAX reprs truncate
+    large arrays with `...`, so two resolves differing only in a large
+    array knob would otherwise alias to one cache entry and the second
+    caller would get the first caller's pytree."""
+    if v is None or isinstance(v, (bool, int, float, str, bytes)):
+        return f"{k}={v!r}"
+    from repro.core.hashing import pytree_digest
+    try:
+        return f"{k}#{pytree_digest(v).hex()}"
+    except Exception:
+        return f"{k}={v!r}"
+
+
 def _cfg_key(base: Any, cfg: Dict[str, Any]) -> str:
     """Cache-key component for everything that shapes the output besides
     the state: strategy knobs and the base model. Without this, two
     resolves differing only in e.g. `t=` or `base=` would alias to one
     entry and the second caller would get the first caller's pytree."""
-    parts = [f"{k}={cfg[k]!r}" for k in sorted(cfg)]
+    parts = [_cfg_fragment(k, cfg[k]) for k in sorted(cfg)]
     if base is not None:
         from repro.core.hashing import pytree_digest
         parts.append("base=" + pytree_digest(base).hex())
@@ -144,10 +159,11 @@ def _tree_fold(strat, contribs, base, seed, cfg):
 class IncrementalMean:
     """O(p)-per-contribution running weight average.
 
-    Exactly matches weight_average over the same visible set because
-    integer count + fp32 running sums are order-independent here only if
-    applied in canonical order — so `sync()` re-folds in canonical order
-    whenever out-of-order contributions arrive. Fast path: appends.
+    Matches weight_average over the same visible set because fp32 running
+    sums are order-dependent only through accumulation order — so
+    `sync()` re-folds in canonical order whenever out-of-order
+    contributions arrive, and drops ids the state has since retracted.
+    Fast path: appends.
     """
 
     def __init__(self):
@@ -164,8 +180,34 @@ class IncrementalMean:
                 contribution)
         self._ids.append(element_id)
 
+    def sync(self, state: CRDTMergeState) -> bool:
+        """Re-fold from the state's canonical visible set.
+
+        Brings the accumulator back in line with
+        resolve(state, "weight_average") after out-of-order arrivals or
+        retractions: retracted ids are dropped, missed ones folded in,
+        and accumulation order restored to canonical. Returns True if a
+        re-fold was needed (False = accumulator already canonical).
+        Raises KeyError if a visible element's payload is absent from
+        the store (resolve() would fail there too) — silently averaging
+        a subset would be a wrong answer with no signal."""
+        ids = canonical_order(state)
+        absent = [eid for eid in ids if eid not in state.store]
+        if absent:
+            raise KeyError(f"store lacks payloads for {absent}; "
+                           "fetch missing blobs before sync()")
+        if ids == self._ids:
+            return False
+        self._sum = None
+        self._ids = []
+        for eid in ids:
+            self.add(eid, state.store[eid])
+        return True
+
     def value(self):
         k = len(self._ids)
+        if k == 0:
+            raise ValueError("IncrementalMean has no contributions")
         return jax.tree_util.tree_map(lambda s: s / k, self._sum)
 
     def count(self) -> int:

@@ -3,23 +3,29 @@
 Takes gossip from in-process object sharing (core.gossip legacy path) to
 an actual protocol: every message crosses a byte boundary through the
 versioned framed codec (`wire`), moves over a pluggable transport
-(`transport`: in-memory queues or loopback TCP sockets), and replicas
-reconcile via Merkle-partitioned anti-entropy (`antientropy`) instead of
-shipping full states. `simulator` is a deterministic discrete-event
+(`transport`: in-memory queues, per-frame loopback TCP, or persistent
+per-peer TCP connections), and replicas reconcile via Merkle-partitioned
+anti-entropy (`antientropy`) instead of shipping full states. Large
+blobs stream as bounded-size manifest/chunk frames, resumable across
+sessions. `simulator` is a deterministic discrete-event
 network with per-link latency/bandwidth/loss/duplication/reordering for
 convergence experiments the in-process tests cannot express.
 """
 from repro.net.antientropy import SyncNode, reconcile_root, state_items
 from repro.net.simulator import LinkSpec, SimGossipNetwork, SimNetwork
 from repro.net.transport import (InMemoryTransport, LoopbackSocketTransport,
-                                 Transport, pump)
-from repro.net.wire import (decode_frame, decode_message, encode_message,
+                                 PersistentLoopbackTransport, Transport,
+                                 pump)
+from repro.net.wire import (DEFAULT_MAX_FRAME, decode_blob, decode_frame,
+                            decode_message, encode_blob, encode_message,
                             msg_to_delta, msg_to_state, state_to_msg)
 
 __all__ = [
     "SyncNode", "reconcile_root", "state_items",
     "LinkSpec", "SimGossipNetwork", "SimNetwork",
-    "InMemoryTransport", "LoopbackSocketTransport", "Transport", "pump",
-    "decode_frame", "decode_message", "encode_message",
+    "InMemoryTransport", "LoopbackSocketTransport",
+    "PersistentLoopbackTransport", "Transport", "pump",
+    "DEFAULT_MAX_FRAME", "decode_blob", "decode_frame", "decode_message",
+    "encode_blob", "encode_message",
     "msg_to_delta", "msg_to_state", "state_to_msg",
 ]

@@ -16,6 +16,14 @@ Session flow (initiator A, responder B), all messages via repro.net.wire:
     A -> B  BlobReq(eids A's store lacks)
     B -> A  BlobResp(blobs)                [symmetrically A -> B]
 
+Blob transfer is size-aware: blobs whose canonical encoding fits the
+frame budget are batched into BlobResp frames; larger ones are announced
+with a BlobManifest (per-chunk SHA-256) and stream as windowed
+ChunkReq/ChunkData exchanges, every frame bounded by max_frame_bytes.
+Reassembly state lives on the node, not the session, so a transfer
+killed mid-stream resumes in the next session without re-shipping any
+verified chunk.
+
 The reconciliation root covers the *full* item set — every add entry and
 every tombstone, not just the visible elements — because sync must also
 propagate removals. Entry exchange is a CRDT join (set union + vv merge),
@@ -31,8 +39,8 @@ sound when both sync paths are mixed.
 from __future__ import annotations
 
 import hashlib
-from collections import Counter
-from typing import Any, Dict, FrozenSet, Iterable, List, Optional, Tuple
+from collections import Counter, OrderedDict
+from typing import Any, Dict, FrozenSet, Iterable, List, Optional, Set, Tuple
 
 from repro.core.delta import Delta, apply_delta
 from repro.core.merkle import bucket_digests, diff_buckets, pick_bucket_bits, \
@@ -40,8 +48,11 @@ from repro.core.merkle import bucket_digests, diff_buckets, pick_bucket_bits, \
 from repro.core.resolve import resolve
 from repro.core.state import AddEntry, CRDTMergeState
 from repro.core.version_vector import VersionVector
-from repro.net.wire import (BlobReq, BlobResp, BucketItemsMsg, BucketsMsg,
-                            DeltaMsg, Message, StateMsg, SyncDone, SyncReq,
+from repro.net.wire import (CHUNK_ENVELOPE, DEFAULT_MAX_FRAME, BlobManifest,
+                            BlobReq, BlobResp, BucketItemsMsg, BucketsMsg,
+                            ChunkData, ChunkReq, DeltaMsg, ManifestEntry,
+                            Message, StateMsg, SyncDone, SyncReq, WireError,
+                            decode_blob, encode_blob, manifest_entry,
                             msg_to_delta, msg_to_state)
 
 Reply = Tuple[str, Message]
@@ -102,6 +113,49 @@ def _bits_ok(bits: int) -> bool:
 
 
 # ---------------------------------------------------------------------------
+# Chunk reassembly
+# ---------------------------------------------------------------------------
+
+
+class _PartialBlob:
+    """Reassembly state for one streaming blob.
+
+    Lives on the SyncNode (not the session): verified chunks survive lost
+    frames, dead sessions, and peer changes, so a resumed transfer only
+    requests — and the peer only re-ships — chunks never verified."""
+
+    __slots__ = ("eid", "chunk_size", "total_size", "digests", "chunks")
+
+    def __init__(self, entry: ManifestEntry):
+        self.eid = entry.eid
+        self.chunk_size = entry.chunk_size
+        self.total_size = entry.total_size
+        self.digests = entry.digests
+        self.chunks: Dict[int, bytes] = {}
+
+    def matches(self, entry: ManifestEntry) -> bool:
+        return (self.chunk_size == entry.chunk_size
+                and self.total_size == entry.total_size
+                and self.digests == entry.digests)
+
+    def missing(self) -> List[int]:
+        return [i for i in range(len(self.digests)) if i not in self.chunks]
+
+    def complete(self) -> bool:
+        return len(self.chunks) == len(self.digests)
+
+    def assemble(self) -> bytes:
+        return b"".join(self.chunks[i] for i in range(len(self.digests)))
+
+
+def _manifest_entry_ok(entry: ManifestEntry) -> bool:
+    n, cs = len(entry.digests), entry.chunk_size
+    if n == 0 or cs <= 0:
+        return False
+    return (n - 1) * cs < entry.total_size <= n * cs
+
+
+# ---------------------------------------------------------------------------
 # SyncNode
 # ---------------------------------------------------------------------------
 
@@ -118,15 +172,42 @@ class SyncNode:
 
     def __init__(self, node_id: str,
                  state: Optional[CRDTMergeState] = None,
-                 compress_blobs: bool = False):
+                 compress_blobs: bool = False,
+                 max_frame_bytes: int = DEFAULT_MAX_FRAME,
+                 chunk_window: int = 8):
+        if max_frame_bytes <= CHUNK_ENVELOPE:
+            raise ValueError(f"max_frame_bytes must exceed {CHUNK_ENVELOPE}")
         self.node_id = node_id
         self.state = state or CRDTMergeState()
         self.compress_blobs = compress_blobs
+        self.max_frame_bytes = max_frame_bytes
+        self.chunk_window = max(1, chunk_window)
+        # data budget per frame: a full chunk + envelope stays <= max
+        self._chunk_payload = max_frame_bytes - CHUNK_ENVELOPE
         self.known: Dict[str, dict] = {}      # peer -> last-sent vv (deltas)
         self.merge_calls = 0
         self.stats: Counter = Counter()
         self._sid = 0
-        self._blob_inflight: set = set()   # eids requested, response pending
+        # eids with a BlobResp/BlobManifest pending, per (peer, session):
+        # a response only retires its own session's requests, never those
+        # pending against other peers (concurrent sessions in one round
+        # would otherwise re-fetch every blob fanout-times over).
+        self._blob_inflight: Dict[Tuple[str, int], Set[str]] = {}
+        # eid -> reassembly state; persists across sessions (resume)
+        self._partials: Dict[str, _PartialBlob] = {}
+        # (peer, sid, eid) -> chunk indices awaited from that session
+        self._chunk_pending: Dict[Tuple[str, int, str], Set[int]] = {}
+        # request-state generation stamps: entries carry the value of
+        # self._sessions at creation/refresh; anything older than the
+        # latest begin_sync() is a dead session's leftovers (nothing a
+        # prior session sent can still be in flight once a new one
+        # starts) and is GC'd so its eids become requestable again —
+        # from ANY peer, not just the one the dead session spoke to.
+        self._sessions = 0
+        self._req_stamp: Dict[tuple, int] = {}
+        # responder-side cache of canonical blob encodings (chunk source)
+        self._enc_cache: "OrderedDict[str, bytes]" = OrderedDict()
+        self._enc_cache_limit = 4
         # item-hash memo: states are immutable, so the per-entry SHA-256
         # pass is recomputed only when self.state is replaced (mirrors
         # CRDTMergeState._root). Keyed by identity; holding the state ref
@@ -174,9 +255,14 @@ class SyncNode:
         BucketItemsMsg), so a replica can answer any session message
         statelessly and a lost frame leaves nothing behind."""
         self._sid += 1
-        # A lost BlobReq/BlobResp must not pin eids as in-flight forever:
-        # each new session makes every still-missing blob requestable.
-        self._blob_inflight.clear()
+        self._sessions += 1
+        # A lost BlobReq/BlobResp/ChunkData must not pin eids as in-flight
+        # forever: a fresh session with this peer supersedes every older
+        # request held against it. Requests pending against *other* peers
+        # stay — wiping them would make their blobs requestable again and
+        # re-fetch fanout-times over under concurrent sessions. (Stale
+        # entries for other peers fall to the generation GC instead.)
+        self._expire_peer(peer)
         bits = pick_bucket_bits(len(self.items()))
         self.stats["sessions_started"] += 1
         return SyncReq(self.node_id, self._sid,
@@ -203,6 +289,12 @@ class SyncNode:
             return self._on_blob_req(msg)
         if isinstance(msg, BlobResp):
             return self._on_blob_resp(msg)
+        if isinstance(msg, BlobManifest):
+            return self._on_blob_manifest(msg)
+        if isinstance(msg, ChunkReq):
+            return self._on_chunk_req(msg)
+        if isinstance(msg, ChunkData):
+            return self._on_chunk_data(msg)
         if isinstance(msg, SyncDone):
             self.state = CRDTMergeState(self.state.adds, self.state.removes,
                                         self.state.vv.merge(msg.vv),
@@ -269,17 +361,71 @@ class SyncNode:
         replies.extend(self._maybe_blob_req(msg.sender, msg.sid))
         return replies
 
-    def _on_blob_req(self, msg: BlobReq) -> List[Reply]:
-        have = {eid: self.state.store[eid] for eid in msg.eids
-                if eid in self.state.store}
-        if not have:
-            return []
+    # -- blob transfer: small batched responses + chunked streaming --------
+
+    def _wire_payload(self, eid: str) -> Any:
+        payload = self.state.store[eid]
         if self.compress_blobs:
             from repro.core.compression import compress_tree
-            have = {eid: compress_tree(p) for eid, p in have.items()}
-        self.stats["blobs_served"] += len(have)
-        return [(msg.sender, BlobResp(self.node_id, msg.sid, have,
-                                      self.compress_blobs))]
+            payload = compress_tree(payload)
+        return payload
+
+    def _cache_encoding(self, eid: str, enc: bytes) -> None:
+        self._enc_cache[eid] = enc
+        self._enc_cache.move_to_end(eid)
+        while len(self._enc_cache) > self._enc_cache_limit:
+            self._enc_cache.popitem(last=False)
+
+    def _encoded_blob(self, eid: str) -> bytes:
+        """Canonical encoding of the wire payload (LRU-cached: the chunk
+        source is re-read once per ChunkReq window, not re-encoded)."""
+        enc = self._enc_cache.get(eid)
+        if enc is None:
+            enc = encode_blob(self._wire_payload(eid))
+        self._cache_encoding(eid, enc)
+        return enc
+
+    def _on_blob_req(self, msg: BlobReq) -> List[Reply]:
+        """Serve requested blobs: small ones batched into BlobResp frames
+        bounded by the frame budget, large ones announced via a manifest
+        and streamed as chunks on demand."""
+        replies: List[Reply] = []
+        small: Dict[str, Any] = {}
+        small_bytes = 0
+        entries: List[ManifestEntry] = []
+
+        def flush_small() -> None:
+            nonlocal small, small_bytes
+            if small:
+                self.stats["blobs_served"] += len(small)
+                replies.append((msg.sender,
+                                BlobResp(self.node_id, msg.sid, dict(small),
+                                         self.compress_blobs)))
+                small, small_bytes = {}, 0
+
+        for eid in sorted(set(msg.eids)):
+            if eid not in self.state.store:
+                continue
+            # one _wire_payload per eid: compress_blobs would otherwise
+            # quantize every small blob twice (measure + respond)
+            payload = self._wire_payload(eid)
+            enc = self._enc_cache.get(eid) or encode_blob(payload)
+            if len(enc) > self._chunk_payload:
+                self._cache_encoding(eid, enc)      # chunk source
+                entries.append(manifest_entry(eid, enc, self._chunk_payload))
+                self.stats["blobs_announced"] += 1
+                continue
+            # +128 approximates the per-entry envelope (eid + lengths)
+            if small and small_bytes + len(enc) + 128 > self._chunk_payload:
+                flush_small()
+            small[eid] = payload
+            small_bytes += len(enc) + 128
+        flush_small()
+        if entries:
+            replies.append((msg.sender,
+                            BlobManifest(self.node_id, msg.sid,
+                                         tuple(entries))))
+        return replies
 
     def _on_blob_resp(self, msg: BlobResp) -> List[Reply]:
         from repro.core.compression import CompressedTree, decompress_tree
@@ -292,18 +438,203 @@ class SyncNode:
         self.stats["blobs_received"] += len(msg.payloads)
         self.state = CRDTMergeState(self.state.adds, self.state.removes,
                                     self.state.vv, store)
-        # Whatever this response did not carry the peer simply lacks;
-        # make those eids requestable again in future sessions.
-        self._blob_inflight.clear()
+        # Retire only the eids THIS frame carried, only in this session:
+        # one BlobReq can be answered by several BlobResp frames (the
+        # responder flushes at the frame budget) plus a manifest, so
+        # dropping the whole session entry on the first frame would make
+        # the still-coming eids requestable again — the fanout-times
+        # duplicate fetch this tracking exists to prevent. Eids the peer
+        # lacks entirely stay pinned until the session is superseded
+        # (begin_sync with that peer) or the generation GC retires it.
+        key = (msg.sender, msg.sid)
+        inflight = self._blob_inflight.get(key)
+        if inflight is not None:
+            inflight.difference_update(msg.payloads)
+            if not inflight:
+                del self._blob_inflight[key]
+                self._req_stamp.pop(key, None)
         return []
 
+    def _on_blob_manifest(self, msg: BlobManifest) -> List[Reply]:
+        self._gc_stale_requests()
+        replies: List[Reply] = []
+        inflight = self._blob_inflight.get((msg.sender, msg.sid))
+        streaming = {k[2] for k in self._chunk_pending}
+        missing = set(self.missing_blobs())
+        for entry in msg.entries:
+            if inflight is not None:
+                inflight.discard(entry.eid)
+            if entry.eid not in missing:
+                continue
+            if not _manifest_entry_ok(entry):
+                self.stats["protocol_error_manifest"] += 1
+                continue
+            if entry.chunk_size > self._chunk_payload:
+                # adopting a chunking above our own frame budget would
+                # invite ChunkData frames exceeding max_frame_bytes (and
+                # a partial no smaller-budget peer could ever complete);
+                # wait for a peer whose chunking fits our config
+                self.stats["manifest_oversize"] += 1
+                continue
+            partial = self._partials.get(entry.eid)
+            if partial is None or (not partial.matches(entry)
+                                   and not partial.chunks):
+                # adopt: fresh transfer, or an empty partial re-chunked
+                partial = _PartialBlob(entry)
+                self._partials[entry.eid] = partial
+            elif not partial.matches(entry):
+                # a differently-chunked announcement cannot extend the
+                # verified chunks we hold; wait for a matching peer
+                self.stats["manifest_mismatch"] += 1
+                continue
+            if entry.eid in streaming:
+                # another session is already pulling this blob; starting
+                # a second stream would double-ship chunks
+                self.stats["chunk_stream_dedup"] += 1
+                continue
+            req = self._next_chunk_req(msg.sender, msg.sid, partial)
+            if req is not None:
+                streaming.add(entry.eid)
+                replies.append(req)
+        if inflight is not None and not inflight:
+            self._blob_inflight.pop((msg.sender, msg.sid), None)
+            self._req_stamp.pop((msg.sender, msg.sid), None)
+        return replies
+
+    def _next_chunk_req(self, peer: str, sid: int,
+                        partial: _PartialBlob) -> Optional[Reply]:
+        """Request the next window of chunks this node neither holds nor
+        awaits elsewhere. Windowing bounds bytes in flight: at most
+        chunk_window frames of this blob traverse the link at once."""
+        elsewhere: Set[int] = set()
+        for (_p, _s, eid), idxs in self._chunk_pending.items():
+            if eid == partial.eid:
+                elsewhere |= idxs
+        want = [i for i in partial.missing() if i not in elsewhere]
+        want = want[:self.chunk_window]
+        if not want:
+            return None
+        key = (peer, sid, partial.eid)
+        self._chunk_pending[key] = set(want)
+        self._req_stamp[key] = self._sessions
+        self.stats["chunk_reqs"] += 1
+        return (peer, ChunkReq(self.node_id, sid, partial.eid,
+                               partial.chunk_size, tuple(want)))
+
+    def _on_chunk_req(self, msg: ChunkReq) -> List[Reply]:
+        if msg.chunk_size <= 0 or msg.chunk_size > self._chunk_payload:
+            return self._protocol_error("chunk_size")
+        if msg.eid not in self.state.store:
+            self.stats["chunk_req_unknown"] += 1
+            return []
+        enc = self._encoded_blob(msg.eid)
+        replies: List[Reply] = []
+        for i in sorted(set(msg.indices)):
+            start = i * msg.chunk_size
+            if start >= len(enc):
+                self.stats["chunk_req_range"] += 1
+                continue
+            self.stats["chunks_served"] += 1
+            replies.append((msg.sender,
+                            ChunkData(self.node_id, msg.sid, msg.eid, i,
+                                      enc[start:start + msg.chunk_size])))
+        return replies
+
+    def _on_chunk_data(self, msg: ChunkData) -> List[Reply]:
+        key = (msg.sender, msg.sid, msg.eid)
+        pending = self._chunk_pending.get(key)
+        if pending is not None:
+            pending.discard(msg.index)
+        partial = self._partials.get(msg.eid)
+        if partial is None:
+            # transfer already finished (or never started) — stale frame
+            self.stats["chunk_orphan"] += 1
+            self._chunk_pending.pop(key, None)
+            self._req_stamp.pop(key, None)
+            return []
+        if not (0 <= msg.index < len(partial.digests)):
+            self.stats["chunk_req_range"] += 1
+        elif msg.index in partial.chunks:
+            self.stats["chunks_redundant"] += 1
+        elif hashlib.sha256(msg.data).digest() != partial.digests[msg.index]:
+            self.stats["chunk_digest_mismatch"] += 1
+        else:
+            partial.chunks[msg.index] = msg.data
+            self.stats["chunks_verified"] += 1
+        if partial.complete():
+            self._finish_blob(msg.eid, partial)
+            return []
+        if pending is not None and not pending:
+            # window drained but blob incomplete: pull the next window
+            del self._chunk_pending[key]
+            self._req_stamp.pop(key, None)
+            req = self._next_chunk_req(msg.sender, msg.sid, partial)
+            return [req] if req is not None else []
+        return []
+
+    def _finish_blob(self, eid: str, partial: _PartialBlob) -> None:
+        from repro.core.compression import CompressedTree, decompress_tree
+        blob = partial.assemble()
+        del self._partials[eid]
+        for key in [k for k in self._chunk_pending if k[2] == eid]:
+            del self._chunk_pending[key]
+            self._req_stamp.pop(key, None)
+        try:
+            payload = decode_blob(blob)
+        except WireError:
+            # every chunk matched its manifest digest, so the manifest
+            # itself was bogus; drop it all and refetch from scratch
+            self.stats["blob_decode_error"] += 1
+            return
+        if isinstance(payload, CompressedTree):
+            payload = decompress_tree(payload)
+        if eid not in self.state.store:
+            store = dict(self.state.store)
+            store[eid] = payload
+            self.state = CRDTMergeState(self.state.adds, self.state.removes,
+                                        self.state.vv, store)
+        self.stats["blobs_assembled"] += 1
+        self.stats["blobs_received"] += 1
+
+    def _expire_peer(self, peer: str) -> None:
+        """Drop request bookkeeping held against `peer` (superseded by a
+        new session with it); verified chunks in _partials survive."""
+        for key in [k for k in self._blob_inflight if k[0] == peer]:
+            del self._blob_inflight[key]
+            self._req_stamp.pop(key, None)
+        for key in [k for k in self._chunk_pending if k[0] == peer]:
+            del self._chunk_pending[key]
+            self._req_stamp.pop(key, None)
+
+    def _gc_stale_requests(self) -> None:
+        """Drop request state from sessions older than the latest
+        begin_sync(): by the time this node starts a new session, a prior
+        session's lost BlobResp/ChunkData is never going to arrive, and
+        keeping its bookkeeping would pin those eids/chunks as
+        un-requestable from every OTHER peer forever (e.g. a transfer
+        started from a peer that then left the network)."""
+        horizon = self._sessions - 1
+        for key in [k for k, s in self._req_stamp.items() if s <= horizon]:
+            self._blob_inflight.pop(key, None)
+            self._chunk_pending.pop(key, None)
+            del self._req_stamp[key]
+
     def _maybe_blob_req(self, peer: str, sid: int) -> List[Reply]:
-        # Skip eids with a response already pending (concurrent sessions
-        # in one gossip round would otherwise fetch every blob
-        # fanout-times over).
+        # Skip eids with a response pending in any live session or an
+        # active chunk stream (concurrent sessions in one gossip round
+        # would otherwise fetch every blob fanout-times over). Partially
+        #-transferred blobs with no live stream ARE requested again: the
+        # peer's manifest resumes them from the verified chunks held.
+        self._gc_stale_requests()
+        inflight: Set[str] = set()
+        for eids in self._blob_inflight.values():
+            inflight |= eids
+        streaming = {k[2] for k in self._chunk_pending}
         missing = tuple(e for e in self.missing_blobs()
-                        if e not in self._blob_inflight)
+                        if e not in inflight and e not in streaming)
         if not missing:
             return []
-        self._blob_inflight.update(missing)
+        key = (peer, sid)
+        self._blob_inflight.setdefault(key, set()).update(missing)
+        self._req_stamp[key] = self._sessions
         return [(peer, BlobReq(self.node_id, sid, missing))]

@@ -60,6 +60,9 @@ class SimNetwork:
         self.msgs_delivered = 0
         self.msgs_dropped = 0
         self.msgs_duplicated = 0
+        self.max_frame_seen = 0         # largest single frame transmitted
+        self.inflight_bytes = 0         # bytes queued, not yet delivered
+        self.peak_inflight_bytes = 0    # resident-memory bound on the wire
 
     # ------------------------------------------------------------ topology
 
@@ -90,6 +93,8 @@ class SimNetwork:
         n = len(frame)
         self.bytes_sent += n
         self.msgs_sent += 1
+        if n > self.max_frame_seen:
+            self.max_frame_seen = n
         if not self._reachable(src, dst):
             self.msgs_dropped += 1
             return n
@@ -117,6 +122,9 @@ class SimNetwork:
             self._seq += 1
             heapq.heappush(self._events,
                            (start + delay, self._seq, dst, src, frame))
+            self.inflight_bytes += n
+            if self.inflight_bytes > self.peak_inflight_bytes:
+                self.peak_inflight_bytes = self.inflight_bytes
         return n
 
     # ---------------------------------------------------------- event loop
@@ -130,6 +138,7 @@ class SimNetwork:
             return False
         t, _seq, dst, src, frame = heapq.heappop(self._events)
         self.clock = max(self.clock, t)
+        self.inflight_bytes -= len(frame)
         handler = self.handlers.get(dst)
         if handler is not None:
             msg, _ = decode_frame(frame)
@@ -166,7 +175,9 @@ class SimGossipNetwork:
     def __init__(self, n: int, seed: int = 0, mode: str = "antientropy",
                  link: Optional[LinkSpec] = None,
                  compress_blobs: bool = False,
-                 delta_refresh_every: int = 4):
+                 delta_refresh_every: int = 4,
+                 max_frame_bytes: Optional[int] = None,
+                 chunk_window: int = 8):
         if mode not in ("state", "delta", "antientropy"):
             raise ValueError(f"unknown mode {mode!r}")
         self.mode = mode
@@ -181,9 +192,12 @@ class SimGossipNetwork:
         self._round = 0
         self.net = SimNetwork(seed=seed, default_link=link)
         self.rng = random.Random(seed ^ 0x5EED)
+        node_kw = dict(compress_blobs=compress_blobs,
+                       chunk_window=chunk_window)
+        if max_frame_bytes is not None:
+            node_kw["max_frame_bytes"] = max_frame_bytes
         self.nodes: List[SyncNode] = [
-            SyncNode(f"node{i:03d}", compress_blobs=compress_blobs)
-            for i in range(n)]
+            SyncNode(f"node{i:03d}", **node_kw) for i in range(n)]
         self.by_id: Dict[str, SyncNode] = {x.node_id: x for x in self.nodes}
         for node in self.nodes:
             self.net.register(node.node_id, self._make_handler(node))

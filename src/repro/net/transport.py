@@ -1,6 +1,6 @@
 """Transports: how framed wire bytes move between nodes.
 
-One interface, two implementations:
+One interface, three implementations:
 
   * InMemoryTransport — per-node FIFO queues of encoded frames. Every
     message still round-trips through encode_message/decode_frame, so
@@ -10,10 +10,15 @@ One interface, two implementations:
     listening socket per registered node; each send opens a connection,
     writes one frame, and closes. Exercises the OS byte path (partial
     reads, frame reassembly from a stream).
+  * PersistentLoopbackTransport — one TCP connection per (src, dst)
+    pair, reused for every frame (the deployment shape: chunked blob
+    streams amortize the handshake instead of paying it per frame).
+    Writes are non-blocking with a per-connection spool so large frames
+    cannot deadlock a single-threaded pump; `flush()` drains spools.
 
-Byte accounting is part of the interface: `bytes_sent`, `msgs_sent`, and
-a per-message-type byte breakdown, which is what bench_antientropy
-reports as bytes-on-wire.
+Byte accounting is part of the interface: `bytes_sent`, `msgs_sent`,
+`max_frame_seen`, and a per-message-type byte breakdown, which is what
+the benchmarks report as bytes-on-wire.
 """
 from __future__ import annotations
 
@@ -33,6 +38,7 @@ class Transport:
     def __init__(self):
         self.bytes_sent = 0
         self.msgs_sent = 0
+        self.max_frame_seen = 0
         self.bytes_by_type: Counter = Counter()
 
     # -- interface ---------------------------------------------------------
@@ -53,6 +59,10 @@ class Transport:
         """Frames sent but not yet received, across all nodes."""
         raise NotImplementedError
 
+    def flush(self) -> None:
+        """Push any spooled outgoing bytes toward the wire (no-op for
+        transports that deliver synchronously)."""
+
     def close(self) -> None:
         pass
 
@@ -61,6 +71,8 @@ class Transport:
     def _account(self, msg: Message, nbytes: int) -> None:
         self.bytes_sent += nbytes
         self.msgs_sent += 1
+        if nbytes > self.max_frame_seen:
+            self.max_frame_seen = nbytes
         self.bytes_by_type[type(msg).__name__] += nbytes
 
 
@@ -153,26 +165,9 @@ class LoopbackSocketTransport(Transport):
                     if not chunk:
                         break
                     buf += chunk
-        out: List[Tuple[str, Message]] = []
-        pos = 0
-        while True:
-            # sub-header: u16 src len + src bytes, then one frame
-            if len(buf) - pos < 2:
-                break
-            slen = int.from_bytes(buf[pos:pos + 2], "big")
-            fstart = pos + 2 + slen
-            if len(buf) - fstart < HEADER.size:
-                break
-            plen = HEADER.unpack_from(bytes(buf), fstart)[3]
-            fend = fstart + FRAME_OVERHEAD + plen
-            if len(buf) < fend:
-                break
-            src = bytes(buf[pos + 2:fstart]).decode("utf-8")
-            msg, _ = decode_frame(bytes(buf[fstart:fend]))
-            out.append((src, msg))
-            self._in_flight -= 1
-            pos = fend
-        del buf[:pos]
+        out, consumed = _parse_stream(buf)
+        self._in_flight -= len(out)
+        del buf[:consumed]
         return out
 
     def pending(self) -> int:
@@ -183,6 +178,222 @@ class LoopbackSocketTransport(Transport):
     def close(self) -> None:
         for srv in self._servers.values():
             srv.close()
+        self._servers.clear()
+        self._ports.clear()
+
+
+def _parse_stream(buf: bytearray) -> Tuple[List[Tuple[str, Message]], int]:
+    """Extract complete (src, message) records from a stream buffer.
+
+    Record layout: u16 src length + src bytes + one wire frame. Returns
+    the decoded records and the number of bytes consumed (incomplete
+    trailing records stay for the next read)."""
+    out: List[Tuple[str, Message]] = []
+    pos = 0
+    while True:
+        if len(buf) - pos < 2:
+            break
+        slen = int.from_bytes(buf[pos:pos + 2], "big")
+        fstart = pos + 2 + slen
+        if len(buf) - fstart < HEADER.size:
+            break
+        plen = HEADER.unpack_from(bytes(buf[fstart:fstart + HEADER.size]))[3]
+        fend = fstart + FRAME_OVERHEAD + plen
+        if len(buf) < fend:
+            break
+        src = bytes(buf[pos + 2:fstart]).decode("utf-8")
+        msg, _ = decode_frame(bytes(buf[fstart:fend]))
+        out.append((src, msg))
+        pos = fend
+    return out, pos
+
+
+class PersistentLoopbackTransport(Transport):
+    """One long-lived TCP connection per (src, dst) pair.
+
+    Every frame after the first rides the established connection —
+    `connections_opened` stays at the number of directed pairs that ever
+    spoke, not the number of frames. Sends are non-blocking: bytes the
+    kernel will not take immediately are spooled per connection and
+    flushed opportunistically (send/recv_ready/flush/pending), so a
+    single-threaded pump never deadlocks on a full socket buffer even
+    with multi-MiB chunk frames in flight.
+
+    Each accepted connection keeps its own reassembly buffer — frames
+    from different senders interleave at the receiver and must not share
+    a stream parser.
+    """
+
+    def __init__(self):
+        super().__init__()
+        self._servers: Dict[str, socket.socket] = {}
+        self._ports: Dict[str, int] = {}
+        self._conns: Dict[Tuple[str, str], socket.socket] = {}
+        # spool of whole records + bytes of the head record already sent;
+        # record alignment lets a reconnect resend the interrupted record
+        # from its start instead of corrupting the new stream mid-record
+        self._outq: Dict[Tuple[str, str], Deque[bytes]] = {}
+        self._head_sent: Dict[Tuple[str, str], int] = {}
+        self._accepted: Dict[str, List[List]] = {}   # [sock, buf] pairs
+        self._in_flight = 0
+        self.connections_opened = 0
+
+    def register(self, node_id: str) -> None:
+        if node_id in self._servers:
+            return
+        srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        srv.bind(("127.0.0.1", 0))
+        srv.listen(128)
+        srv.setblocking(False)
+        self._servers[node_id] = srv
+        self._ports[node_id] = srv.getsockname()[1]
+        self._accepted[node_id] = []
+
+    def _connect(self, key: Tuple[str, str]) -> socket.socket:
+        conn = socket.create_connection(("127.0.0.1", self._ports[key[1]]),
+                                        timeout=5.0)
+        conn.setblocking(False)
+        self.connections_opened += 1
+        self._conns[key] = conn
+        self._outq.setdefault(key, deque())
+        self._head_sent.setdefault(key, 0)
+        return conn
+
+    def send(self, src: str, dst: str, msg: Message) -> int:
+        if dst not in self._ports:
+            raise KeyError(f"unregistered node {dst!r}")
+        frame = encode_message(msg)
+        src_b = src.encode("utf-8")
+        key = (src, dst)
+        if key not in self._conns:
+            self._connect(key)
+        self._outq[key].append(len(src_b).to_bytes(2, "big") + src_b + frame)
+        self._in_flight += 1
+        self._flush_key(key)
+        self._account(msg, len(frame))
+        return len(frame)
+
+    def _drain(self, key: Tuple[str, str]) -> None:
+        """Write spooled records until the queue empties or the kernel
+        pushes back (raises OSError on a dead connection)."""
+        conn = self._conns[key]
+        q = self._outq[key]
+        while q:
+            sent = self._head_sent[key]
+            n = conn.send(memoryview(q[0])[sent:])
+            sent += n
+            if sent == len(q[0]):
+                q.popleft()
+                self._head_sent[key] = 0
+            else:
+                self._head_sent[key] = sent
+
+    def _drop_conn(self, key: Tuple[str, str]) -> None:
+        conn = self._conns.pop(key, None)
+        if conn is not None:
+            try:
+                conn.close()
+            except OSError:
+                pass
+        # the receiver dropped the dead connection's partial record, so
+        # the interrupted record must restart from its first byte
+        self._head_sent[key] = 0
+
+    def _flush_key(self, key: Tuple[str, str]) -> None:
+        if not self._outq.get(key):
+            return
+        if key not in self._conns:      # a prior flush dropped the conn
+            self._connect(key)
+        try:
+            self._drain(key)
+            return
+        except (BlockingIOError, InterruptedError):
+            return                      # kernel buffer full; spool remains
+        except OSError:
+            self._drop_conn(key)
+        # connection died (peer closed/reset): retry once on a fresh one;
+        # a second failure leaves consistent state (no dead socket kept,
+        # spool intact) for the next flush attempt
+        self._connect(key)
+        try:
+            self._drain(key)
+        except (BlockingIOError, InterruptedError):
+            pass
+        except OSError:
+            self._drop_conn(key)
+
+    def flush(self) -> None:
+        for key in list(self._conns):
+            self._flush_key(key)
+
+    def recv_ready(self, node_id: str) -> List[Tuple[str, Message]]:
+        srv = self._servers.get(node_id)
+        if srv is None:
+            return []
+        self.flush()
+        conns = self._accepted[node_id]
+        while True:
+            try:
+                conn, _ = srv.accept()
+            except (BlockingIOError, InterruptedError):
+                break
+            except OSError as e:  # pragma: no cover - platform-specific
+                if e.errno in (errno.EAGAIN, errno.EWOULDBLOCK):
+                    break
+                raise
+            conn.setblocking(False)
+            conns.append([conn, bytearray()])
+        out: List[Tuple[str, Message]] = []
+        live: List[List] = []
+        for entry in conns:
+            conn, buf = entry
+            closed = False
+            while True:
+                try:
+                    chunk = conn.recv(262144)
+                except (BlockingIOError, InterruptedError):
+                    break
+                except OSError:
+                    closed = True
+                    break
+                if not chunk:
+                    closed = True
+                    break
+                buf += chunk
+            msgs, consumed = _parse_stream(buf)
+            out.extend(msgs)
+            self._in_flight -= len(msgs)
+            del buf[:consumed]
+            if closed:
+                conn.close()
+            else:
+                live.append(entry)
+        self._accepted[node_id] = live
+        return out
+
+    def pending(self) -> int:
+        self.flush()
+        return max(0, self._in_flight)
+
+    def close(self) -> None:
+        for conn in self._conns.values():
+            try:
+                conn.close()
+            except OSError:
+                pass
+        for conns in self._accepted.values():
+            for conn, _buf in conns:
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+        for srv in self._servers.values():
+            srv.close()
+        self._conns.clear()
+        self._outq.clear()
+        self._head_sent.clear()
+        self._accepted.clear()
         self._servers.clear()
         self._ports.clear()
 
@@ -206,6 +417,7 @@ def pump(nodes: Mapping[str, "HasHandle"], transport: Transport,
                 for dst, reply in node.handle(msg):
                     transport.send(node_id, dst, reply)
         if not progressed:
+            transport.flush()   # persistent transports: drain send spools
             if transport.pending() == 0:
                 return delivered
             time.sleep(0.001)   # socket transport: wait for kernel delivery

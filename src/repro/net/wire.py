@@ -22,9 +22,15 @@ Pytree payload values support dict/list/tuple containers and
 tensor / CompressedLeaf / scalar leaves — the shapes model contributions
 actually take. Unknown structure raises WireError at encode time rather
 than producing frames a peer cannot parse.
+
+Large blobs never travel as one frame: payloads whose canonical encoding
+exceeds the per-frame data budget are announced via BlobManifest (chunk
+count, sizes, per-chunk SHA-256) and stream as ChunkReq/ChunkData frames
+bounded by the configured max frame size (DEFAULT_MAX_FRAME).
 """
 from __future__ import annotations
 
+import hashlib
 import struct
 import zlib
 from dataclasses import dataclass, field
@@ -55,6 +61,19 @@ MSG_BUCKET_ITEMS = 0x12
 MSG_BLOB_REQ = 0x13
 MSG_BLOB_RESP = 0x14
 MSG_SYNC_DONE = 0x15
+MSG_BLOB_MANIFEST = 0x16
+MSG_CHUNK_REQ = 0x17
+MSG_CHUNK_DATA = 0x18
+
+# Streaming transfer sizing. A multi-GB pytree must never become one
+# giant frame: blobs whose canonical encoding exceeds the per-frame data
+# budget travel as BlobManifest + ChunkReq/ChunkData instead of BlobResp.
+# CHUNK_ENVELOPE reserves room for the non-data fields of a ChunkData
+# frame (sender, sid, eid, index, length prefixes, frame overhead) so a
+# full chunk plus envelope stays <= the configured max frame size.
+DEFAULT_MAX_FRAME = 4 * 2 ** 20
+CHUNK_ENVELOPE = 256
+DIGEST_LEN = 32                         # per-chunk SHA-256
 
 # value (pytree) node tags
 _T_DICT = 0x01
@@ -172,6 +191,58 @@ class SyncDone:
     vv: VersionVector
 
     type = MSG_SYNC_DONE
+
+
+@dataclass(frozen=True)
+class ManifestEntry:
+    """Chunking of one blob: the canonical encoding of the payload split
+    at `chunk_size` boundaries, with a SHA-256 digest per chunk so every
+    chunk is verifiable on its own and partial transfers resume without
+    re-shipping verified data."""
+    eid: str
+    chunk_size: int
+    total_size: int
+    digests: Tuple[bytes, ...]
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.digests)
+
+
+@dataclass(frozen=True)
+class BlobManifest:
+    """Announces blobs too large for a single BlobResp frame."""
+    sender: str
+    sid: int
+    entries: Tuple[ManifestEntry, ...]
+
+    type = MSG_BLOB_MANIFEST
+
+
+@dataclass(frozen=True)
+class ChunkReq:
+    """Request specific chunks of one blob. `chunk_size` echoes the
+    manifest the requester adopted, so any peer holding the blob can
+    serve compatible chunks regardless of its own chunking config."""
+    sender: str
+    sid: int
+    eid: str
+    chunk_size: int
+    indices: Tuple[int, ...]
+
+    type = MSG_CHUNK_REQ
+
+
+@dataclass(frozen=True)
+class ChunkData:
+    """One verified-size slice of a blob's canonical encoding."""
+    sender: str
+    sid: int
+    eid: str
+    index: int
+    data: bytes
+
+    type = MSG_CHUNK_DATA
 
 
 Message = Any  # any of the dataclasses above
@@ -525,17 +596,74 @@ def _dec_sync_done(r: _Reader) -> SyncDone:
     return SyncDone(r.str_(), r.u64(), _dec_vv(r))
 
 
+def _enc_blob_manifest(buf: bytearray, m: BlobManifest) -> None:
+    _p_str(buf, m.sender)
+    _p_u64(buf, m.sid)
+    _p_u32(buf, len(m.entries))
+    for e in sorted(m.entries, key=lambda x: x.eid):
+        _p_str(buf, e.eid)
+        _p_u64(buf, e.total_size)
+        _p_u32(buf, e.chunk_size)
+        _p_u32(buf, len(e.digests))
+        for d in e.digests:
+            if len(d) != DIGEST_LEN:
+                raise WireError(f"chunk digest must be {DIGEST_LEN}B")
+            buf += d
+
+
+def _dec_blob_manifest(r: _Reader) -> BlobManifest:
+    sender, sid = r.str_(), r.u64()
+    entries = []
+    for _ in range(r.u32()):
+        eid, total, csize = r.str_(), r.u64(), r.u32()
+        digests = tuple(r.take(DIGEST_LEN) for _ in range(r.u32()))
+        entries.append(ManifestEntry(eid, csize, total, digests))
+    return BlobManifest(sender, sid, tuple(entries))
+
+
+def _enc_chunk_req(buf: bytearray, m: ChunkReq) -> None:
+    _p_str(buf, m.sender)
+    _p_u64(buf, m.sid)
+    _p_str(buf, m.eid)
+    _p_u32(buf, m.chunk_size)
+    _p_u32(buf, len(m.indices))
+    for i in sorted(m.indices):
+        _p_u32(buf, i)
+
+
+def _dec_chunk_req(r: _Reader) -> ChunkReq:
+    sender, sid, eid, csize = r.str_(), r.u64(), r.str_(), r.u32()
+    indices = tuple(r.u32() for _ in range(r.u32()))
+    return ChunkReq(sender, sid, eid, csize, indices)
+
+
+def _enc_chunk_data(buf: bytearray, m: ChunkData) -> None:
+    _p_str(buf, m.sender)
+    _p_u64(buf, m.sid)
+    _p_str(buf, m.eid)
+    _p_u32(buf, m.index)
+    _p_bytes(buf, m.data)
+
+
+def _dec_chunk_data(r: _Reader) -> ChunkData:
+    return ChunkData(r.str_(), r.u64(), r.str_(), r.u32(), r.bytes_())
+
+
 _ENCODERS = {
     MSG_STATE: _enc_state, MSG_DELTA: _enc_delta,
     MSG_SYNC_REQ: _enc_sync_req, MSG_BUCKETS: _enc_buckets,
     MSG_BUCKET_ITEMS: _enc_bucket_items, MSG_BLOB_REQ: _enc_blob_req,
     MSG_BLOB_RESP: _enc_blob_resp, MSG_SYNC_DONE: _enc_sync_done,
+    MSG_BLOB_MANIFEST: _enc_blob_manifest, MSG_CHUNK_REQ: _enc_chunk_req,
+    MSG_CHUNK_DATA: _enc_chunk_data,
 }
 _DECODERS = {
     MSG_STATE: _dec_state, MSG_DELTA: _dec_delta,
     MSG_SYNC_REQ: _dec_sync_req, MSG_BUCKETS: _dec_buckets,
     MSG_BUCKET_ITEMS: _dec_bucket_items, MSG_BLOB_REQ: _dec_blob_req,
     MSG_BLOB_RESP: _dec_blob_resp, MSG_SYNC_DONE: _dec_sync_done,
+    MSG_BLOB_MANIFEST: _dec_blob_manifest, MSG_CHUNK_REQ: _dec_chunk_req,
+    MSG_CHUNK_DATA: _dec_chunk_data,
 }
 
 
@@ -598,6 +726,39 @@ def decode_message(buf: bytes) -> Message:
 
 def frame_size(msg: Message) -> int:
     return len(encode_message(msg))
+
+
+# ---------------------------------------------------------------------------
+# Standalone blob (payload value) codec — the unit of chunked transfer
+# ---------------------------------------------------------------------------
+
+
+def encode_blob(value: Any) -> bytes:
+    """Canonical bytes of one store payload (chunk digests cover these)."""
+    buf = bytearray()
+    encode_value(buf, value)
+    return bytes(buf)
+
+
+def decode_blob(blob: bytes) -> Any:
+    r = _Reader(blob)
+    value = decode_value(r)
+    if r.pos != len(blob):
+        raise WireError(f"{len(blob) - r.pos} trailing blob bytes")
+    return value
+
+
+def chunk_digests(blob: bytes, chunk_size: int) -> Tuple[bytes, ...]:
+    """Per-chunk SHA-256 over `blob` split at `chunk_size` boundaries."""
+    if chunk_size <= 0:
+        raise WireError("chunk_size must be positive")
+    return tuple(hashlib.sha256(blob[i:i + chunk_size]).digest()
+                 for i in range(0, len(blob), chunk_size))
+
+
+def manifest_entry(eid: str, blob: bytes, chunk_size: int) -> ManifestEntry:
+    return ManifestEntry(eid, chunk_size, len(blob),
+                         chunk_digests(blob, chunk_size))
 
 
 # ---------------------------------------------------------------------------

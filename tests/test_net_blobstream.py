@@ -1,0 +1,480 @@
+"""Streaming chunked blob transfer: bounded frames, windowed chunk
+flow, resume-after-death, adversarial links, persistent connections.
+
+Invariants under test:
+  * no frame ever exceeds the configured max frame size, however large
+    the contribution;
+  * a transfer killed mid-stream resumes in a later session without any
+    verified chunk being shipped twice;
+  * chunked transfer converges under loss / reorder / partition because
+    anti-entropy retries re-request only the missing chunks;
+  * concurrent sessions fetch each missing blob exactly once (the
+    per-(peer, session) in-flight bookkeeping regression);
+  * PersistentLoopbackTransport reuses one connection per peer pair.
+"""
+import hashlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.delta import delta_for_entries, apply_delta
+from repro.core.gossip import GossipNetwork
+from repro.net.antientropy import SyncNode
+from repro.net.simulator import LinkSpec, SimGossipNetwork
+from repro.net.transport import (InMemoryTransport,
+                                 PersistentLoopbackTransport, pump)
+from repro.net.wire import (BlobResp, ChunkData, chunk_digests, decode_blob,
+                            encode_blob, frame_size, manifest_entry)
+
+MAX_FRAME = 2048          # tiny budget => many chunks from small payloads
+
+
+def _payload(rng, shape=(64, 64)):
+    return {"w": jnp.asarray(rng.standard_normal(shape), jnp.float32)}
+
+
+def _node(name, **kw):
+    kw.setdefault("max_frame_bytes", MAX_FRAME)
+    kw.setdefault("chunk_window", 3)
+    return SyncNode(name, **kw)
+
+
+def _sync(a, b, transport=None):
+    t = transport or InMemoryTransport()
+    t.register(a.node_id)
+    t.register(b.node_id)
+    t.send(a.node_id, b.node_id, a.begin_sync(b.node_id))
+    pump({a.node_id: a, b.node_id: b}, t)
+    return t
+
+
+def _tensor_bytes(node, eid):
+    return np.asarray(node.state.store[eid]["w"]).tobytes()
+
+
+# ------------------------------------------------------------ blob codec
+
+
+def test_blob_roundtrip_and_chunk_digests():
+    rng = np.random.default_rng(0)
+    p = _payload(rng)
+    blob = encode_blob(p)
+    out = decode_blob(blob)
+    assert np.asarray(out["w"]).tobytes() == np.asarray(p["w"]).tobytes()
+    digests = chunk_digests(blob, 1000)
+    assert len(digests) == (len(blob) + 999) // 1000
+    assert digests[0] == hashlib.sha256(blob[:1000]).digest()
+    entry = manifest_entry("e" * 64, blob, 1000)
+    assert entry.total_size == len(blob)
+    assert entry.n_chunks == len(digests)
+
+
+# --------------------------------------------------------- chunked sync
+
+
+def test_large_blob_streams_in_bounded_frames():
+    rng = np.random.default_rng(1)
+    a, b = _node("a"), _node("b")
+    a.contribute(_payload(rng))                     # 16 KiB >> 2 KiB frames
+    t = _sync(b, a)
+    assert b.root() == a.root()
+    assert not b.missing_blobs()
+    eid = next(iter(a.state.visible()))
+    assert _tensor_bytes(a, eid) == _tensor_bytes(b, eid)
+    assert t.max_frame_seen <= MAX_FRAME
+    assert a.stats["blobs_announced"] == 1
+    assert a.stats["chunks_served"] == b.stats["chunks_verified"] > 4
+    assert b.stats["blobs_assembled"] == 1
+    assert not b._partials and not b._chunk_pending
+
+
+def test_small_blobs_still_batch_into_blob_resp():
+    rng = np.random.default_rng(2)
+    a, b = _node("a"), _node("b")
+    for _ in range(3):
+        a.contribute(_payload(rng, (4, 4)))         # each ~100B
+    t = _sync(b, a)
+    assert not b.missing_blobs()
+    assert a.stats["blobs_served"] == 3
+    assert a.stats["blobs_announced"] == 0
+    assert "ChunkData" not in t.bytes_by_type
+
+
+def test_blob_resp_batches_respect_frame_budget():
+    """Many small blobs split across several BlobResp frames, each within
+    the frame budget, instead of one unbounded frame."""
+    rng = np.random.default_rng(3)
+    a, b = _node("a"), _node("b")
+    for _ in range(12):
+        a.contribute(_payload(rng, (8, 8)))         # ~300B each, 12 > budget
+    t = _sync(b, a)
+    assert not b.missing_blobs()
+    assert t.max_frame_seen <= MAX_FRAME
+    assert a.stats["blobs_served"] == 12
+
+
+def test_mixed_small_and_large_blobs_one_session():
+    rng = np.random.default_rng(4)
+    a, b = _node("a"), _node("b")
+    a.contribute(_payload(rng, (64, 64)))           # chunked
+    a.contribute(_payload(rng, (4, 4)))             # batched
+    t = _sync(b, a)
+    assert not b.missing_blobs()
+    assert a.stats["blobs_announced"] == 1
+    assert a.stats["blobs_served"] == 1
+    assert t.max_frame_seen <= MAX_FRAME
+
+
+def test_compressed_chunked_blob_reconstructs_deterministically():
+    rng = np.random.default_rng(5)
+    a = _node("a", compress_blobs=True)
+    b = _node("b", compress_blobs=True)
+    a.contribute(_payload(rng, (80, 80)))
+    _sync(b, a)
+    assert not b.missing_blobs()
+    from repro.core.compression import compress_tree, decompress_tree
+    eid = next(iter(a.state.visible()))
+    expect = decompress_tree(compress_tree(a.state.store[eid]))
+    assert np.asarray(expect["w"]).tobytes() == _tensor_bytes(b, eid)
+
+
+# ------------------------------------------------------- resume semantics
+
+
+def _partial_pump(nodes, transport, deliveries):
+    """Deliver at most `deliveries` messages, then stop (dead session).
+    Returns the messages that were in flight when the session died."""
+    done = 0
+    dead = False
+    lost = []
+    while not dead:
+        progressed = False
+        for node_id, node in nodes.items():
+            batch = transport.recv_ready(node_id)
+            for i, (_src, msg) in enumerate(batch):
+                if dead:
+                    lost.append(msg)
+                    continue
+                progressed = True
+                for dst, reply in node.handle(msg):
+                    transport.send(node_id, dst, reply)
+                done += 1
+                dead = done >= deliveries
+        if not progressed and not dead:
+            return lost
+    # drain whatever the dead session never delivered
+    for node_id in nodes:
+        lost.extend(m for _s, m in transport.recv_ready(node_id))
+    return lost
+
+
+def test_killed_session_resumes_without_reshipping_verified_chunks():
+    rng = np.random.default_rng(6)
+    a, b = _node("a"), _node("b")
+    a.contribute(_payload(rng))
+    t1 = InMemoryTransport()
+    t1.register("a")
+    t1.register("b")
+    t1.send("b", "a", b.begin_sync("a"))
+    in_flight = _partial_pump({"a": a, "b": b}, t1, deliveries=8)
+    verified_before = b.stats["chunks_verified"]
+    assert 0 < verified_before < len(chunk_digests(
+        encode_blob(a.state.store[next(iter(a.state.visible()))]),
+        b._chunk_payload))
+    assert b.missing_blobs()
+    # session died: chunks shipped but never delivered are really lost
+    lost = sum(isinstance(m, ChunkData) for m in in_flight)
+    _sync(b, a)                                   # new session resumes
+    assert not b.missing_blobs()
+    assert b.stats["chunks_redundant"] == 0       # nothing verified twice
+    # served = verified + the in-flight chunks the dead session dropped
+    assert a.stats["chunks_served"] == b.stats["chunks_verified"] + lost
+    eid = next(iter(a.state.visible()))
+    assert _tensor_bytes(a, eid) == _tensor_bytes(b, eid)
+
+
+def test_partial_state_survives_peer_change():
+    """Chunks verified from one peer complete the blob from another peer
+    announcing the identical chunking."""
+    rng = np.random.default_rng(7)
+    a, b, c = _node("a"), _node("b"), _node("c")
+    a.contribute(_payload(rng))
+    # c holds the same blob (content-addressed => same encoding/manifest)
+    c.state = c.state.merge(a.state)
+    t1 = InMemoryTransport()
+    t1.register("a")
+    t1.register("b")
+    t1.send("b", "a", b.begin_sync("a"))
+    in_flight = _partial_pump({"a": a, "b": b}, t1, deliveries=8)
+    lost = sum(isinstance(m, ChunkData) for m in in_flight)
+    assert 0 < b.stats["chunks_verified"]
+    assert b.missing_blobs()
+    _sync(b, c)                                    # resume from c
+    assert not b.missing_blobs()
+    assert b.stats["chunks_redundant"] == 0
+    assert a.stats["chunks_served"] + c.stats["chunks_served"] \
+        == b.stats["chunks_verified"] + lost
+
+
+# ------------------------------------------- concurrent-session regression
+
+
+def test_concurrent_sessions_fetch_each_blob_exactly_once():
+    """N sessions in one round: every missing blob is requested from (and
+    served by) exactly one peer — the per-(peer, sid) in-flight fix."""
+    rng = np.random.default_rng(8)
+    peers = [SyncNode(f"p{i}") for i in range(3)]
+    payloads = [_payload(rng, (4, 4)) for _ in range(4)]
+    for p in peers:
+        for pl in payloads:
+            p.contribute(pl)
+    for p in peers[1:]:                            # identical replicas
+        p.state = peers[0].state.merge(p.state)
+        p.state = peers[0].state
+    z = SyncNode("z")
+    z.state = apply_delta(
+        z.state, delta_for_entries(peers[0].state, peers[0].state.adds,
+                                   peers[0].state.removes))
+    missing = z.missing_blobs()
+    assert len(missing) == 4
+    t = InMemoryTransport()
+    for n in [z] + peers:
+        t.register(n.node_id)
+    # one round: z opens concurrent sessions with all three peers
+    for p in peers:
+        t.send("z", p.node_id, z.begin_sync(p.node_id))
+    pump({n.node_id: n for n in [z] + peers}, t)
+    assert not z.missing_blobs()
+    served = sum(p.stats["blobs_served"] for p in peers)
+    assert served == len(missing)                  # exactly once, not 3x
+
+
+def test_blob_resp_clears_only_its_own_session():
+    """Regression for _blob_inflight.clear(): a BlobResp from peer X must
+    not make blobs pending from peer Y requestable again."""
+    rng = np.random.default_rng(9)
+    p1, p2 = _payload(rng, (4, 4)), _payload(rng, (4, 4))
+    x, y, w = SyncNode("x"), SyncNode("y"), SyncNode("w")
+    for p in (x, y, w):
+        p.contribute(p1)
+        p.contribute(p2)
+        p.state = x.state if p is not x else p.state
+    y.state = x.state
+    w.state = x.state
+    e1, e2 = sorted(x.state.visible())
+    z = SyncNode("z")
+    z.state = apply_delta(
+        z.state, delta_for_entries(x.state, {a for a in x.state.adds
+                                             if a.element_id == e1},
+                                   frozenset()))
+    # session with x: z requests {e1}
+    [(dst, req_x)] = z._maybe_blob_req("x", 101)
+    assert set(req_x.eids) == {e1}
+    # e2's metadata arrives; session with y requests only {e2}
+    z.state = apply_delta(
+        z.state, delta_for_entries(x.state, {a for a in x.state.adds
+                                             if a.element_id == e2},
+                                   frozenset()))
+    [(dst, req_y)] = z._maybe_blob_req("y", 202)
+    assert set(req_y.eids) == {e2}
+    # x's response arrives (carries e1); y's is still in flight
+    [(_, resp_x)] = x.handle(req_x)
+    assert isinstance(resp_x, BlobResp)
+    z.handle(resp_x)
+    # a third concurrent session must NOT re-request e2
+    assert z._maybe_blob_req("w", 303) == []
+    [(_, resp_y)] = y.handle(req_y)
+    z.handle(resp_y)
+    assert not z.missing_blobs()
+    total = (x.stats["blobs_served"] + y.stats["blobs_served"]
+             + w.stats["blobs_served"])
+    assert total == 2                              # each blob served once
+
+
+def test_multi_frame_blob_resp_retires_eids_incrementally():
+    """One BlobReq answered by several BlobResp frames: the first frame
+    must retire only the eids it carried — the rest stay in flight and
+    are not re-requested from another peer mid-response."""
+    rng = np.random.default_rng(21)
+    x = _node("x")
+    for _ in range(12):
+        x.contribute(_payload(rng, (8, 8)))        # ~300B each: multi-frame
+    z = _node("z")
+    z.state = apply_delta(
+        z.state, delta_for_entries(x.state, x.state.adds, frozenset()))
+    missing = z.missing_blobs()
+    [(_, req)] = z._maybe_blob_req("x", 1)
+    assert set(req.eids) == set(missing)
+    frames = [m for _, m in x.handle(req)]
+    assert len(frames) > 1 and all(isinstance(m, BlobResp) for m in frames)
+    z.handle(frames[0])                            # first frame only
+    still_coming = set(missing) - set(frames[0].payloads)
+    assert still_coming
+    assert z._maybe_blob_req("w", 2) == []         # not re-requested
+    for m in frames[1:]:
+        z.handle(m)
+    assert not z.missing_blobs()
+    assert x.stats["blobs_served"] == 12
+
+
+def test_oversized_manifest_chunking_rejected():
+    """A peer announcing chunks above our frame budget must not be
+    adopted: its ChunkData frames would break the local max-frame bound
+    and its partial could never complete from smaller-budget peers."""
+    rng = np.random.default_rng(22)
+    big = _payload(rng, (100, 100))                # ~40 KiB encoded
+    a = SyncNode("a", max_frame_bytes=8192)        # chunks ~7.9 KiB
+    a.contribute(big)
+    b = _node("b")                                 # budget ~1.8 KiB
+    _sync(b, a)
+    assert b.stats["manifest_oversize"] >= 1
+    assert b.missing_blobs()                       # not fetched from a
+    assert not b._partials                         # nothing adopted
+    c = _node("c")                                 # same budget as b
+    c.state = c.state.merge(a.state)
+    _sync(b, c)                                    # compatible chunking
+    assert not b.missing_blobs()
+
+
+def test_new_session_with_peer_unpins_lost_requests():
+    """A lost BlobResp must not pin its eids forever: the next session
+    with that peer supersedes the dead request."""
+    rng = np.random.default_rng(10)
+    a, z = SyncNode("a"), SyncNode("z")
+    a.contribute(_payload(rng, (4, 4)))
+    z.state = apply_delta(
+        z.state, delta_for_entries(a.state, a.state.adds, frozenset()))
+    [(_, req)] = z._maybe_blob_req("a", 1)         # response will be "lost"
+    assert z._maybe_blob_req("b", 2) == []         # pinned while pending
+    z.begin_sync("a")                              # fresh session with a
+    assert z._maybe_blob_req("a", z._sid) != []    # requestable again
+
+
+# --------------------------------------------------- adversarial networks
+
+
+def test_chunked_transfer_under_loss_and_reorder():
+    g = SimGossipNetwork(3, seed=13, mode="antientropy",
+                         max_frame_bytes=MAX_FRAME, chunk_window=3,
+                         link=LinkSpec(loss=0.15, reorder=0.3,
+                                       jitter=0.002))
+    rng = np.random.default_rng(13)
+    big = _payload(rng)
+    g.nodes[0].contribute(big)
+    g.run_epidemic(fanout=2, max_rounds=60, require_blobs=True)
+    assert g.converged(require_blobs=True)
+    assert g.net.max_frame_seen <= MAX_FRAME
+    eid = next(iter(g.nodes[0].state.visible()))
+    ref = np.asarray(g.nodes[0].state.store[eid]["w"]).tobytes()
+    assert all(np.asarray(x.state.store[eid]["w"]).tobytes() == ref
+               for x in g.nodes)
+
+
+def test_chunked_transfer_survives_partition_mid_transfer():
+    g = SimGossipNetwork(2, seed=14, mode="antientropy",
+                         max_frame_bytes=MAX_FRAME, chunk_window=3)
+    rng = np.random.default_rng(14)
+    g.nodes[0].contribute(_payload(rng))
+    ids = [x.node_id for x in g.nodes]
+    # start a session, deliver a few events, then cut the link
+    g.net.send(ids[1], ids[0], g.nodes[1].begin_sync(ids[0]))
+    for _ in range(6):
+        g.net.step()
+    g.net.partition([{ids[0]}, {ids[1]}])
+    g.net.run()                                    # in-flight frames drop
+    assert g.nodes[1].missing_blobs()
+    verified_during_cut = g.nodes[1].stats["chunks_verified"]
+    g.net.heal()
+    g.run_epidemic(fanout=1, max_rounds=10, require_blobs=True)
+    assert g.converged(require_blobs=True)
+    assert g.nodes[1].stats["chunks_redundant"] == 0
+    assert g.nodes[1].stats["chunks_verified"] > verified_during_cut
+
+
+def test_duplicated_chunk_frames_are_idempotent():
+    g = SimGossipNetwork(2, seed=15, mode="antientropy",
+                         max_frame_bytes=MAX_FRAME, chunk_window=3,
+                         link=LinkSpec(duplicate=0.5))
+    rng = np.random.default_rng(15)
+    g.nodes[0].contribute(_payload(rng))
+    g.run_epidemic(fanout=1, max_rounds=10, require_blobs=True)
+    assert g.converged(require_blobs=True)
+    assert g.net.msgs_duplicated > 0
+    # duplicates are dropped at the reassembly layer, never double-counted
+    n1 = g.nodes[1]
+    assert n1.stats["blobs_assembled"] == 1
+    assert n1.stats["chunks_redundant"] + n1.stats["chunk_orphan"] > 0
+
+
+def test_windowing_bounds_inflight_bytes():
+    """Resident memory on the wire stays O(window * chunk), not O(blob)."""
+    g = SimGossipNetwork(2, seed=16, mode="antientropy",
+                         max_frame_bytes=MAX_FRAME, chunk_window=3,
+                         link=LinkSpec(bandwidth=50_000.0))
+    rng = np.random.default_rng(16)
+    g.nodes[0].contribute(_payload(rng))           # ~16 KiB encoded
+    g.run_epidemic(fanout=1, max_rounds=6, require_blobs=True)
+    assert g.converged(require_blobs=True)
+    assert g.net.peak_inflight_bytes <= MAX_FRAME * (3 + 4)
+
+
+# ------------------------------------------------- persistent connections
+
+
+def test_persistent_transport_reuses_connections():
+    rng = np.random.default_rng(17)
+    t = PersistentLoopbackTransport()
+    try:
+        a, b = _node("a"), _node("b")
+        a.contribute(_payload(rng))                # chunked: many frames
+        a.contribute(_payload(rng, (4, 4)))
+        _sync(b, a, transport=t)
+        assert not b.missing_blobs()
+        assert b.root() == a.root()
+        assert t.max_frame_seen <= MAX_FRAME
+        assert t.msgs_sent > 10                    # many frames ...
+        assert t.connections_opened <= 2           # ... two connections
+    except OSError:
+        pytest.skip("loopback sockets unavailable in this sandbox")
+    finally:
+        t.close()
+
+
+def test_gossip_network_over_persistent_transport():
+    rng = np.random.default_rng(18)
+    t = PersistentLoopbackTransport()
+    try:
+        net = GossipNetwork(3, seed=19, transport=t)
+    except OSError:
+        pytest.skip("loopback sockets unavailable in this sandbox")
+    try:
+        for node in net.nodes:
+            node.contribute(_payload(rng, (8, 8)))
+        for _ in range(2):
+            net.all_pairs_round()
+        assert net.converged()
+        assert t.connections_opened <= 6           # directed pairs, once
+    finally:
+        t.close()
+
+
+def test_persistent_transport_interleaved_senders():
+    """Frames from several senders interleave at one receiver; each
+    connection's stream parses independently."""
+    t = PersistentLoopbackTransport()
+    try:
+        nodes = {n: _node(n) for n in ("a", "b", "c")}
+        rng = np.random.default_rng(20)
+        for n in nodes.values():
+            n.contribute(_payload(rng, (16, 16)))
+            t.register(n.node_id)
+        for src in ("b", "c"):
+            t.send(src, "a", nodes[src].begin_sync("a"))
+        pump(nodes, t)
+        assert len({n.root() for n in nodes.values()}) <= 2
+        assert not nodes["a"].missing_blobs()
+    except OSError:
+        pytest.skip("loopback sockets unavailable in this sandbox")
+    finally:
+        t.close()

@@ -55,6 +55,20 @@ def test_bandwidth_cap_serialises_frames():
     assert net.clock == pytest.approx(3 * per_frame, rel=0.05)
 
 
+def test_frame_and_inflight_accounting():
+    net = SimNetwork(seed=0, default_link=LinkSpec(latency=0.5))
+    net.register("b", lambda *_: None)
+    sizes = []
+    for sid in range(3):
+        sizes.append(net.send("a", "b", SyncDone("a", sid, VersionVector())))
+    assert net.max_frame_seen == max(sizes)
+    assert net.inflight_bytes == sum(sizes)      # queued, undelivered
+    assert net.peak_inflight_bytes == sum(sizes)
+    net.run()
+    assert net.inflight_bytes == 0               # all delivered
+    assert net.peak_inflight_bytes == sum(sizes)
+
+
 def test_loss_drops_and_accounts():
     net = SimNetwork(seed=0, default_link=LinkSpec(loss=1.0))
     net.register("b", lambda *_: pytest.fail("lossy link delivered"))

@@ -182,6 +182,29 @@ def test_sync_message_roundtrips():
             assert out == m
 
 
+def test_streaming_message_roundtrips():
+    from repro.net.wire import (BlobManifest, ChunkData, ChunkReq,
+                                ManifestEntry, WireError, chunk_digests,
+                                decode_blob, encode_blob)
+    blob = bytes(range(256)) * 20
+    entry = ManifestEntry("e" * 64, 1024, len(blob),
+                          chunk_digests(blob, 1024))
+    msgs = [
+        BlobManifest("a", 7, (entry,)),
+        ChunkReq("b", 7, "e" * 64, 1024, (0, 3, 4)),
+        ChunkData("a", 7, "e" * 64, 3, blob[3072:4096]),
+    ]
+    for m in msgs:
+        assert roundtrip(m) == m
+    # blob codec: canonical bytes round-trip through decode_blob
+    tree = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4)}
+    assert jnp.array_equal(decode_blob(encode_blob(tree))["w"], tree["w"])
+    # malformed digests are rejected at encode time
+    bad = ManifestEntry("e" * 64, 1024, len(blob), (b"\x00" * 5,))
+    with pytest.raises(WireError):
+        encode_message(BlobManifest("a", 7, (bad,)))
+
+
 # ------------------------------------------------- seeded property sweep
 
 

@@ -148,6 +148,70 @@ def test_incremental_mean_matches_weight_average():
     assert jnp.allclose(inc.value(), full, atol=1e-6)
 
 
+def test_incremental_mean_sync_repairs_divergence():
+    """Regression: out-of-order arrivals and retractions silently
+    diverged the accumulator from resolve(state, "weight_average") —
+    sync(state) re-folds from the canonical visible set."""
+    contribs = make_contribs(5)
+    s = _state_with(contribs)
+    inc = IncrementalMean()
+    # contributions arrive in NON-canonical order
+    for eid in reversed(canonical_order(s)):
+        inc.add(eid, s.store[eid])
+    # one element is retracted after the fact — add() never sees it
+    victim = canonical_order(s)[1]
+    s = s.remove(victim, "n0")
+    full = resolve(s, "weight_average", use_cache=False)
+    assert not jnp.allclose(inc.value(), full, atol=1e-6)   # diverged
+    assert inc.sync(s)                       # re-fold was needed
+    assert inc.count() == len(canonical_order(s))
+    assert victim not in inc._ids
+    assert jnp.allclose(inc.value(), full, atol=1e-6)
+    assert not inc.sync(s)                   # already canonical: no-op
+    # fast path still works after a re-fold
+    extra = make_contribs(7)[6]
+    s = s.add(extra, node="n9")
+    (new_eid,) = set(canonical_order(s)) - set(inc._ids)
+    inc.add(new_eid, s.store[new_eid])
+    assert inc.count() == len(canonical_order(s))
+
+
+def test_incremental_mean_empty_value_raises():
+    with pytest.raises(ValueError):
+        IncrementalMean().value()
+
+
+def test_incremental_mean_sync_rejects_missing_payloads():
+    """A visible element whose blob hasn't arrived must raise, not be
+    silently dropped from the average."""
+    contribs = make_contribs(3)
+    s = _state_with(contribs)
+    s.store.pop(canonical_order(s)[0])           # blob not yet fetched
+    with pytest.raises(KeyError):
+        IncrementalMean().sync(s)
+
+
+def test_resolve_cache_distinguishes_large_array_cfg():
+    """Regression: repr() of large arrays truncates with `...`, so two
+    resolves differing only in a big array knob aliased to one cache
+    entry and the second caller got the first caller's pytree."""
+    contribs = make_contribs(3)
+    s = _state_with(contribs)
+    shape = np.asarray(contribs[0]).shape
+    # differ only beyond repr's edgeitems window => identical reprs
+    mask_a = np.zeros(10_000, np.float32)
+    mask_b = np.zeros(10_000, np.float32)
+    mask_b[5_000] = 1.0
+    assert repr(mask_a) == repr(mask_b)      # the aliasing precondition
+    clear_cache()
+    r_a = resolve(s, "weight_average", knob=mask_a)
+    r_b = resolve(s, "weight_average", knob=mask_b)
+    assert r_a is not r_b                    # distinct cache entries
+    assert resolve(s, "weight_average", knob=mask_a) is r_a
+    assert resolve(s, "weight_average", knob=mask_b) is r_b
+    clear_cache()
+
+
 def test_hierarchical_resolve_deterministic():
     contribs = make_contribs(9)
     states = [_state_with([c]) for c in contribs]
