@@ -76,11 +76,18 @@ class GossipNode:
 
 class GossipNetwork:
     def __init__(self, n: int, seed: int = 0, use_deltas: bool = False,
-                 transport=None, compress_payloads: bool = False):
+                 transport=None, compress_payloads: bool = False,
+                 placement=None):
         self.nodes = [GossipNode(f"node{i:03d}") for i in range(n)]
         self.rng = random.Random(seed)
         self.use_deltas = use_deltas
         self.compress_payloads = compress_payloads
+        # sharded store (repro.net.store.Placement): pushes still carry
+        # the full Layer-1 metadata, but payloads ship only to their
+        # placement holders — partial replication on the legacy path.
+        # Each node additionally keeps the payloads it contributed
+        # (merge unions stores; filtering is sender-side only).
+        self.placement = placement
         self.transport = transport
         if transport is not None:
             for node in self.nodes:
@@ -103,6 +110,14 @@ class GossipNetwork:
 
     # ------------------------------------------------------------ delivery
 
+    def _placed_payloads(self, dst_id: str, payloads: Dict) -> Dict:
+        """Payloads `dst_id` should receive under the placement (all of
+        them when no placement is configured)."""
+        if self.placement is None:
+            return payloads
+        return {eid: p for eid, p in payloads.items()
+                if self.placement.is_holder(dst_id, eid)}
+
     def _send(self, i: int, j: int):
         src, dst = self.nodes[i], self.nodes[j]
         if self.transport is not None:
@@ -110,24 +125,37 @@ class GossipNetwork:
         elif self.use_deltas:
             seen = VersionVector(src.known.get(dst.node_id, {}))
             d = delta_since(src.state, seen)
+            d = Delta(d.adds, d.removes, d.vv,
+                      self._placed_payloads(dst.node_id, d.payloads),
+                      d.compressed)
             dst.receive_delta(d)
             self.bytes_sent += d.approx_bytes()
             src.known[dst.node_id] = src.state.vv.to_dict()
         else:
-            dst.receive_state(src.state)
+            s = src.state
+            if self.placement is not None:
+                s = CRDTMergeState(s.adds, s.removes, s.vv,
+                                   self._placed_payloads(dst.node_id,
+                                                         s.store))
+            dst.receive_state(s)
 
     def _send_wire(self, src: GossipNode, dst: GossipNode):
         """Serialize through the wire codec and a repro.net transport;
         delivery stays synchronous (the rounds are the schedule)."""
-        from repro.net.wire import delta_to_msg, state_to_msg
+        from repro.net.wire import DeltaMsg, StateMsg
         if self.use_deltas:
             seen = VersionVector(src.known.get(dst.node_id, {}))
             d = delta_since(src.state, seen,
                             compress=self.compress_payloads)
-            msg = delta_to_msg(d, src.node_id)
+            msg = DeltaMsg(src.node_id, d.adds, d.removes, d.vv,
+                           self._placed_payloads(dst.node_id, d.payloads),
+                           d.compressed)
             src.known[dst.node_id] = src.state.vv.to_dict()
         else:
-            msg = state_to_msg(src.state, src.node_id)
+            s = src.state
+            msg = StateMsg(src.node_id, s.adds, s.removes, s.vv,
+                           self._placed_payloads(dst.node_id,
+                                                 dict(s.store)))
         self.bytes_sent += self.transport.send(src.node_id, dst.node_id,
                                                msg)
         for _peer, received in self.transport.recv_ready(dst.node_id):

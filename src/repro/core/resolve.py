@@ -13,12 +13,18 @@ Beyond-paper L3 mitigations implemented here:
   * resolve caching keyed by (Merkle root, strategy, reduction);
   * incremental resolve for strategies with algebraic structure
     (weight averaging: O(p) per new contribution);
-  * hierarchical resolve (sub-group resolve + second pass).
+  * hierarchical resolve (sub-group resolve + second pass);
+  * fetch-on-resolve: under a sharded blob store (repro.net.store) a
+    replica's store holds only the payloads placed on it, so resolve()
+    accepts a `fetch` hook that pulls the missing visible payloads over
+    the network on demand — determinism is unaffected because payloads
+    are content-addressed (equal eid => byte-equal pytree, paper
+    Assumption 11).
 """
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +56,13 @@ def cache_info() -> Tuple[int, int]:
 
 
 def seed_from_root(root: bytes) -> int:
+    """Strategy RNG seed derived from the Merkle root (paper Def. 6).
+
+    >>> seed_from_root(b"\\x00" * 32)
+    0
+    >>> seed_from_root(b"\\xff" * 32) == 0x7FFFFFFFFFFFFFFF
+    True
+    """
     return int.from_bytes(root[:8], "big") & 0x7FFFFFFFFFFFFFFF
 
 
@@ -86,8 +99,19 @@ def _cfg_key(base: Any, cfg: Dict[str, Any]) -> str:
 
 def resolve(state: CRDTMergeState, strategy_name: str,
             base: Any = None, *, reduction: str = "fold",
-            use_cache: bool = True, **cfg) -> Any:
-    """Compute the merged model for the converged state."""
+            use_cache: bool = True,
+            fetch: Optional[Callable[[Tuple[str, ...]],
+                                     Dict[str, Any]]] = None,
+            **cfg) -> Any:
+    """Compute the merged model for the converged state.
+
+    `fetch` is the sharded-store hook: called with the visible eids the
+    local store lacks, it must return their payloads (typically by
+    pulling them over the network — repro.net installs a hook that runs
+    multi-source chunk fetch against the placement's holders). Without
+    a hook, a missing payload raises KeyError, because silently merging
+    a subset would be a wrong answer with no signal.
+    """
     ids = canonical_order(state)
     if not ids:
         raise ValueError("resolve() requires a non-empty visible set")
@@ -96,7 +120,18 @@ def resolve(state: CRDTMergeState, strategy_name: str,
     if use_cache and key in _CACHE:
         _CACHE.move_to_end(key)
         return _CACHE[key]
-    contribs = [state.store[i] for i in ids]
+    store = state.store
+    absent = tuple(i for i in ids if i not in store)
+    if absent:
+        if fetch is None:
+            raise KeyError(f"store lacks payloads for {list(absent)}; "
+                           "sync blobs first or pass a fetch hook")
+        store = dict(store)
+        store.update(fetch(absent))
+        still = [i for i in ids if i not in store]
+        if still:
+            raise KeyError(f"fetch hook could not obtain {still}")
+    contribs = [store[i] for i in ids]
     seed = seed_from_root(state.merkle_root())
     out = apply_strategy(strategy_name, contribs, base=base, seed=seed,
                          reduction=reduction, **cfg)

@@ -1,18 +1,23 @@
-"""repro.net — wire codec, transports, anti-entropy sync, network sim.
+"""repro.net — wire codec, transports, sharded store, sync, network sim.
 
 Takes gossip from in-process object sharing (core.gossip legacy path) to
 an actual protocol: every message crosses a byte boundary through the
-versioned framed codec (`wire`), moves over a pluggable transport
-(`transport`: in-memory queues, per-frame loopback TCP, or persistent
-per-peer TCP connections), and replicas reconcile via Merkle-partitioned
-anti-entropy (`antientropy`) instead of shipping full states. Large
-blobs stream as bounded-size manifest/chunk frames, resumable across
-sessions. `simulator` is a deterministic discrete-event
+versioned framed codec (`wire`, spec in docs/PROTOCOL.md), moves over a
+pluggable transport (`transport`: in-memory queues, per-frame loopback
+TCP, or persistent per-peer TCP connections), and replicas reconcile via
+Merkle-partitioned anti-entropy (`antientropy`) instead of shipping full
+states. Large blobs stream as bounded-size manifest/chunk frames,
+resumable across sessions and fetched multi-source — disjoint chunk
+windows of one blob from several peers in parallel. `store` partitions
+payload residency across nodes by rendezvous hashing (Layer-1 metadata
+stays fully replicated); `simulator` is a deterministic discrete-event
 network with per-link latency/bandwidth/loss/duplication/reordering for
 convergence experiments the in-process tests cannot express.
 """
 from repro.net.antientropy import SyncNode, reconcile_root, state_items
 from repro.net.simulator import LinkSpec, SimGossipNetwork, SimNetwork
+from repro.net.store import (BlobSource, Placement, bitmap_indices,
+                             chunk_bitmap, rendezvous_holders)
 from repro.net.transport import (InMemoryTransport, LoopbackSocketTransport,
                                  PersistentLoopbackTransport, Transport,
                                  pump)
@@ -23,6 +28,8 @@ from repro.net.wire import (DEFAULT_MAX_FRAME, decode_blob, decode_frame,
 __all__ = [
     "SyncNode", "reconcile_root", "state_items",
     "LinkSpec", "SimGossipNetwork", "SimNetwork",
+    "BlobSource", "Placement", "bitmap_indices", "chunk_bitmap",
+    "rendezvous_holders",
     "InMemoryTransport", "LoopbackSocketTransport",
     "PersistentLoopbackTransport", "Transport", "pump",
     "DEFAULT_MAX_FRAME", "decode_blob", "decode_frame", "decode_message",

@@ -24,6 +24,25 @@ Reassembly state lives on the node, not the session, so a transfer
 killed mid-stream resumes in the next session without re-shipping any
 verified chunk.
 
+Chunk fetch is multi-source (wire v2): every peer that announces a
+manifest for an in-progress blob, or answers a HaveReq with a HaveMap
+claiming it, joins that blob's source pool, and the scheduler keeps one
+disjoint window of missing chunks outstanding per source — different
+chunks of one blob stream from several peers in parallel, each verified
+against the manifest digest, with zero chunks shipped twice on clean
+links. A window that stalls past `chunk_timeout` (harness-driven
+`tick(now)`) marks its source slow and re-assigns the chunks to the
+remaining sources — straggler recovery without retransmission timers in
+the protocol itself.
+
+With a `Placement` (repro.net.store), blobs are partitioned across
+storage nodes by rendezvous hashing: `missing_blobs()` shrinks to the
+eids this node is responsible for (plus explicit `want_blobs` pins, the
+fetch-on-resolve path), `shed_blobs()` drops payloads placed elsewhere,
+and `query_holders()` aims HaveReq discovery at exactly the nodes the
+placement function names. Layer-1 metadata stays fully replicated —
+only payload residency is partial.
+
 The reconciliation root covers the *full* item set — every add entry and
 every tombstone, not just the visible elements — because sync must also
 propagate removals. Entry exchange is a CRDT join (set union + vv merge),
@@ -40,7 +59,8 @@ from __future__ import annotations
 
 import hashlib
 from collections import Counter, OrderedDict
-from typing import Any, Dict, FrozenSet, Iterable, List, Optional, Set, Tuple
+from typing import (Any, Callable, Dict, FrozenSet, Iterable, List, Optional,
+                    Sequence, Set, Tuple)
 
 from repro.core.delta import Delta, apply_delta
 from repro.core.merkle import bucket_digests, diff_buckets, pick_bucket_bits, \
@@ -48,10 +68,13 @@ from repro.core.merkle import bucket_digests, diff_buckets, pick_bucket_bits, \
 from repro.core.resolve import resolve
 from repro.core.state import AddEntry, CRDTMergeState
 from repro.core.version_vector import VersionVector
+from repro.net.store import (BlobSource, Placement, bitmap_indices,
+                             chunk_bitmap)
 from repro.net.wire import (CHUNK_ENVELOPE, DEFAULT_MAX_FRAME, BlobManifest,
                             BlobReq, BlobResp, BucketItemsMsg, BucketsMsg,
-                            ChunkData, ChunkReq, DeltaMsg, ManifestEntry,
-                            Message, StateMsg, SyncDone, SyncReq, WireError,
+                            ChunkData, ChunkReq, DeltaMsg, HaveEntry,
+                            HaveMap, HaveReq, ManifestEntry, Message,
+                            StateMsg, SyncDone, SyncReq, WireError,
                             decode_blob, encode_blob, manifest_entry,
                             msg_to_delta, msg_to_state)
 
@@ -174,7 +197,10 @@ class SyncNode:
                  state: Optional[CRDTMergeState] = None,
                  compress_blobs: bool = False,
                  max_frame_bytes: int = DEFAULT_MAX_FRAME,
-                 chunk_window: int = 8):
+                 chunk_window: int = 8,
+                 placement: Optional[Placement] = None,
+                 chunk_timeout: Optional[float] = None,
+                 max_fetch_timeouts: int = 8):
         if max_frame_bytes <= CHUNK_ENVELOPE:
             raise ValueError(f"max_frame_bytes must exceed {CHUNK_ENVELOPE}")
         self.node_id = node_id
@@ -182,6 +208,22 @@ class SyncNode:
         self.compress_blobs = compress_blobs
         self.max_frame_bytes = max_frame_bytes
         self.chunk_window = max(1, chunk_window)
+        # sharded store: when set, this node is responsible only for the
+        # eids the placement function assigns it (plus want_blobs pins)
+        self.placement = placement
+        # straggler detection: a chunk window with no progress for this
+        # many (harness-clock) seconds is re-assigned by tick(). None
+        # disables timeouts — lost windows then fall to session GC.
+        self.chunk_timeout = chunk_timeout
+        self.max_fetch_timeouts = max(1, max_fetch_timeouts)
+        # harness-maintained clock (simulator virtual time or wall time);
+        # only read relative to itself, so the epoch is irrelevant
+        self.clock = 0.0
+        # fetch-on-resolve: hook(self, missing_eids) -> {eid: payload},
+        # installed by the harness (e.g. SimGossipNetwork) to pull
+        # non-resident blobs over the network when resolve() needs them
+        self.fetch_hook: Optional[
+            Callable[["SyncNode", Tuple[str, ...]], Dict[str, Any]]] = None
         # data budget per frame: a full chunk + envelope stays <= max
         self._chunk_payload = max_frame_bytes - CHUNK_ENVELOPE
         self.known: Dict[str, dict] = {}      # peer -> last-sent vv (deltas)
@@ -197,6 +239,18 @@ class SyncNode:
         self._partials: Dict[str, _PartialBlob] = {}
         # (peer, sid, eid) -> chunk indices awaited from that session
         self._chunk_pending: Dict[Tuple[str, int, str], Set[int]] = {}
+        # multi-source pool: eid -> {peer -> BlobSource}; every peer that
+        # announced a manifest or claimed the blob in a HaveMap. The
+        # scheduler keeps one disjoint window outstanding per source.
+        self._sources: Dict[str, Dict[str, BlobSource]] = {}
+        # eid -> peers whose window timed out (skipped until the pool
+        # would otherwise idle); eid -> consecutive timeout count
+        self._slow: Dict[str, Set[str]] = {}
+        self._timeouts: Counter = Counter()
+        # (peer, sid, eid) -> clock time of last progress on that window
+        self._req_time: Dict[Tuple[str, int, str], float] = {}
+        # eids pinned fetchable regardless of placement responsibility
+        self._wanted: Set[str] = set()
         # request-state generation stamps: entries carry the value of
         # self._sessions at creation/refresh; anything older than the
         # latest begin_sync() is a dead session's leftovers (nothing a
@@ -221,22 +275,68 @@ class SyncNode:
                    element_id: Optional[str] = None) -> None:
         self.state = self.state.add(contribution, self.node_id,
                                     element_id=element_id)
+        self._gc_partials()
 
     def retract(self, element_id: str) -> None:
         self.state = self.state.remove(element_id, self.node_id)
+        self._gc_partials()
 
     def root(self) -> bytes:
         return self.state.merkle_root()
 
     def resolve(self, strategy: str, base=None, **cfg):
+        if self.fetch_hook is not None:
+            hook = self.fetch_hook
+            return resolve(self.state, strategy, base=base,
+                           fetch=lambda eids: hook(self, eids), **cfg)
         return resolve(self.state, strategy, base=base, **cfg)
 
     def missing_blobs(self) -> Tuple[str, ...]:
         """Visible elements whose payload the store lacks. Tombstoned
         elements are excluded: resolve() never reads them, GC drops their
         blobs, and requesting them forever would re-ship dead payloads in
-        every session (or never terminate once no peer retains them)."""
-        return tuple(sorted(self.state.visible() - self.state.store.keys()))
+        every session (or never terminate once no peer retains them).
+        Under a placement, only eids this node is responsible for (or
+        has pinned via want_blobs) count — partial replication means
+        most blobs are *supposed* to live elsewhere."""
+        missing = self.state.visible() - self.state.store.keys()
+        if self.placement is not None:
+            missing = {e for e in missing if e in self._wanted
+                       or self.placement.is_holder(self.node_id, e)}
+        return tuple(sorted(missing))
+
+    # -- sharded store: pins and shedding ----------------------------------
+
+    def want_blobs(self, eids: Iterable[str]) -> None:
+        """Pin eids as fetchable/retained regardless of placement (the
+        fetch-on-resolve path: resolve needs every visible payload)."""
+        self._wanted.update(eids)
+
+    def unwant_blobs(self, eids: Iterable[str]) -> None:
+        self._wanted.difference_update(eids)
+        self._gc_partials()
+
+    def shed_blobs(self) -> Tuple[str, ...]:
+        """Drop store payloads placed on other nodes (and not pinned).
+
+        Returns the dropped eids. Call only once the payload is resident
+        at its holders (e.g. after a converged sync round) — shedding
+        the last copy would orphan the blob until its contributor
+        reappears."""
+        if self.placement is None:
+            return ()
+        drop = tuple(sorted(
+            eid for eid in self.state.store
+            if eid not in self._wanted
+            and not self.placement.is_holder(self.node_id, eid)))
+        if drop:
+            dead = set(drop)
+            store = {e: p for e, p in self.state.store.items()
+                     if e not in dead}
+            self.state = CRDTMergeState(self.state.adds, self.state.removes,
+                                        self.state.vv, store)
+            self.stats["blobs_shed"] += len(drop)
+        return drop
 
     def items(self) -> Dict[bytes, Tuple[str, Any]]:
         """Reconciliation items of the current state (memoized)."""
@@ -274,10 +374,12 @@ class SyncNode:
         if isinstance(msg, StateMsg):
             self.state = self.state.merge(msg_to_state(msg))
             self.merge_calls += 1
+            self._gc_partials()
             return []
         if isinstance(msg, DeltaMsg):
             self.state = apply_delta(self.state, msg_to_delta(msg))
             self.merge_calls += 1
+            self._gc_partials()
             return []
         if isinstance(msg, SyncReq):
             return self._on_sync_req(msg)
@@ -295,6 +397,10 @@ class SyncNode:
             return self._on_chunk_req(msg)
         if isinstance(msg, ChunkData):
             return self._on_chunk_data(msg)
+        if isinstance(msg, HaveReq):
+            return self._on_have_req(msg)
+        if isinstance(msg, HaveMap):
+            return self._on_have_map(msg)
         if isinstance(msg, SyncDone):
             self.state = CRDTMergeState(self.state.adds, self.state.removes,
                                         self.state.vv.merge(msg.vv),
@@ -358,6 +464,8 @@ class SyncNode:
                                                    msg.vv))
         self.merge_calls += 1
         self.stats["items_received"] += len(msg.adds) + len(msg.removes)
+        # a received tombstone may have killed an in-progress transfer
+        self._gc_partials()
         replies.extend(self._maybe_blob_req(msg.sender, msg.sid))
         return replies
 
@@ -457,9 +565,9 @@ class SyncNode:
 
     def _on_blob_manifest(self, msg: BlobManifest) -> List[Reply]:
         self._gc_stale_requests()
+        self._gc_partials()
         replies: List[Reply] = []
         inflight = self._blob_inflight.get((msg.sender, msg.sid))
-        streaming = {k[2] for k in self._chunk_pending}
         missing = set(self.missing_blobs())
         for entry in msg.entries:
             if inflight is not None:
@@ -487,57 +595,105 @@ class SyncNode:
                 # verified chunks we hold; wait for a matching peer
                 self.stats["manifest_mismatch"] += 1
                 continue
-            if entry.eid in streaming:
-                # another session is already pulling this blob; starting
-                # a second stream would double-ship chunks
-                self.stats["chunk_stream_dedup"] += 1
-                continue
-            req = self._next_chunk_req(msg.sender, msg.sid, partial)
-            if req is not None:
-                streaming.add(entry.eid)
-                replies.append(req)
+            # The announcer holds the whole blob: it joins the source
+            # pool. A second session announcing an in-progress blob used
+            # to be dropped (one stream per blob, deduped); now it is an
+            # extra source and the scheduler fans disjoint windows of
+            # the same blob across every source in parallel.
+            srcs = self._sources.setdefault(entry.eid, {})
+            if srcs and msg.sender not in srcs:
+                self.stats["chunk_stream_joined"] += 1
+            srcs[msg.sender] = BlobSource(msg.sid, None, self._sessions)
+            self._slow.get(entry.eid, set()).discard(msg.sender)
+            replies.extend(self._pump_chunk_reqs(entry.eid))
         if inflight is not None and not inflight:
             self._blob_inflight.pop((msg.sender, msg.sid), None)
             self._req_stamp.pop((msg.sender, msg.sid), None)
         return replies
 
-    def _next_chunk_req(self, peer: str, sid: int,
-                        partial: _PartialBlob) -> Optional[Reply]:
+    def _next_chunk_req(self, peer: str, sid: int, partial: _PartialBlob,
+                        have: Optional[FrozenSet[int]] = None
+                        ) -> Optional[Reply]:
         """Request the next window of chunks this node neither holds nor
-        awaits elsewhere. Windowing bounds bytes in flight: at most
-        chunk_window frames of this blob traverse the link at once."""
+        awaits elsewhere (optionally restricted to the chunks `peer` can
+        serve). Windowing bounds bytes in flight: at most chunk_window
+        frames of this blob traverse one link at once."""
         elsewhere: Set[int] = set()
         for (_p, _s, eid), idxs in self._chunk_pending.items():
             if eid == partial.eid:
                 elsewhere |= idxs
-        want = [i for i in partial.missing() if i not in elsewhere]
+        want = [i for i in partial.missing()
+                if i not in elsewhere and (have is None or i in have)]
         want = want[:self.chunk_window]
         if not want:
             return None
         key = (peer, sid, partial.eid)
         self._chunk_pending[key] = set(want)
         self._req_stamp[key] = self._sessions
+        self._req_time[key] = self.clock
         self.stats["chunk_reqs"] += 1
         return (peer, ChunkReq(self.node_id, sid, partial.eid,
                                partial.chunk_size, tuple(want)))
 
+    def _pump_chunk_reqs(self, eid: str) -> List[Reply]:
+        """Multi-source scheduling: give every idle source one disjoint
+        window of the blob's missing chunks. Sources marked slow are
+        skipped while any other source is active; once the pool would
+        idle entirely, slow sources are forgiven and retried (they may
+        merely be behind a congested link)."""
+        partial = self._partials.get(eid)
+        srcs = self._sources.get(eid)
+        if partial is None or not srcs:
+            return []
+        busy = {k[0] for k in self._chunk_pending if k[2] == eid}
+        slow = self._slow.get(eid, set())
+        idle = [p for p in srcs if p not in busy and p not in slow]
+        if not idle and not busy:
+            self._slow.pop(eid, None)
+            idle = list(srcs)
+        replies: List[Reply] = []
+        for peer in sorted(idle):
+            src = srcs[peer]
+            req = self._next_chunk_req(peer, src.sid, partial,
+                                       have=src.indices)
+            if req is not None:
+                replies.append(req)
+        return replies
+
     def _on_chunk_req(self, msg: ChunkReq) -> List[Reply]:
         if msg.chunk_size <= 0 or msg.chunk_size > self._chunk_payload:
             return self._protocol_error("chunk_size")
-        if msg.eid not in self.state.store:
+        replies: List[Reply] = []
+        if msg.eid in self.state.store:
+            enc = self._encoded_blob(msg.eid)
+            for i in sorted(set(msg.indices)):
+                start = i * msg.chunk_size
+                if start >= len(enc):
+                    self.stats["chunk_req_range"] += 1
+                    continue
+                self.stats["chunks_served"] += 1
+                replies.append((msg.sender,
+                                ChunkData(self.node_id, msg.sid, msg.eid, i,
+                                          enc[start:start + msg.chunk_size])))
+            return replies
+        # Partial holder: _on_have_req advertised this reassembly's
+        # verified chunks, so serve them — requesters restrict windows
+        # to the bitmap, and every chunk re-verifies against the
+        # manifest digest on arrival. Chunking must match ours exactly
+        # (indices are meaningless across different chunk sizes).
+        partial = self._partials.get(msg.eid)
+        if partial is None or partial.chunk_size != msg.chunk_size:
             self.stats["chunk_req_unknown"] += 1
             return []
-        enc = self._encoded_blob(msg.eid)
-        replies: List[Reply] = []
         for i in sorted(set(msg.indices)):
-            start = i * msg.chunk_size
-            if start >= len(enc):
+            data = partial.chunks.get(i)
+            if data is None:
                 self.stats["chunk_req_range"] += 1
                 continue
             self.stats["chunks_served"] += 1
             replies.append((msg.sender,
                             ChunkData(self.node_id, msg.sid, msg.eid, i,
-                                      enc[start:start + msg.chunk_size])))
+                                      data)))
         return replies
 
     def _on_chunk_data(self, msg: ChunkData) -> List[Reply]:
@@ -545,12 +701,12 @@ class SyncNode:
         pending = self._chunk_pending.get(key)
         if pending is not None:
             pending.discard(msg.index)
+            self._req_time[key] = self.clock      # the window made progress
         partial = self._partials.get(msg.eid)
         if partial is None:
             # transfer already finished (or never started) — stale frame
             self.stats["chunk_orphan"] += 1
-            self._chunk_pending.pop(key, None)
-            self._req_stamp.pop(key, None)
+            self._drop_window(key)
             return []
         if not (0 <= msg.index < len(partial.digests)):
             self.stats["chunk_req_range"] += 1
@@ -561,24 +717,27 @@ class SyncNode:
         else:
             partial.chunks[msg.index] = msg.data
             self.stats["chunks_verified"] += 1
+            self._timeouts.pop(msg.eid, None)     # fetch is progressing
         if partial.complete():
             self._finish_blob(msg.eid, partial)
             return []
         if pending is not None and not pending:
-            # window drained but blob incomplete: pull the next window
-            del self._chunk_pending[key]
-            self._req_stamp.pop(key, None)
-            req = self._next_chunk_req(msg.sender, msg.sid, partial)
-            return [req] if req is not None else []
+            # window drained but blob incomplete: refill every idle
+            # source, not just this one (a source that joined while all
+            # chunks were assigned elsewhere gets its first window here)
+            self._drop_window(key)
+            return self._pump_chunk_reqs(msg.eid)
         return []
 
     def _finish_blob(self, eid: str, partial: _PartialBlob) -> None:
         from repro.core.compression import CompressedTree, decompress_tree
         blob = partial.assemble()
         del self._partials[eid]
+        self._sources.pop(eid, None)
+        self._slow.pop(eid, None)
+        self._timeouts.pop(eid, None)
         for key in [k for k in self._chunk_pending if k[2] == eid]:
-            del self._chunk_pending[key]
-            self._req_stamp.pop(key, None)
+            self._drop_window(key)
         try:
             payload = decode_blob(blob)
         except WireError:
@@ -596,6 +755,12 @@ class SyncNode:
         self.stats["blobs_assembled"] += 1
         self.stats["blobs_received"] += 1
 
+    def _drop_window(self, key: Tuple[str, int, str]) -> None:
+        """Retire one outstanding chunk window's bookkeeping."""
+        self._chunk_pending.pop(key, None)
+        self._req_stamp.pop(key, None)
+        self._req_time.pop(key, None)
+
     def _expire_peer(self, peer: str) -> None:
         """Drop request bookkeeping held against `peer` (superseded by a
         new session with it); verified chunks in _partials survive."""
@@ -603,8 +768,7 @@ class SyncNode:
             del self._blob_inflight[key]
             self._req_stamp.pop(key, None)
         for key in [k for k in self._chunk_pending if k[0] == peer]:
-            del self._chunk_pending[key]
-            self._req_stamp.pop(key, None)
+            self._drop_window(key)
 
     def _gc_stale_requests(self) -> None:
         """Drop request state from sessions older than the latest
@@ -617,7 +781,176 @@ class SyncNode:
         for key in [k for k, s in self._req_stamp.items() if s <= horizon]:
             self._blob_inflight.pop(key, None)
             self._chunk_pending.pop(key, None)
+            self._req_time.pop(key, None)
             del self._req_stamp[key]
+        # Source records age out on the same horizon: a peer last
+        # confirmed before the latest begin_sync may be gone, and a
+        # scheduler window aimed at a dead peer would stall the fetch
+        # (or, with timeouts off, pin its chunks until the next GC).
+        # Live peers re-enter the pool via manifest/HaveMap for free.
+        for eid in list(self._sources):
+            srcs = self._sources[eid]
+            for peer in [p for p, s in srcs.items() if s.gen <= horizon]:
+                del srcs[peer]
+            if not srcs:
+                del self._sources[eid]
+
+    def _gc_partials(self) -> None:
+        """Chunk-level tombstone GC interplay (sharded-store invariant):
+        a partial reassembly whose eid was retracted by a tombstone (or
+        completed elsewhere) is dropped outright — late ChunkData frames
+        for it count as orphans. An eid that merely left missing_blobs()
+        because its want-pin was released (an interrupted fetch) only
+        stops *fetching*: its verified chunks are kept so the next
+        want/fetch resumes instead of re-shipping the blob."""
+        if not self._partials:
+            return
+        fetchable = self.state.visible() - self.state.store.keys()
+        active = set(self.missing_blobs())
+        for eid in [e for e in self._partials if e not in active]:
+            for key in [k for k in self._chunk_pending if k[2] == eid]:
+                self._drop_window(key)
+            self._sources.pop(eid, None)
+            self._slow.pop(eid, None)
+            self._timeouts.pop(eid, None)
+            if eid not in fetchable:
+                del self._partials[eid]
+                self.stats["partials_dropped"] += 1
+
+    # -- sharded-store discovery: who holds what ---------------------------
+
+    def query_holders(self, eids: Optional[Iterable[str]] = None,
+                      peers: Optional[Sequence[str]] = None) -> List[Reply]:
+        """HaveReq frames asking who holds this node's missing blobs.
+
+        With no explicit `peers`, targets come from the placement
+        function — the deterministic holder set of each eid — so
+        discovery needs no directory service. The replies (HaveMap)
+        populate the multi-source pool; send the returned messages and
+        pump the transport."""
+        targets = tuple(eids) if eids is not None else self.missing_blobs()
+        if not targets:
+            return []
+        self._sid += 1
+        by_peer: Dict[str, List[str]] = {}
+        for eid in targets:
+            if peers is not None:
+                holders: Iterable[str] = peers
+            elif self.placement is not None:
+                holders = self.placement.holders(eid)
+            else:
+                holders = ()
+            for p in holders:
+                if p != self.node_id:
+                    by_peer.setdefault(p, []).append(eid)
+        self.stats["have_reqs_sent"] += len(by_peer)
+        return [(p, HaveReq(self.node_id, self._sid, tuple(sorted(es))))
+                for p, es in sorted(by_peer.items())]
+
+    def _on_have_req(self, msg: HaveReq) -> List[Reply]:
+        """Advertise holdings: complete blobs as bare entries, partial
+        reassemblies as chunk bitmaps (a partial holder can serve the
+        chunks it has verified — useful before any replica is whole)."""
+        entries: List[HaveEntry] = []
+        for eid in sorted(set(msg.eids)):
+            if eid in self.state.store:
+                entries.append(HaveEntry(eid, 0))
+                continue
+            partial = self._partials.get(eid)
+            if partial is not None and partial.chunks:
+                n = len(partial.digests)
+                entries.append(
+                    HaveEntry(eid, n, chunk_bitmap(partial.chunks, n)))
+        self.stats["have_reqs_served"] += 1
+        return [(msg.sender, HaveMap(self.node_id, msg.sid, tuple(entries)))]
+
+    def _on_have_map(self, msg: HaveMap) -> List[Reply]:
+        """Fold a peer's holdings into the source pools. Complete holders
+        of blobs we have no manifest for yet are sent a BlobReq (the
+        manifest bootstraps chunking); everything else joins the
+        multi-source scheduler directly."""
+        self._gc_stale_requests()
+        self._gc_partials()
+        missing = set(self.missing_blobs())
+        replies: List[Reply] = []
+        need_manifest: List[str] = []
+        for e in msg.entries:
+            if e.eid not in missing:
+                continue
+            partial = self._partials.get(e.eid)
+            if e.n_chunks == 0:
+                indices: Optional[FrozenSet[int]] = None
+            else:
+                if partial is None or len(partial.digests) != e.n_chunks:
+                    # a partial holder is only usable once we share its
+                    # exact chunking; manifest digests still guard every
+                    # chunk, this just avoids doomed requests
+                    self.stats["have_map_unusable"] += 1
+                    continue
+                indices = frozenset(bitmap_indices(e.bitmap, e.n_chunks))
+                if not indices:
+                    continue
+            srcs = self._sources.setdefault(e.eid, {})
+            if srcs and msg.sender not in srcs:
+                self.stats["chunk_stream_joined"] += 1
+            srcs[msg.sender] = BlobSource(msg.sid, indices, self._sessions)
+            self._slow.get(e.eid, set()).discard(msg.sender)
+            if partial is not None:
+                replies.extend(self._pump_chunk_reqs(e.eid))
+            elif indices is None:
+                need_manifest.append(e.eid)
+        if need_manifest:
+            inflight: Set[str] = set()
+            for eids in self._blob_inflight.values():
+                inflight |= eids
+            ask = tuple(e for e in need_manifest if e not in inflight)
+            if ask:
+                key = (msg.sender, msg.sid)
+                self._blob_inflight.setdefault(key, set()).update(ask)
+                self._req_stamp[key] = self._sessions
+                replies.append((msg.sender,
+                                BlobReq(self.node_id, msg.sid, ask)))
+        return replies
+
+    # -- straggler recovery ------------------------------------------------
+
+    def tick(self, now: float) -> List[Reply]:
+        """Re-assign chunk windows that stalled past chunk_timeout.
+
+        Harness-driven (simulator virtual clock or pump wall clock): a
+        window with no progress since `chunk_timeout` ago marks its
+        source slow and its chunks return to the pool, so the remaining
+        sources pick them up — a straggling or partitioned peer delays
+        a transfer by one timeout, not forever. After max_fetch_timeouts
+        consecutive barren timeouts the fetch attempt is abandoned (the
+        partial's verified chunks survive for the next session)."""
+        if self.chunk_timeout is None or not self._chunk_pending:
+            return []
+        self.clock = max(self.clock, now)
+        expired = sorted(k for k, t in self._req_time.items()
+                         if k in self._chunk_pending
+                         and now - t >= self.chunk_timeout)
+        touched: Set[str] = set()
+        for key in expired:
+            peer, _sid, eid = key
+            self._drop_window(key)
+            self._slow.setdefault(eid, set()).add(peer)
+            self._timeouts[eid] += 1
+            self.stats["chunk_timeouts"] += 1
+            touched.add(eid)
+        replies: List[Reply] = []
+        for eid in sorted(touched):
+            if self._timeouts[eid] >= self.max_fetch_timeouts:
+                # nobody is delivering: stop re-requesting so the event
+                # loop can quiesce; the next anti-entropy session resumes
+                # the partial from its verified chunks
+                self._sources.pop(eid, None)
+                self._slow.pop(eid, None)
+                self._timeouts.pop(eid, None)
+                self.stats["chunk_fetch_abandoned"] += 1
+                continue
+            replies.extend(self._pump_chunk_reqs(eid))
+        return replies
 
     def _maybe_blob_req(self, peer: str, sid: int) -> List[Reply]:
         # Skip eids with a response pending in any live session or an
@@ -630,11 +963,22 @@ class SyncNode:
         for eids in self._blob_inflight.values():
             inflight |= eids
         streaming = {k[2] for k in self._chunk_pending}
-        missing = tuple(e for e in self.missing_blobs()
-                        if e not in inflight and e not in streaming)
-        if not missing:
-            return []
-        key = (peer, sid)
-        self._blob_inflight.setdefault(key, set()).update(missing)
-        self._req_stamp[key] = self._sessions
-        return [(peer, BlobReq(self.node_id, sid, missing))]
+        missing = self.missing_blobs()
+        replies: List[Reply] = []
+        # Blobs mid-stream are not re-requested wholesale, but this peer
+        # may hold them too: probe with a HaveReq so it can join the
+        # multi-source pool for the in-progress transfers.
+        probe = tuple(e for e in missing
+                      if e in streaming
+                      and peer not in self._sources.get(e, {}))
+        if probe:
+            self.stats["have_reqs_sent"] += 1
+            replies.append((peer, HaveReq(self.node_id, sid, probe)))
+        want = tuple(e for e in missing
+                     if e not in inflight and e not in streaming)
+        if want:
+            key = (peer, sid)
+            self._blob_inflight.setdefault(key, set()).update(want)
+            self._req_stamp[key] = self._sessions
+            replies.append((peer, BlobReq(self.node_id, sid, want)))
+        return replies

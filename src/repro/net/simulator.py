@@ -6,21 +6,30 @@ and reordering jitter, and are delivered to node handlers in virtual-time
 order. The event loop is deterministic for a fixed seed, so convergence
 under adversarial network conditions is reproducible — the scenario axis
 (loss/latency/partition sweeps) the in-process GossipNetwork cannot
-express.
+express. Timer callbacks (`call_at`) share the event queue, which is how
+the multi-source chunk scheduler's straggler timeouts fire in virtual
+time.
 
 SimGossipNetwork ports the existing gossip protocols (all-pairs push,
 epidemic push) plus Merkle anti-entropy onto the simulator; every node
 is a repro.net.antientropy.SyncNode, so modes interoperate and all
-traffic crosses the codec.
+traffic crosses the codec. Placement-aware helpers (`seed_placement`,
+`install_fetch_hooks`, `fetch_blobs`) set up sharded-store scenarios:
+blobs resident only at their rendezvous holders, fetched on demand —
+multi-source — by whoever resolves.
 """
 from __future__ import annotations
 
 import heapq
 import random
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, \
+    Set, Tuple
 
+from repro.core.state import CRDTMergeState
+from repro.core.version_vector import VersionVector
 from repro.net.antientropy import SyncNode
+from repro.net.store import Placement
 from repro.net.wire import (Message, decode_frame, delta_to_msg,
                             encode_message, state_to_msg)
 
@@ -52,6 +61,7 @@ class SimNetwork:
         self.clock = 0.0
         self._events: List[Tuple[float, int, str, str, bytes]] = []
         self._seq = 0
+        self._callbacks: Dict[int, Callable[["SimNetwork"], None]] = {}
         self._link_busy_until: Dict[Tuple[str, str], float] = {}
         self.partitions: Optional[List[Set[str]]] = None
         # accounting
@@ -71,6 +81,19 @@ class SimNetwork:
 
     def set_link(self, src: str, dst: str, spec: LinkSpec) -> None:
         self.links[(src, dst)] = spec
+
+    def set_uplinks(self, src: str, spec: LinkSpec) -> None:
+        """Apply `spec` to every link out of `src` (placement scenarios:
+        cap a storage node's serving bandwidth in one call)."""
+        for dst in self.handlers:
+            if dst != src:
+                self.links[(src, dst)] = spec
+
+    def set_downlinks(self, dst: str, spec: LinkSpec) -> None:
+        """Apply `spec` to every link into `dst`."""
+        for src in self.handlers:
+            if src != dst:
+                self.links[(src, dst)] = spec
 
     def partition(self, groups: Sequence[Sequence[str]]) -> None:
         self.partitions = [set(g) for g in groups]
@@ -132,12 +155,24 @@ class SimNetwork:
     def idle(self) -> bool:
         return not self._events
 
+    def call_at(self, t: float, fn: Callable[["SimNetwork"], None]) -> None:
+        """Schedule `fn(net)` at virtual time `t` (timer event; shares
+        the event queue with frames, so run()/step() fire it in order)."""
+        self._seq += 1
+        self._callbacks[self._seq] = fn
+        heapq.heappush(self._events, (max(t, self.clock), self._seq,
+                                      "", "", b""))
+
     def step(self) -> bool:
         """Deliver the next event; returns False when the queue is empty."""
         if not self._events:
             return False
-        t, _seq, dst, src, frame = heapq.heappop(self._events)
+        t, seq, dst, src, frame = heapq.heappop(self._events)
         self.clock = max(self.clock, t)
+        fn = self._callbacks.pop(seq, None)
+        if fn is not None:
+            fn(self)
+            return True
         self.inflight_bytes -= len(frame)
         handler = self.handlers.get(dst)
         if handler is not None:
@@ -177,7 +212,10 @@ class SimGossipNetwork:
                  compress_blobs: bool = False,
                  delta_refresh_every: int = 4,
                  max_frame_bytes: Optional[int] = None,
-                 chunk_window: int = 8):
+                 chunk_window: int = 8,
+                 placement: Optional[Placement] = None,
+                 replication: Optional[int] = None,
+                 chunk_timeout: Optional[float] = None):
         if mode not in ("state", "delta", "antientropy"):
             raise ValueError(f"unknown mode {mode!r}")
         self.mode = mode
@@ -192,22 +230,52 @@ class SimGossipNetwork:
         self._round = 0
         self.net = SimNetwork(seed=seed, default_link=link)
         self.rng = random.Random(seed ^ 0x5EED)
+        ids = [f"node{i:03d}" for i in range(n)]
+        # sharded store: `replication=r` builds a rendezvous placement
+        # over all simulated nodes; pass `placement=` directly to make
+        # only a subset storage nodes (clients stay out of the domain)
+        if placement is None and replication is not None:
+            placement = Placement(ids, replication)
+        self.placement = placement
+        self.chunk_timeout = chunk_timeout
         node_kw = dict(compress_blobs=compress_blobs,
-                       chunk_window=chunk_window)
+                       chunk_window=chunk_window, placement=placement,
+                       chunk_timeout=chunk_timeout)
         if max_frame_bytes is not None:
             node_kw["max_frame_bytes"] = max_frame_bytes
         self.nodes: List[SyncNode] = [
-            SyncNode(f"node{i:03d}", **node_kw) for i in range(n)]
+            SyncNode(nid, **node_kw) for nid in ids]
         self.by_id: Dict[str, SyncNode] = {x.node_id: x for x in self.nodes}
+        self._tick_armed: Set[str] = set()
         for node in self.nodes:
             self.net.register(node.node_id, self._make_handler(node))
 
     def _make_handler(self, node: SyncNode) -> Handler:
         def handler(net: SimNetwork, _dst: str, _src: str,
                     msg: Message) -> None:
+            node.clock = net.clock
             for peer, reply in node.handle(msg):
                 net.send(node.node_id, peer, reply)
+            self._arm_tick(node)
         return handler
+
+    def _arm_tick(self, node: SyncNode) -> None:
+        """Schedule a straggler-timeout check while the node has chunk
+        windows outstanding (one timer per node at a time; it re-arms
+        itself until nothing is pending)."""
+        if (self.chunk_timeout is None or not node._chunk_pending
+                or node.node_id in self._tick_armed):
+            return
+        self._tick_armed.add(node.node_id)
+
+        def fire(net: SimNetwork) -> None:
+            self._tick_armed.discard(node.node_id)
+            node.clock = net.clock
+            for peer, reply in node.tick(net.clock):
+                net.send(node.node_id, peer, reply)
+            self._arm_tick(node)
+
+        self.net.call_at(self.net.clock + self.chunk_timeout, fire)
 
     # ------------------------------------------------------------- seeding
 
@@ -215,6 +283,61 @@ class SimGossipNetwork:
         """make_contribution(i) -> payload for node i."""
         for i, node in enumerate(self.nodes):
             node.contribute(make_contribution(i))
+
+    # ------------------------------------------------- sharded-store setup
+
+    def seed_placement(self) -> None:
+        """Jump to the placed steady state: every node holds the full
+        Layer-1 metadata, and each payload is resident exactly at its
+        placement holders (as if replication already converged). Test
+        and benchmark scaffolding — production reaches this state via
+        anti-entropy rounds plus shed_blobs()."""
+        if self.placement is None:
+            raise ValueError("seed_placement needs a placement")
+        adds = frozenset().union(*(x.state.adds for x in self.nodes))
+        removes = frozenset().union(*(x.state.removes for x in self.nodes))
+        vv = VersionVector()
+        payloads: Dict[str, object] = {}
+        for x in self.nodes:
+            vv = vv.merge(x.state.vv)
+            payloads.update(x.state.store)
+        for node in self.nodes:
+            store = {eid: p for eid, p in payloads.items()
+                     if self.placement.is_holder(node.node_id, eid)}
+            node.state = CRDTMergeState(adds, removes, vv, store)
+
+    def install_fetch_hooks(self) -> None:
+        """Give every node a fetch-on-resolve hook: pin the missing eids,
+        HaveReq their placement holders, drain the event loop, unpin.
+        Must be invoked from outside the event loop (resolve() is an
+        application-level call, not a message handler)."""
+        for node in self.nodes:
+            node.fetch_hook = self._fetch_hook
+
+    def _fetch_hook(self, node: SyncNode,
+                    eids: Sequence[str]) -> Dict[str, object]:
+        got = self.fetch_blobs(node, eids)
+        return {e: node.state.store[e] for e in got}
+
+    def fetch_blobs(self, node: SyncNode,
+                    eids: Optional[Iterable[str]] = None,
+                    peers: Optional[Sequence[str]] = None) -> List[str]:
+        """Pull blobs to `node` by multi-source chunk fetch and return
+        the eids obtained. Discovery goes to `peers` if given, else to
+        each eid's placement holders."""
+        want = tuple(eids) if eids is not None else node.missing_blobs()
+        want = tuple(e for e in want if e not in node.state.store)
+        if not want:
+            return []
+        node.want_blobs(want)
+        node.clock = self.net.clock
+        try:
+            for peer, msg in node.query_holders(want, peers=peers):
+                self.net.send(node.node_id, peer, msg)
+            self.net.run()
+        finally:
+            node.unwant_blobs(want)
+        return [e for e in want if e in node.state.store]
 
     # -------------------------------------------------------------- rounds
 

@@ -406,9 +406,19 @@ def pump(nodes: Mapping[str, "HasHandle"], transport: Transport,
     (repro.net.antientropy.SyncNode). Returns messages delivered. Raises
     RuntimeError if the protocol does not quiesce within max_steps —
     a liveness tripwire for tests.
+
+    Nodes configured with a chunk_timeout get their clock advanced to
+    wall time and their tick() run whenever the pump idles, so straggler
+    re-requests (multi-source chunk fetch) work over real transports,
+    not just the virtual-clock simulator.
     """
+    timed = [(node_id, node) for node_id, node in nodes.items()
+             if getattr(node, "chunk_timeout", None) is not None]
     delivered = 0
     for _ in range(max_steps):
+        now = time.monotonic()
+        for _node_id, node in timed:
+            node.clock = now
         progressed = False
         for node_id, node in nodes.items():
             for _src, msg in transport.recv_ready(node_id):
@@ -417,6 +427,12 @@ def pump(nodes: Mapping[str, "HasHandle"], transport: Transport,
                 for dst, reply in node.handle(msg):
                     transport.send(node_id, dst, reply)
         if not progressed:
+            for node_id, node in timed:
+                for dst, reply in node.tick(now):
+                    progressed = True
+                    transport.send(node_id, dst, reply)
+            if progressed:
+                continue
             transport.flush()   # persistent transports: drain send spools
             if transport.pending() == 0:
                 return delivered

@@ -1,9 +1,15 @@
 """Versioned binary wire format for CRDT gossip and anti-entropy.
 
+The normative specification — frame table, field layouts, size bounds,
+and the chunk-streaming / multi-source state machines — lives in
+`docs/PROTOCOL.md`; this module is its reference implementation, and
+`tests/test_docs.py` asserts the two stay in lockstep.
+
 Frame layout (all integers big-endian):
 
     magic   2B  b"RN"
-    version 1B  0x01
+    version 1B  0x01 for frame types v1 peers parse; 0x02 for the
+                discovery frames v2 introduced (both accepted on decode)
     type    1B  message type tag (MSG_*)
     length  4B  payload byte count
     payload length bytes
@@ -26,7 +32,12 @@ than producing frames a peer cannot parse.
 Large blobs never travel as one frame: payloads whose canonical encoding
 exceeds the per-frame data budget are announced via BlobManifest (chunk
 count, sizes, per-chunk SHA-256) and stream as ChunkReq/ChunkData frames
-bounded by the configured max frame size (DEFAULT_MAX_FRAME).
+bounded by the configured max frame size (DEFAULT_MAX_FRAME). Wire v2
+adds the sharded-store discovery frames: HaveReq asks a peer which of a
+set of eids it holds, HaveMap answers with complete/partial holdings
+(per-chunk bitmaps for partials), and the multi-source scheduler in
+`net.antientropy` streams disjoint chunk windows of one blob from
+several peers at once.
 """
 from __future__ import annotations
 
@@ -47,7 +58,13 @@ from repro.core.state import AddEntry, CRDTMergeState
 from repro.core.version_vector import VersionVector
 
 MAGIC = b"RN"
-VERSION = 1
+VERSION = 2                             # current protocol version
+ACCEPTED_VERSIONS = frozenset({1, 2})   # decoded without complaint
+# Interop is two-directional: frames whose type already existed in v1
+# keep the v1 stamp, so an un-upgraded peer (which rejects version != 1)
+# still reads everything it can parse; only the v2-introduced discovery
+# frames carry the v2 stamp. Decoding is Postel-lenient about the
+# version/type pairing — the type tag alone selects the decoder.
 HEADER = struct.Struct(">2sBBI")        # magic, version, type, payload len
 TRAILER = struct.Struct(">I")           # crc32
 FRAME_OVERHEAD = HEADER.size + TRAILER.size
@@ -64,6 +81,8 @@ MSG_SYNC_DONE = 0x15
 MSG_BLOB_MANIFEST = 0x16
 MSG_CHUNK_REQ = 0x17
 MSG_CHUNK_DATA = 0x18
+MSG_HAVE_REQ = 0x19
+MSG_HAVE_MAP = 0x1A
 
 # Streaming transfer sizing. A multi-GB pytree must never become one
 # giant frame: blobs whose canonical encoding exceeds the per-frame data
@@ -243,6 +262,41 @@ class ChunkData:
     data: bytes
 
     type = MSG_CHUNK_DATA
+
+
+@dataclass(frozen=True)
+class HaveReq:
+    """Ask a peer which of `eids` it holds (sharded-store discovery).
+
+    The answer (HaveMap) feeds the multi-source chunk scheduler: a
+    requester fans disjoint chunk windows of one blob across every peer
+    known to hold it."""
+    sender: str
+    sid: int
+    eids: Tuple[str, ...]
+
+    type = MSG_HAVE_REQ
+
+
+@dataclass(frozen=True)
+class HaveEntry:
+    """One blob's holding claim. `n_chunks == 0` means the peer holds
+    the complete blob (bitmap empty); otherwise `bitmap` marks which of
+    the `n_chunks` manifest chunks the peer has verified so far (bit i =
+    byte i//8, bit i%8, LSB first)."""
+    eid: str
+    n_chunks: int
+    bitmap: bytes = b""
+
+
+@dataclass(frozen=True)
+class HaveMap:
+    """Compact advertisement of which requested eids/chunks a node holds."""
+    sender: str
+    sid: int
+    entries: Tuple[HaveEntry, ...] = ()
+
+    type = MSG_HAVE_MAP
 
 
 Message = Any  # any of the dataclasses above
@@ -649,13 +703,55 @@ def _dec_chunk_data(r: _Reader) -> ChunkData:
     return ChunkData(r.str_(), r.u64(), r.str_(), r.u32(), r.bytes_())
 
 
+def _enc_have_req(buf: bytearray, m: HaveReq) -> None:
+    _p_str(buf, m.sender)
+    _p_u64(buf, m.sid)
+    _p_u32(buf, len(set(m.eids)))
+    for eid in sorted(set(m.eids)):
+        _p_str(buf, eid)
+
+
+def _dec_have_req(r: _Reader) -> HaveReq:
+    sender, sid = r.str_(), r.u64()
+    eids = tuple(r.str_() for _ in range(r.u32()))
+    return HaveReq(sender, sid, eids)
+
+
+def _enc_have_map(buf: bytearray, m: HaveMap) -> None:
+    _p_str(buf, m.sender)
+    _p_u64(buf, m.sid)
+    _p_u32(buf, len(m.entries))
+    for e in sorted(m.entries, key=lambda x: x.eid):
+        if e.n_chunks == 0 and e.bitmap:
+            raise WireError("complete HaveEntry must carry no bitmap")
+        if e.n_chunks > 0 and len(e.bitmap) != (e.n_chunks + 7) // 8:
+            raise WireError(f"HaveEntry bitmap must be "
+                            f"{(e.n_chunks + 7) // 8}B for {e.n_chunks} "
+                            f"chunks, got {len(e.bitmap)}B")
+        _p_str(buf, e.eid)
+        _p_u32(buf, e.n_chunks)
+        if e.n_chunks:
+            buf += e.bitmap
+
+
+def _dec_have_map(r: _Reader) -> HaveMap:
+    sender, sid = r.str_(), r.u64()
+    entries = []
+    for _ in range(r.u32()):
+        eid, n = r.str_(), r.u32()
+        bitmap = r.take((n + 7) // 8) if n else b""
+        entries.append(HaveEntry(eid, n, bitmap))
+    return HaveMap(sender, sid, tuple(entries))
+
+
 _ENCODERS = {
     MSG_STATE: _enc_state, MSG_DELTA: _enc_delta,
     MSG_SYNC_REQ: _enc_sync_req, MSG_BUCKETS: _enc_buckets,
     MSG_BUCKET_ITEMS: _enc_bucket_items, MSG_BLOB_REQ: _enc_blob_req,
     MSG_BLOB_RESP: _enc_blob_resp, MSG_SYNC_DONE: _enc_sync_done,
     MSG_BLOB_MANIFEST: _enc_blob_manifest, MSG_CHUNK_REQ: _enc_chunk_req,
-    MSG_CHUNK_DATA: _enc_chunk_data,
+    MSG_CHUNK_DATA: _enc_chunk_data, MSG_HAVE_REQ: _enc_have_req,
+    MSG_HAVE_MAP: _enc_have_map,
 }
 _DECODERS = {
     MSG_STATE: _dec_state, MSG_DELTA: _dec_delta,
@@ -663,13 +759,34 @@ _DECODERS = {
     MSG_BUCKET_ITEMS: _dec_bucket_items, MSG_BLOB_REQ: _dec_blob_req,
     MSG_BLOB_RESP: _dec_blob_resp, MSG_SYNC_DONE: _dec_sync_done,
     MSG_BLOB_MANIFEST: _dec_blob_manifest, MSG_CHUNK_REQ: _dec_chunk_req,
-    MSG_CHUNK_DATA: _dec_chunk_data,
+    MSG_CHUNK_DATA: _dec_chunk_data, MSG_HAVE_REQ: _dec_have_req,
+    MSG_HAVE_MAP: _dec_have_map,
+}
+
+# Public registry: every frame tag the codec accepts, with its message
+# class. docs/PROTOCOL.md's frame table is diffed against this in
+# tests/test_docs.py, so the spec cannot drift from the implementation.
+MESSAGE_TYPES: Dict[int, type] = {
+    MSG_STATE: StateMsg, MSG_DELTA: DeltaMsg, MSG_SYNC_REQ: SyncReq,
+    MSG_BUCKETS: BucketsMsg, MSG_BUCKET_ITEMS: BucketItemsMsg,
+    MSG_BLOB_REQ: BlobReq, MSG_BLOB_RESP: BlobResp,
+    MSG_SYNC_DONE: SyncDone, MSG_BLOB_MANIFEST: BlobManifest,
+    MSG_CHUNK_REQ: ChunkReq, MSG_CHUNK_DATA: ChunkData,
+    MSG_HAVE_REQ: HaveReq, MSG_HAVE_MAP: HaveMap,
 }
 
 
 # ---------------------------------------------------------------------------
 # Framing
 # ---------------------------------------------------------------------------
+
+
+_V2_TYPES = frozenset({MSG_HAVE_REQ, MSG_HAVE_MAP})
+
+
+def frame_version(mtype: int) -> int:
+    """The version stamp a frame of `mtype` carries (see HEADER note)."""
+    return 2 if mtype in _V2_TYPES else 1
 
 
 def encode_message(msg: Message) -> bytes:
@@ -680,7 +797,7 @@ def encode_message(msg: Message) -> bytes:
         raise WireError(f"not a wire message: {type(msg)}")
     payload = bytearray()
     enc(payload, msg)
-    return (HEADER.pack(MAGIC, VERSION, mtype, len(payload))
+    return (HEADER.pack(MAGIC, frame_version(mtype), mtype, len(payload))
             + bytes(payload)
             + TRAILER.pack(zlib.crc32(bytes(payload)) & 0xFFFFFFFF))
 
@@ -696,7 +813,7 @@ def decode_frame(buf: bytes, pos: int = 0) -> Tuple[Message, int]:
     magic, version, mtype, plen = HEADER.unpack_from(buf, pos)
     if magic != MAGIC:
         raise WireError(f"bad magic {magic!r}")
-    if version != VERSION:
+    if version not in ACCEPTED_VERSIONS:
         raise WireError(f"unsupported wire version {version}")
     body_start = pos + HEADER.size
     body_end = body_start + plen

@@ -1,0 +1,55 @@
+"""Docs stay in lockstep with the code.
+
+The acceptance contract for docs/PROTOCOL.md: it enumerates every wire
+frame id the codec accepts — asserted here by diffing the doc's frame
+table against repro.net.wire's registry (shared logic with
+tools/check_docs.py, which CI also runs standalone). Plus: no broken
+relative links anywhere in README.md / docs/*.md, and the architecture
+guide keeps naming the real module tree.
+"""
+import importlib.util
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _check_docs():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", ROOT / "tools" / "check_docs.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_protocol_frame_table_matches_wire_registry():
+    from repro.net import wire
+    mod = _check_docs()
+    documented = mod.doc_frame_table(ROOT / "docs" / "PROTOCOL.md")
+    registry = {tag: cls.__name__ for tag, cls in wire.MESSAGE_TYPES.items()}
+    assert documented == registry, (
+        "docs/PROTOCOL.md frame table out of sync with net/wire.py: "
+        f"doc-only={set(documented) - set(registry)}, "
+        f"code-only={set(registry) - set(documented)}, "
+        f"renamed={[t for t in set(documented) & set(registry) if documented[t] != registry[t]]}")
+    assert mod.check_frame_table(ROOT) == []
+
+
+def test_markdown_links_resolve():
+    mod = _check_docs()
+    assert mod.check_links(ROOT) == []
+
+
+def test_readme_links_docs_tree():
+    readme = (ROOT / "README.md").read_text(encoding="utf-8")
+    assert "docs/PROTOCOL.md" in readme
+    assert "docs/ARCHITECTURE.md" in readme
+
+
+def test_architecture_guide_names_real_modules():
+    text = (ROOT / "docs" / "ARCHITECTURE.md").read_text(encoding="utf-8")
+    for mod_path in ["core/state.py", "core/resolve.py", "net/wire.py",
+                     "net/store.py", "net/antientropy.py",
+                     "net/transport.py", "net/simulator.py"]:
+        name = mod_path.rsplit("/", 1)[1]
+        assert name in text, f"ARCHITECTURE.md no longer mentions {name}"
+        assert (ROOT / "src" / "repro" / mod_path).exists()

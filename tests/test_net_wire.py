@@ -228,3 +228,54 @@ def test_roundtrip_property(seed):
     msg = state_to_msg(s, "p")
     out = roundtrip(msg)
     assert msg_to_state(out).merkle_root() == s.merkle_root()
+
+
+# ------------------------------------------------ v2 discovery frames
+
+
+def test_have_message_roundtrips():
+    from repro.net.store import chunk_bitmap
+    from repro.net.wire import HaveEntry, HaveMap, HaveReq
+    req = HaveReq("a", 9, ("e" * 64, "b" * 64))
+    out = roundtrip(req)
+    assert set(out.eids) == set(req.eids) and out.sid == 9
+    m = HaveMap("b", 9, (HaveEntry("e" * 64, 0),
+                         HaveEntry("f" * 64, 11, chunk_bitmap([0, 10], 11))))
+    out = roundtrip(m)
+    assert set(out.entries) == set(m.entries)
+    # bitmap length must match the chunk count exactly
+    with pytest.raises(WireError):
+        encode_message(HaveMap("b", 9, (HaveEntry("e" * 64, 11, b"\x00"),)))
+    with pytest.raises(WireError):
+        encode_message(HaveMap("b", 9, (HaveEntry("e" * 64, 0, b"\x01"),)))
+
+
+def test_wire_version_stamps_preserve_v1_interop():
+    """Two-directional mixed-version interop: legacy frame types keep
+    the v1 stamp (an un-upgraded peer, which rejects version != 1, can
+    read them), only the new discovery frames carry v2, and a v2 node
+    decodes both stamps."""
+    from repro.net import wire
+    from repro.net.wire import HaveReq
+    vv = VersionVector({"a": 1})
+    legacy = encode_message(SyncReq("a", 7, b"\x01" * 32, 5, vv))
+    assert legacy[2] == 1                  # v1 peers still parse this
+    assert decode_message(legacy) == SyncReq("a", 7, b"\x01" * 32, 5, vv)
+    discovery = encode_message(HaveReq("a", 7, ("e" * 64,)))
+    assert discovery[2] == wire.VERSION == 2
+    # a v2-stamped legacy frame still decodes (Postel-lenient pairing)
+    frame = bytearray(legacy)
+    frame[2] = 2
+    assert decode_message(bytes(frame)) == SyncReq("a", 7, b"\x01" * 32,
+                                                   5, vv)
+    frame[2] = 3                            # unknown version rejected
+    with pytest.raises(WireError):
+        decode_message(bytes(frame))
+
+
+def test_message_registry_covers_all_codecs():
+    from repro.net import wire
+    assert set(wire.MESSAGE_TYPES) == set(wire._ENCODERS) \
+        == set(wire._DECODERS)
+    for tag, cls in wire.MESSAGE_TYPES.items():
+        assert cls.type == tag

@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Docs checks, run by CI and reused by tests/test_docs.py.
+
+1. Link check: every relative markdown link in README.md and docs/*.md
+   must point at an existing file (external http(s)/mailto links are
+   not fetched — CI must not depend on network).
+2. Frame-table check: the frame ids documented in docs/PROTOCOL.md
+   must match repro.net.wire's codec registry exactly — same ids, same
+   message class names.
+
+Usage: PYTHONPATH=src python tools/check_docs.py [repo_root]
+Exits non-zero listing every violation.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# a frame-table row: | 0xNN | `Name` | ...
+FRAME_ROW_RE = re.compile(r"^\|\s*0x([0-9A-Fa-f]{2})\s*\|\s*`?(\w+)`?\s*\|",
+                          re.MULTILINE)
+
+
+def md_files(root: Path) -> List[Path]:
+    out = [root / "README.md"]
+    out += sorted((root / "docs").glob("*.md"))
+    return [p for p in out if p.exists()]
+
+
+def check_links(root: Path) -> List[str]:
+    errors = []
+    for md in md_files(root):
+        text = md.read_text(encoding="utf-8")
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (md.parent / rel).exists():
+                errors.append(f"{md.relative_to(root)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def doc_frame_table(protocol_md: Path) -> Dict[int, str]:
+    """{frame id: message class name} parsed from the spec's tables."""
+    table: Dict[int, str] = {}
+    for hex_id, name in FRAME_ROW_RE.findall(
+            protocol_md.read_text(encoding="utf-8")):
+        table[int(hex_id, 16)] = name
+    return table
+
+
+def check_frame_table(root: Path) -> List[str]:
+    from repro.net import wire
+    documented = doc_frame_table(root / "docs" / "PROTOCOL.md")
+    registry = {tag: cls.__name__ for tag, cls in wire.MESSAGE_TYPES.items()}
+    errors = []
+    for tag in sorted(set(documented) | set(registry)):
+        doc, impl = documented.get(tag), registry.get(tag)
+        if doc is None:
+            errors.append(f"PROTOCOL.md: frame 0x{tag:02X} ({impl}) "
+                          "accepted by the codec but undocumented")
+        elif impl is None:
+            errors.append(f"PROTOCOL.md: frame 0x{tag:02X} ({doc}) "
+                          "documented but unknown to the codec")
+        elif doc != impl:
+            errors.append(f"PROTOCOL.md: frame 0x{tag:02X} documented as "
+                          f"{doc}, codec calls it {impl}")
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    root = Path(argv[1]) if len(argv) > 1 else Path(__file__).parent.parent
+    errors = check_links(root) + check_frame_table(root)
+    for e in errors:
+        print(f"FAIL {e}", file=sys.stderr)
+    if not errors:
+        n = len(md_files(root))
+        print(f"docs OK: {n} markdown files, frame table in sync")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
