@@ -1,0 +1,707 @@
+"""Planner/executor merge engine — tensor-sharded Layer 2 execution.
+
+The legacy Layer-2 path (`Strategy.__call__`) stacks k full model copies
+per resolve and recomputes every tensor whenever anything in the visible
+set changes. This module splits execution into:
+
+  * a **planner** that walks the canonical contribution set and emits one
+    `LeafTask` per model tensor, keyed by a per-tensor **sub-root** — the
+    hash of that leaf's ordered contribution digests plus everything else
+    that shapes the output (strategy, cfg, base leaf, fold structure, and
+    the Merkle-derived seed where the strategy actually consumes it);
+  * an **executor** that runs the plan leaf-by-leaf with bounded live
+    memory (at most ~2 leaves' worth of stacked slices at a time),
+    batching same-dtype elementwise leaves into fused dispatches
+    (optionally through the `kernels/nary_accum` Pallas kernel);
+  * a byte-budgeted **per-leaf cache** keyed by sub-root, so an unchanged
+    tensor is a cache hit even when the whole-model Merkle root changed.
+
+Determinism (paper Def. 6) is preserved by construction: the planner
+uses the same canonical contribution order as the legacy path, and the
+executor derives per-leaf randomness exactly as `strategies.base.leafwise`
+does today — `fold_in(PRNGKey(seed & 0x7FFFFFFF), leaf_index)` with the
+*global* flatten index. `tests/test_engine.py` verifies byte-for-byte
+equality against the legacy path for all 26 registry strategies under
+both fold and tree reductions.
+
+Strategies flagged `whole_model=True` (population search and SVD-based
+factorizations, whose cost profile is not per-tensor) are routed through
+the legacy whole-tree path and cached as a single whole-model entry.
+
+Sub-root derivation
+-------------------
+For leaf index i of a k-way merge:
+
+    sub_root_i = SHA-256( domain || strategy || reduction* || cfg_key ||
+                          base_i || k || d_1,i || ... || d_k,i ||
+                          [seed || i  iff the strategy consumes a key] )
+
+where d_j,i is `tensor_digest` of contribution j's leaf i in canonical
+(whole-model content hash) order, base_i the base leaf's digest (a fixed
+marker when base is None, i.e. zeros), and reduction* is included only
+when it affects the output (binary-only strategies at k > 2). The seed
+and leaf index enter only for key-consuming strategies: a deterministic
+strategy's leaf output is independent of both, so its cache entries
+survive arbitrary changes elsewhere in the model — the delta-efficiency
+this engine exists for.
+
+>>> import jax.numpy as jnp
+>>> contribs = [{"w": jnp.ones((2, 2))}, {"w": jnp.zeros((2, 2))}]
+>>> plan = plan_for(contribs, "weight_average")
+>>> len(plan.tasks), plan.k
+(1, 2)
+>>> float(execute_plan(plan, contribs, use_cache=False)["w"][0, 0])
+0.5
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import Counter, OrderedDict
+from dataclasses import dataclass
+from typing import (Any, Dict, List, NamedTuple, Optional, Sequence,
+                    Tuple)
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import pytree_digest, tensor_digest
+from repro.strategies import get_strategy
+from repro.strategies.base import Strategy
+
+_DOMAIN_LEAF = b"repro/engine/leaf-subroot/v1"
+_DOMAIN_MODEL = b"repro/engine/model-subroot/v1"
+_NO_BASE = b"\x00" * 32          # base=None marker (zeros_like base)
+
+
+# ---------------------------------------------------------------------------
+# cfg cache-key fragments (everything besides the contributions that shapes
+# the output)
+# ---------------------------------------------------------------------------
+
+
+def _cfg_fragment(k: str, v: Any) -> str:
+    """One cfg knob's key contribution. Plain scalars repr exactly;
+    anything array-like is content-hashed — numpy/JAX reprs truncate
+    large arrays with `...`, so two merges differing only in a large
+    array knob would otherwise alias to one cache entry."""
+    if v is None or isinstance(v, (bool, int, float, str, bytes)):
+        return f"{k}={v!r}"
+    try:
+        return f"{k}#{pytree_digest(v).hex()}"
+    except Exception:
+        return f"{k}={v!r}"
+
+
+def cfg_key(cfg: Dict[str, Any]) -> str:
+    return ";".join(_cfg_fragment(k, cfg[k]) for k in sorted(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Per-contribution leaf metadata (digest memo)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ContribMeta:
+    """Shape of one contribution as the planner sees it: tree structure
+    plus per-leaf content digests. Content-addressed — under paper
+    Assumption 11 an element id fully determines the payload bytes, so
+    metas memoized by eid stay valid forever (and let the planner run
+    against contributions whose payloads are not locally resident)."""
+    treedef: Any
+    digests: Tuple[bytes, ...]
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+
+    @property
+    def leaf_count(self) -> int:
+        return len(self.digests)
+
+
+_META_MEMO: "OrderedDict[str, ContribMeta]" = OrderedDict()
+_META_MEMO_LIMIT = 1024
+
+
+def contrib_meta(contribution: Any, *, eid: Optional[str] = None
+                 ) -> ContribMeta:
+    """Flatten + digest one contribution; memoized by content id."""
+    if eid is not None and eid in _META_MEMO:
+        _META_MEMO.move_to_end(eid)
+        return _META_MEMO[eid]
+    leaves, treedef = jax.tree_util.tree_flatten(contribution)
+    meta = ContribMeta(
+        treedef=treedef,
+        digests=tuple(tensor_digest(l) for l in leaves),
+        shapes=tuple(tuple(jnp.shape(l)) for l in leaves),
+        dtypes=tuple(jnp.asarray(l).dtype for l in leaves),
+    )
+    if eid is not None:
+        _META_MEMO[eid] = meta
+        while len(_META_MEMO) > _META_MEMO_LIMIT:
+            _META_MEMO.popitem(last=False)
+    return meta
+
+
+def memoized_meta(eid: str) -> Optional[ContribMeta]:
+    """Planner metadata for a content id seen before, else None. Lets
+    resolve() plan (and fully-cached plans complete) without fetching
+    the payload at all."""
+    meta = _META_MEMO.get(eid)
+    if meta is not None:
+        _META_MEMO.move_to_end(eid)
+    return meta
+
+
+def clear_meta_memo() -> None:
+    _META_MEMO.clear()
+
+
+# ---------------------------------------------------------------------------
+# Plans
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LeafTask:
+    index: int                    # global flatten index (key derivation)
+    path: str                     # keystr, diagnostics only
+    sub_root: bytes               # per-tensor content address of output
+    shape: Tuple[int, ...]
+    dtype: Any
+    stacked_nbytes: int           # k * leaf nbytes: live bytes to execute
+
+
+@dataclass(frozen=True)
+class MergePlan:
+    strategy: str
+    reduction: str
+    seed: int
+    k: int
+    cfg: Tuple[Tuple[str, Any], ...]      # sorted (name, value) pairs
+    treedef: Any
+    tasks: Tuple[LeafTask, ...]
+
+    def cfg_dict(self) -> Dict[str, Any]:
+        return dict(self.cfg)
+
+
+def plan_merge(metas: Sequence[ContribMeta], strategy_name: str, *,
+               base: Any = None, seed: int = 0, reduction: str = "fold",
+               **cfg) -> MergePlan:
+    """Emit a per-leaf merge plan from contribution metadata (canonical
+    order). Payloads are not needed to plan — only their digests."""
+    if not metas:
+        raise ValueError("plan_merge() requires at least one contribution")
+    strat = get_strategy(strategy_name)
+    if strat.whole_model or strat.leaf_fn is None:
+        raise ValueError(
+            f"strategy {strategy_name!r} is whole-model; use merge()")
+    first = metas[0]
+    for m in metas[1:]:
+        if m.treedef != first.treedef or m.shapes != first.shapes \
+                or m.dtypes != first.dtypes:
+            raise ValueError("contributions disagree on tree structure")
+    k = len(metas)
+    ckey = cfg_key(cfg).encode()
+    red = reduction.encode() if (strat.binary_only and k > 2) else b"-"
+    if base is None:
+        base_frags: Sequence[bytes] = [_NO_BASE] * first.leaf_count
+    else:
+        base_leaves = first.treedef.flatten_up_to(base)
+        base_frags = [tensor_digest(bl) for bl in base_leaves]
+    paths = _leaf_paths(first.treedef)
+    tasks: List[LeafTask] = []
+    for i in range(first.leaf_count):
+        h = hashlib.sha256(_DOMAIN_LEAF)
+        h.update(strat.name.encode())
+        h.update(red)
+        h.update(ckey)
+        h.update(base_frags[i])
+        h.update(k.to_bytes(4, "big"))
+        for m in metas:
+            h.update(m.digests[i])
+        if strat.needs_key:
+            # key-consuming strategies: output depends on the Merkle-
+            # derived seed and the global leaf index (leafwise fold_in)
+            h.update(str(seed).encode())
+            h.update(i.to_bytes(4, "big"))
+        nbytes = jnp.dtype(first.dtypes[i]).itemsize
+        for d in first.shapes[i]:
+            nbytes *= d
+        tasks.append(LeafTask(index=i, path=paths[i], sub_root=h.digest(),
+                              shape=first.shapes[i], dtype=first.dtypes[i],
+                              stacked_nbytes=k * nbytes))
+    return MergePlan(strategy=strategy_name, reduction=reduction, seed=seed,
+                     k=k, cfg=tuple(sorted(cfg.items())),
+                     treedef=first.treedef, tasks=tuple(tasks))
+
+
+def plan_for(contribs: Sequence[Any], strategy_name: str, *,
+             contrib_ids: Optional[Sequence[str]] = None,
+             base: Any = None, seed: int = 0, reduction: str = "fold",
+             **cfg) -> MergePlan:
+    """Convenience planner over resident payloads (ids memoize digests)."""
+    ids: Sequence[Optional[str]] = contrib_ids or [None] * len(contribs)
+    metas = [contrib_meta(c, eid=e) for c, e in zip(contribs, ids)]
+    return plan_merge(metas, strategy_name, base=base, seed=seed,
+                      reduction=reduction, **cfg)
+
+
+def _leaf_paths(treedef) -> List[str]:
+    """keystr path per leaf, in flatten order."""
+    dummy = jax.tree_util.tree_unflatten(
+        treedef, list(range(treedef.num_leaves)))
+    flat = jax.tree_util.tree_flatten_with_path(dummy)[0]
+    paths = [""] * treedef.num_leaves
+    for path, idx in flat:
+        paths[idx] = jax.tree_util.keystr(path)
+    return paths
+
+
+# ---------------------------------------------------------------------------
+# Byte-budgeted sub-root cache (per-leaf entries + whole-model entries)
+# ---------------------------------------------------------------------------
+
+# sub_root -> (value, nbytes). Values are merged leaf arrays (LeafTask
+# entries) or whole output pytrees (whole-model strategies). Eviction is
+# LRU under BOTH an entry count and a resident-byte budget: merge
+# outputs are model tensors, so counting entries alone under-controls
+# memory by orders of magnitude between a layernorm and an embedding.
+_CACHE: "OrderedDict[bytes, Tuple[Any, int]]" = OrderedDict()
+_CACHE_BYTES = 0
+_DEFAULT_ENTRY_LIMIT = 65536
+_DEFAULT_BYTE_LIMIT = 256 * 2 ** 20
+_ENTRY_LIMIT = _DEFAULT_ENTRY_LIMIT
+_BYTE_LIMIT = _DEFAULT_BYTE_LIMIT
+
+_STATS: Counter = Counter()
+_PEAK_STACKED = 0                 # executor high-water mark since reset
+
+
+class CacheInfo(NamedTuple):
+    entries: int
+    bytes: int
+    entry_limit: int
+    byte_limit: int
+    hits: int
+    misses: int
+
+
+def set_cache_limit(entries: Optional[int] = None, *,
+                    bytes: Optional[int] = None) -> None:  # noqa: A002
+    """Bound the merge-output cache; evicts LRU-first immediately.
+
+    `entries` caps the number of cached tensors; `bytes` caps resident
+    payload bytes (size-aware eviction — the ROADMAP byte-budget item).
+    Omitted arguments are left unchanged.
+    """
+    global _ENTRY_LIMIT, _BYTE_LIMIT
+    if entries is not None:
+        if entries < 1:
+            raise ValueError("cache entry limit must be >= 1")
+        _ENTRY_LIMIT = entries
+    if bytes is not None:
+        if bytes < 0:
+            raise ValueError("cache byte limit must be >= 0")
+        _BYTE_LIMIT = bytes
+    _evict()
+
+
+def cache_info() -> CacheInfo:
+    """Current cache occupancy/limits and lifetime hit/miss counters.
+
+    >>> _ = set_cache_limit(entries=8, bytes=1 << 20)
+    >>> cache_info().entry_limit, cache_info().byte_limit
+    (8, 1048576)
+    >>> reset_cache_limits()
+    """
+    return CacheInfo(len(_CACHE), _CACHE_BYTES, _ENTRY_LIMIT, _BYTE_LIMIT,
+                     _STATS["hits"], _STATS["misses"])
+
+
+def reset_cache_limits() -> None:
+    """Restore default entry/byte limits (tests, doctests)."""
+    set_cache_limit(_DEFAULT_ENTRY_LIMIT, bytes=_DEFAULT_BYTE_LIMIT)
+
+
+def clear_cache() -> None:
+    """Drop all cached merge outputs AND planner digest memos."""
+    global _CACHE_BYTES
+    _CACHE.clear()
+    _CACHE_BYTES = 0
+    _META_MEMO.clear()
+
+
+def _evict() -> None:
+    global _CACHE_BYTES
+    while _CACHE and (len(_CACHE) > _ENTRY_LIMIT
+                      or _CACHE_BYTES > _BYTE_LIMIT):
+        _, (_, nbytes) = _CACHE.popitem(last=False)
+        _CACHE_BYTES -= nbytes
+
+
+def _cache_get(key: bytes) -> Optional[Any]:
+    if key in _CACHE:
+        _CACHE.move_to_end(key)
+        return _CACHE[key][0]
+    return None
+
+
+def _cache_put(key: bytes, value: Any, nbytes: int) -> None:
+    global _CACHE_BYTES
+    if key in _CACHE:
+        _CACHE_BYTES -= _CACHE[key][1]
+    _CACHE[key] = (value, nbytes)
+    _CACHE.move_to_end(key)
+    _CACHE_BYTES += nbytes
+    _evict()
+
+
+def cached(key: bytes) -> bool:
+    return key in _CACHE
+
+
+def cache_lookup(key: bytes) -> Optional[Any]:
+    """Fetch-free probe: the cached value (counting a hit) or None
+    (counting nothing — the caller goes on to compute through a path
+    that records the miss itself)."""
+    val = _cache_get(key)
+    if val is not None:
+        _STATS["hits"] += 1
+    return val
+
+
+def plan_cached_split(plan: MergePlan) -> Tuple[List[LeafTask],
+                                                List[LeafTask]]:
+    """(hits, misses) — membership only, no recency/counter effects."""
+    hits = [t for t in plan.tasks if t.sub_root in _CACHE]
+    misses = [t for t in plan.tasks if t.sub_root not in _CACHE]
+    return hits, misses
+
+
+def exec_stats() -> Dict[str, int]:
+    """Executor counters since the last reset: `leaf_tasks` executed,
+    `dispatches` issued, `batched_leaves` fused into multi-leaf
+    dispatches, cache `hits`/`misses`, and `peak_stacked_bytes` — the
+    largest set of stacked contribution slices ever live at once."""
+    out = dict(_STATS)
+    out["peak_stacked_bytes"] = _PEAK_STACKED
+    return out
+
+
+def reset_exec_stats() -> None:
+    global _PEAK_STACKED
+    _STATS.clear()
+    _PEAK_STACKED = 0
+
+
+def _note_stacked(nbytes: int) -> None:
+    global _PEAK_STACKED
+    _PEAK_STACKED = max(_PEAK_STACKED, nbytes)
+
+
+# ---------------------------------------------------------------------------
+# Executor
+# ---------------------------------------------------------------------------
+
+
+def execute_plan(plan: MergePlan, contribs: Optional[Sequence[Any]], *,
+                 base: Any = None, use_cache: bool = True,
+                 max_batch_bytes: Optional[int] = None,
+                 pallas: bool = False) -> Any:
+    """Run a merge plan and return the merged pytree.
+
+    `contribs` is the canonical-order payload list; it may be None when
+    every task is already cached (the zero-fetch re-resolve path).
+    Live stacked memory is bounded: the executor materialises one
+    leaf's [k, ...] slice stack (or one fused batch — whose per-leaf
+    stacks plus concatenated copy are both transiently live, so the
+    batch byte cap `max_batch_bytes` defaults to the largest single
+    leaf's stack, keeping the batched peak within ~2 leaves' worth) at
+    a time — never the k full model copies the legacy path stacks.
+
+    `pallas=True` routes linear-family batches through the fused
+    `kernels/nary_accum` Pallas kernel (fp32 accumulation; validated to
+    tolerance, not byte-identical — leave off where Def. 6 transparency
+    against the legacy path is required). Pallas-produced leaves are
+    NEVER written to the sub-root cache: the cache serves the
+    byte-exact path, and an approximate entry would silently poison a
+    later exact resolve.
+    """
+    strat = get_strategy(plan.strategy)
+    cfg = plan.cfg_dict()
+    outputs: List[Optional[Any]] = [None] * len(plan.tasks)
+
+    misses: List[LeafTask] = []
+    for t in plan.tasks:
+        hit = _cache_get(t.sub_root) if use_cache else None
+        if hit is not None:
+            outputs[t.index] = hit
+            _STATS["hits"] += 1
+        else:
+            misses.append(t)
+            if use_cache:
+                _STATS["misses"] += 1
+    if misses:
+        if contribs is None:
+            raise KeyError(
+                f"{len(misses)} leaf tasks miss the cache but no payloads "
+                "were supplied; fetch the contribution blobs first")
+        if len(contribs) != plan.k:
+            raise ValueError(f"plan expects {plan.k} contributions, "
+                             f"got {len(contribs)}")
+        leaves = [plan.treedef.flatten_up_to(c) for c in contribs]
+        base_leaves = (plan.treedef.flatten_up_to(base)
+                       if base is not None else None)
+        if max_batch_bytes is None:
+            max_batch_bytes = max(t.stacked_nbytes for t in plan.tasks)
+        for group in _dispatch_groups(strat, misses, max_batch_bytes):
+            approximate = False
+            if len(group) == 1:
+                out = [_execute_leaf(strat, plan, group[0], leaves,
+                                     base_leaves)]
+            else:
+                out, approximate = _execute_batch(
+                    strat, plan, group, leaves, base_leaves, pallas=pallas)
+                _STATS["batched_leaves"] += len(group)
+            _STATS["dispatches"] += 1
+            _STATS["leaf_tasks"] += len(group)
+            for t, o in zip(group, out):
+                outputs[t.index] = o
+                if use_cache and not approximate:
+                    _cache_put(t.sub_root, o, int(o.nbytes))
+    return jax.tree_util.tree_unflatten(plan.treedef, outputs)
+
+
+def _dispatch_groups(strat: Strategy, misses: List[LeafTask],
+                     max_batch_bytes: int) -> List[List[LeafTask]]:
+    """Partition missed tasks into dispatches. Elementwise strategies
+    fuse same-dtype leaves (flattened + concatenated) up to the batch
+    byte cap; everything else runs one leaf per dispatch."""
+    if not strat.batchable:
+        return [[t] for t in misses]
+    groups: List[List[LeafTask]] = []
+    by_dtype: Dict[Any, List[LeafTask]] = {}
+    for t in misses:
+        by_dtype.setdefault(t.dtype, []).append(t)
+    for tasks in by_dtype.values():
+        # largest-first packing: the big leaves that fill a batch alone
+        # go first, so the many small leaves behind them still fuse
+        # instead of being fragmented by an oversized neighbour
+        # (dispatch order is irrelevant to output bytes — tasks are
+        # independent)
+        tasks = sorted(tasks, key=lambda t: (-t.stacked_nbytes, t.index))
+        cur: List[LeafTask] = []
+        cur_bytes = 0
+        for t in tasks:
+            if cur and cur_bytes + t.stacked_nbytes > max_batch_bytes:
+                groups.append(cur)
+                cur, cur_bytes = [], 0
+            cur.append(t)
+            cur_bytes += t.stacked_nbytes
+        if cur:
+            groups.append(cur)
+    return groups
+
+
+def _base_leaf(base_leaves, idx: int, like) -> Any:
+    if base_leaves is None:
+        return jnp.zeros_like(like)
+    return base_leaves[idx]
+
+
+def _execute_leaf(strat: Strategy, plan: MergePlan, task: LeafTask,
+                  leaves, base_leaves) -> Any:
+    """One leaf, exactly the legacy arithmetic: stack the k slices and
+    apply the strategy's leaf function (folding per-leaf for binary-only
+    strategies at k > 2, with the legacy per-step seeds)."""
+    i = task.index
+    slices = [l[i] for l in leaves]
+    cfg = plan.cfg_dict()
+    _note_stacked(task.stacked_nbytes)
+    if strat.binary_only and plan.k > 2:
+        if plan.reduction == "tree":
+            return _leaf_tree_fold(strat, slices, base_leaves, i,
+                                   plan.seed, cfg)
+        return _leaf_seq_fold(strat, slices, base_leaves, i, plan.seed, cfg)
+    stacked = jnp.stack(slices)
+    b = _base_leaf(base_leaves, i, slices[0])
+    return strat.apply_leaf(stacked, b, leaf_index=i, seed=plan.seed, **cfg)
+
+
+def _leaf_seq_fold(strat, slices, base_leaves, i, seed, cfg):
+    acc = slices[0]
+    for step, c in enumerate(slices[1:]):
+        stacked = jnp.stack([acc, c])
+        b = _base_leaf(base_leaves, i, acc)
+        acc = strat.apply_leaf(stacked, b, leaf_index=i,
+                               seed=seed + step + 1, **cfg)
+    return acc
+
+
+def _leaf_tree_fold(strat, slices, base_leaves, i, seed, cfg):
+    level = list(slices)
+    rnd = 0
+    while len(level) > 1:
+        nxt = []
+        for j in range(0, len(level) - 1, 2):
+            rnd += 1
+            stacked = jnp.stack([level[j], level[j + 1]])
+            b = _base_leaf(base_leaves, i, level[j])
+            nxt.append(strat.apply_leaf(stacked, b, leaf_index=i,
+                                        seed=seed + rnd, **cfg))
+        if len(level) % 2:
+            nxt.append(level[-1])
+        level = nxt
+    return level[0]
+
+
+def _execute_batch(strat: Strategy, plan: MergePlan, group: List[LeafTask],
+                   leaves, base_leaves, *,
+                   pallas: bool) -> Tuple[List[Any], bool]:
+    """Fused dispatch over same-dtype elementwise leaves: flatten each
+    leaf's k slices, concatenate along the element axis, apply the leaf
+    function ONCE on [k, N], slice the outputs back. Elementwise leaf
+    functions reduce only over the k axis, so per-element arithmetic —
+    and therefore output bytes — is identical to leaf-at-a-time
+    execution. Returns (outputs, approximate): approximate=True means
+    the fused Pallas route produced them (fp32-accumulated, tolerance
+    only) and the caller must not cache them."""
+    k = plan.k
+    cfg = plan.cfg_dict()
+    idxs = [t.index for t in group]
+    stacked = jnp.concatenate(
+        [jnp.stack([l[i].reshape(-1) for l in leaves]) for i in idxs],
+        axis=1)
+    # the per-leaf stacks and the concatenated copy are both live while
+    # concatenate runs: account 2x, not just the output
+    _note_stacked(2 * int(stacked.nbytes))
+    if base_leaves is None:
+        b = jnp.zeros(stacked.shape[1:], stacked.dtype)
+    else:
+        b = jnp.concatenate([jnp.asarray(base_leaves[i]).reshape(-1)
+                             for i in idxs])
+    approximate = False
+    merged = None
+    if pallas:
+        merged = _nary_pallas_batch(strat, stacked, b, k, cfg)
+        approximate = merged is not None
+    if merged is None:
+        merged = strat.apply_leaf(stacked, b, leaf_index=group[0].index,
+                                  seed=plan.seed, **cfg)
+    outs: List[Any] = []
+    off = 0
+    for t in group:
+        n = 1
+        for d in t.shape:
+            n *= d
+        outs.append(merged[off:off + n].reshape(t.shape))
+        off += n
+    return outs, approximate
+
+
+def _nary_weights(name: str, k: int, cfg: Dict[str, Any]
+                  ) -> Optional[Tuple[List[float], bool]]:
+    """(weights, uses_base) for strategies of the nary_accum form
+    out = base + sum_i w_i (x_i - base); None if not of that form."""
+    if name == "weight_average":
+        return [1.0 / k] * k, False
+    if name == "linear":
+        t = float(cfg.get("t", 0.5))
+        if k == 2:
+            return [1.0 - t, t], False
+        return [1.0 / k] * k, False
+    if name == "task_arithmetic":
+        return [float(cfg.get("lam", 1.0))] * k, True
+    if name == "negative_merge":
+        return [-float(cfg.get("lam", 0.5)) / k] * k, True
+    return None
+
+
+def _nary_pallas_batch(strat: Strategy, stacked, b, k: int,
+                       cfg: Dict[str, Any]):
+    """Fused Pallas nary_accum dispatch for the linear family; returns
+    None when the strategy has no nary weight form (caller falls back to
+    the byte-exact jnp path)."""
+    form = _nary_weights(strat.name, k, cfg)
+    if form is None:
+        return None
+    weights, uses_base = form
+    from repro.kernels.ops import nary_flat_merge
+    base_flat = b if uses_base else jnp.zeros_like(b)
+    out = nary_flat_merge(stacked, base_flat, weights)
+    _STATS["pallas_dispatches"] += 1
+    return out.astype(stacked.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model route (legacy arithmetic + whole-model cache entry)
+# ---------------------------------------------------------------------------
+
+
+def model_key(strategy_name: str, contrib_digests: Sequence[bytes], *,
+              base: Any = None, seed: int = 0, reduction: str = "fold",
+              **cfg) -> bytes:
+    strat = get_strategy(strategy_name)
+    h = hashlib.sha256(_DOMAIN_MODEL)
+    h.update(strat.name.encode())
+    k = len(contrib_digests)
+    h.update(reduction.encode() if (strat.binary_only and k > 2) else b"-")
+    h.update(cfg_key(cfg).encode())
+    h.update(pytree_digest(base) if base is not None else _NO_BASE)
+    h.update(k.to_bytes(4, "big"))
+    for d in contrib_digests:
+        h.update(d)
+    if strat.stochastic or strat.needs_key:
+        h.update(str(seed).encode())
+    return h.digest()
+
+
+def merge(contribs: Sequence[Any], strategy_name: str, *,
+          contrib_ids: Optional[Sequence[str]] = None, base: Any = None,
+          seed: int = 0, reduction: str = "fold", use_cache: bool = True,
+          max_batch_bytes: Optional[int] = None, pallas: bool = False,
+          **cfg) -> Any:
+    """Merge an ORDERED contribution list through the engine.
+
+    Byte-identical to `apply_strategy` on the same inputs (verified for
+    all 26 registry strategies); `whole_model` strategies route through
+    the legacy whole-tree path with a single whole-model cache entry.
+    """
+    if not contribs:
+        raise ValueError("merge() requires at least one contribution")
+    strat = get_strategy(strategy_name)
+    if strat.whole_model or strat.leaf_fn is None:
+        if contrib_ids is not None:
+            digests = [bytes.fromhex(e) if _is_hex(e) else e.encode()
+                       for e in contrib_ids]
+        else:
+            digests = [pytree_digest(c) for c in contribs]
+        key = model_key(strategy_name, digests, base=base, seed=seed,
+                        reduction=reduction, **cfg)
+        if use_cache:
+            hit = _cache_get(key)
+            if hit is not None:
+                _STATS["hits"] += 1
+                return hit
+            _STATS["misses"] += 1
+        from repro.core.resolve import apply_strategy
+        out = apply_strategy(strategy_name, list(contribs), base=base,
+                             seed=seed, reduction=reduction, **cfg)
+        if use_cache:
+            nbytes = sum(int(l.nbytes)
+                         for l in jax.tree_util.tree_leaves(out))
+            _cache_put(key, out, nbytes)
+        return out
+    plan = plan_for(contribs, strategy_name, contrib_ids=contrib_ids,
+                    base=base, seed=seed, reduction=reduction, **cfg)
+    return execute_plan(plan, contribs, base=base, use_cache=use_cache,
+                        max_batch_bytes=max_batch_bytes, pallas=pallas)
+
+
+def _is_hex(s: str) -> bool:
+    try:
+        bytes.fromhex(s)
+        return len(s) % 2 == 0 and len(s) > 0
+    except ValueError:
+        return False

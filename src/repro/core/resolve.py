@@ -9,8 +9,18 @@ canonical order (paper Remark 7) or, optionally, a balanced binary tree
 (equalised influence, still deterministic — implemented as the paper's
 suggested extension).
 
+Execution is delegated to the planner/executor engine (`core/engine`):
+the planner keys every model tensor by a per-leaf sub-root (the hash of
+that leaf's ordered contribution digests + strategy + cfg), the executor
+merges leaf-by-leaf with bounded live memory, and a byte-budgeted
+per-leaf cache makes an unchanged tensor a cache hit even when the
+whole-model Merkle root changed. `apply_strategy` below remains the
+legacy whole-tree reference path; engine output is verified
+byte-identical to it for all 26 strategies (tests/test_engine.py).
+
 Beyond-paper L3 mitigations implemented here:
-  * resolve caching keyed by (Merkle root, strategy, reduction);
+  * per-leaf resolve caching keyed by sub-root (byte-budgeted LRU —
+    `set_cache_limit(bytes=...)`);
   * incremental resolve for strategies with algebraic structure
     (weight averaging: O(p) per new contribution);
   * hierarchical resolve (sub-group resolve + second pass);
@@ -19,40 +29,23 @@ Beyond-paper L3 mitigations implemented here:
     accepts a `fetch` hook that pulls the missing visible payloads over
     the network on demand — determinism is unaffected because payloads
     are content-addressed (equal eid => byte-equal pytree, paper
-    Assumption 11).
+    Assumption 11). The hook is leaf-granular: a plan whose every leaf
+    task hits the cache (planner metadata is memoized by content id)
+    completes WITHOUT fetching any payload at all, and payloads are
+    pulled only when some leaf actually has to recompute.
 """
 from __future__ import annotations
 
-from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine
+from repro.core.engine import (CacheInfo, cache_info, clear_cache,  # noqa: F401
+                               reset_cache_limits, set_cache_limit)
 from repro.core.state import CRDTMergeState
 from repro.strategies import get_strategy
-
-# Bounded LRU: resolve outputs are whole model pytrees, so an unbounded
-# map is a memory leak under long-running gossip (every new Merkle root
-# is a new key). Hits return the identical cached object; eviction only
-# costs recomputation, which is byte-identical by Def. 6 determinism.
-_CACHE: "OrderedDict[Tuple[bytes, str, str, str], Any]" = OrderedDict()
-_CACHE_LIMIT = 64
-
-
-def set_cache_limit(limit: int) -> None:
-    """Set the max number of cached resolve outputs (evicts LRU-first)."""
-    global _CACHE_LIMIT
-    if limit < 1:
-        raise ValueError("cache limit must be >= 1")
-    _CACHE_LIMIT = limit
-    while len(_CACHE) > _CACHE_LIMIT:
-        _CACHE.popitem(last=False)
-
-
-def cache_info() -> Tuple[int, int]:
-    """(current entries, limit)."""
-    return len(_CACHE), _CACHE_LIMIT
 
 
 def seed_from_root(root: bytes) -> int:
@@ -70,31 +63,21 @@ def canonical_order(state: CRDTMergeState) -> List[str]:
     return sorted(state.visible())
 
 
-def _cfg_fragment(k: str, v: Any) -> str:
-    """One cfg knob's cache-key contribution. Plain scalars repr exactly;
-    anything array-like is content-hashed — numpy/JAX reprs truncate
-    large arrays with `...`, so two resolves differing only in a large
-    array knob would otherwise alias to one cache entry and the second
-    caller would get the first caller's pytree."""
-    if v is None or isinstance(v, (bool, int, float, str, bytes)):
-        return f"{k}={v!r}"
-    from repro.core.hashing import pytree_digest
-    try:
-        return f"{k}#{pytree_digest(v).hex()}"
-    except Exception:
-        return f"{k}={v!r}"
-
-
-def _cfg_key(base: Any, cfg: Dict[str, Any]) -> str:
-    """Cache-key component for everything that shapes the output besides
-    the state: strategy knobs and the base model. Without this, two
-    resolves differing only in e.g. `t=` or `base=` would alias to one
-    entry and the second caller would get the first caller's pytree."""
-    parts = [_cfg_fragment(k, cfg[k]) for k in sorted(cfg)]
-    if base is not None:
-        from repro.core.hashing import pytree_digest
-        parts.append("base=" + pytree_digest(base).hex())
-    return ";".join(parts)
+def _fetch_into(store: Dict[str, Any], absent: List[str],
+                fetch: Optional[Callable[[Tuple[str, ...]],
+                                         Dict[str, Any]]]) -> Dict[str, Any]:
+    """Pull `absent` payloads through the fetch hook into a copied store.
+    Raises KeyError without a hook: silently merging a subset would be a
+    wrong answer with no signal."""
+    if fetch is None:
+        raise KeyError(f"store lacks payloads for {list(absent)}; "
+                       "sync blobs first or pass a fetch hook")
+    store = dict(store)
+    store.update(fetch(tuple(absent)))
+    still = [i for i in absent if i not in store]
+    if still:
+        raise KeyError(f"fetch hook could not obtain {still}")
+    return store
 
 
 def resolve(state: CRDTMergeState, strategy_name: str,
@@ -105,54 +88,87 @@ def resolve(state: CRDTMergeState, strategy_name: str,
             **cfg) -> Any:
     """Compute the merged model for the converged state.
 
-    `fetch` is the sharded-store hook: called with the visible eids the
-    local store lacks, it must return their payloads (typically by
-    pulling them over the network — repro.net installs a hook that runs
-    multi-source chunk fetch against the placement's holders). Without
-    a hook, a missing payload raises KeyError, because silently merging
-    a subset would be a wrong answer with no signal.
+    `fetch` is the sharded-store hook: called with the visible eids
+    whose payloads are actually needed and locally absent, it must
+    return them (typically by pulling them over the network — repro.net
+    installs a hook that runs multi-source chunk fetch against the
+    placement's holders). Payloads are needed only for leaf tasks that
+    miss the per-leaf cache: a warm re-resolve on a replica that has
+    shed its blobs fetches nothing. Without a hook, a needed-but-missing
+    payload raises KeyError.
     """
     ids = canonical_order(state)
     if not ids:
         raise ValueError("resolve() requires a non-empty visible set")
-    key = (state.merkle_root(), strategy_name, reduction,
-           _cfg_key(base, cfg))
-    if use_cache and key in _CACHE:
-        _CACHE.move_to_end(key)
-        return _CACHE[key]
-    store = state.store
-    absent = tuple(i for i in ids if i not in store)
-    if absent:
-        if fetch is None:
-            raise KeyError(f"store lacks payloads for {list(absent)}; "
-                           "sync blobs first or pass a fetch hook")
-        store = dict(store)
-        store.update(fetch(absent))
-        still = [i for i in ids if i not in store]
-        if still:
-            raise KeyError(f"fetch hook could not obtain {still}")
-    contribs = [store[i] for i in ids]
     seed = seed_from_root(state.merkle_root())
-    out = apply_strategy(strategy_name, contribs, base=base, seed=seed,
-                         reduction=reduction, **cfg)
-    if use_cache:
-        _CACHE[key] = out
-        _CACHE.move_to_end(key)
-        while len(_CACHE) > _CACHE_LIMIT:
-            _CACHE.popitem(last=False)
-    return out
+    strat = get_strategy(strategy_name)
+    store = state.store
 
+    if strat.whole_model or strat.leaf_fn is None:
+        # legacy whole-tree route. The whole-model cache key is
+        # derivable from the eids alone, so probe it BEFORE fetching:
+        # a warm re-resolve on a blob-shedding replica must not re-ship
+        # k full models for a result it already has.
+        if use_cache:
+            key = engine.model_key(
+                strategy_name, [bytes.fromhex(i) for i in ids],
+                base=base, seed=seed, reduction=reduction, **cfg)
+            hit = engine.cache_lookup(key)
+            if hit is not None:
+                return hit
+        absent = [i for i in ids if i not in store]
+        if absent:
+            store = _fetch_into(store, absent, fetch)
+        return engine.merge([store[i] for i in ids], strategy_name,
+                            contrib_ids=tuple(ids), base=base, seed=seed,
+                            reduction=reduction, use_cache=use_cache, **cfg)
 
-def clear_cache() -> None:
-    _CACHE.clear()
+    # engine route: plan from resident payloads + memoized digests
+    metas = {}
+    unknown = []
+    for i in ids:
+        if i in store:
+            metas[i] = engine.contrib_meta(store[i], eid=i)
+        else:
+            m = engine.memoized_meta(i)
+            if m is None:
+                unknown.append(i)
+            else:
+                metas[i] = m
+    if unknown:
+        # never-seen contributions must be pulled just to plan. With
+        # caching on, pull ONLY those: an updated fine-tune shares most
+        # leaf digests with its retracted predecessor, so the other
+        # absent payloads may turn out not to be needed at all. With
+        # caching off every absent payload is certain to be needed —
+        # combine both pulls into one hook round trip.
+        need = unknown if use_cache else \
+            [i for i in ids if i not in store]
+        store = _fetch_into(store, need, fetch)
+        for i in unknown:
+            metas[i] = engine.contrib_meta(store[i], eid=i)
+    plan = engine.plan_merge([metas[i] for i in ids], strategy_name,
+                             base=base, seed=seed, reduction=reduction,
+                             **cfg)
+    absent = [i for i in ids if i not in store]
+    if absent:
+        _, misses = engine.plan_cached_split(plan)
+        if misses or not use_cache:
+            store = _fetch_into(store, absent, fetch)
+        else:
+            # leaf-granular: every task is cached — no payloads needed
+            return engine.execute_plan(plan, None, base=base)
+    return engine.execute_plan(plan, [store[i] for i in ids], base=base,
+                               use_cache=use_cache)
 
 
 def apply_strategy(strategy_name: str, contribs: List[Any], *, base=None,
                    seed: int = 0, reduction: str = "fold", **cfg) -> Any:
     """Direct (non-CRDT) strategy application over an ORDERED list.
 
-    This is exactly what Layer 2 invokes — used by the Remark 16
-    byte-for-byte transparency check.
+    This is exactly what Layer 2 invokes — the legacy whole-tree path,
+    kept as the byte-for-byte reference for the Remark 16 transparency
+    check and the engine equivalence suite.
     """
     strat = get_strategy(strategy_name)
     if strat.binary_only and len(contribs) > 2:
@@ -250,20 +266,38 @@ class IncrementalMean:
 
 
 def hierarchical_resolve(states: List[CRDTMergeState], strategy_name: str,
-                         group_size: int = 8, base=None, **cfg):
+                         group_size: int = 8, base=None, *,
+                         reduction: str = "fold",
+                         fetch: Optional[Callable[[Tuple[str, ...]],
+                                                  Dict[str, Any]]] = None,
+                         **cfg):
     """Two-level resolve: sub-groups resolve locally; a second pass merges
     sub-group outputs (paper §7.2 L3 mitigation 2). Deterministic given
     the same partitioning policy (groups formed over the canonical order).
+
+    Honors `reduction=` for both passes and accepts the same `fetch=`
+    sharded-store hook as resolve(): payloads missing from the merged
+    store are pulled before the first pass instead of KeyError-ing.
     """
+    if not states:
+        raise ValueError("hierarchical_resolve() requires >= 1 state")
     merged = states[0]
     for s in states[1:]:
         merged = merged.merge(s)
     ids = canonical_order(merged)
+    if not ids:
+        raise ValueError("hierarchical_resolve() requires a non-empty "
+                         "visible set")
+    store = merged.store
+    absent = [i for i in ids if i not in store]
+    if absent:
+        store = _fetch_into(store, absent, fetch)
     seed = seed_from_root(merged.merkle_root())
     groups = [ids[i:i + group_size] for i in range(0, len(ids), group_size)]
     firsts = [apply_strategy(strategy_name,
-                             [merged.store[i] for i in g],
-                             base=base, seed=seed, **cfg)
+                             [store[i] for i in g],
+                             base=base, seed=seed, reduction=reduction,
+                             **cfg)
               for g in groups]
     return apply_strategy(strategy_name, firsts, base=base, seed=seed + 1,
-                          **cfg)
+                          reduction=reduction, **cfg)

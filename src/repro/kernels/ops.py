@@ -68,6 +68,26 @@ def dare_merge(contribs, base=None, seed: int = 0, p: float = 0.5, *,
     return jax.tree_util.tree_unflatten(treedef, outs)
 
 
+def nary_flat_merge(stacked_flat, base_flat, weights, *,
+                    block: int = DEFAULT_BLOCK,
+                    interpret: Optional[bool] = None):
+    """One fused nary_accum dispatch over an already-flattened batch.
+
+    `stacked_flat`: [k, N] — many same-dtype leaves' slices concatenated
+    along the element axis (the merge engine's batched dispatch);
+    `base_flat`: [N]; `weights`: [k] scalars. Returns fp32 [N]
+    (out = base + sum_i w_i (x_i - base)), one HBM pass for the whole
+    batch instead of one kernel launch per leaf.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    sp, n = pad_stacked(stacked_flat, block)
+    bp, _ = pad_flat(base_flat, block)
+    w = jnp.asarray(weights, jnp.float32).reshape(-1, 1)
+    out = nary_accum_pallas(sp, bp[None, :], w, block=block,
+                            interpret=interpret)
+    return out.reshape(-1)[:n]
+
+
 def weighted_merge(contribs, weights, base=None, *,
                    block: int = DEFAULT_BLOCK,
                    interpret: Optional[bool] = None):

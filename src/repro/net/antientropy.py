@@ -285,10 +285,21 @@ class SyncNode:
         return self.state.merkle_root()
 
     def resolve(self, strategy: str, base=None, **cfg):
+        """Layer-2 resolve over this node's state, pulling absent blobs
+        through the fetch hook. The merge engine's pulls are
+        leaf-granular: resolve() invokes the hook only for payloads some
+        cache-missed leaf task actually needs, so a warm re-resolve on a
+        replica that shed its blobs ships zero chunks
+        (stats["resolve_blob_pulls"] counts what was pulled)."""
         if self.fetch_hook is not None:
             hook = self.fetch_hook
+
+            def counted(eids):
+                self.stats["resolve_blob_pulls"] += len(eids)
+                return hook(self, eids)
+
             return resolve(self.state, strategy, base=base,
-                           fetch=lambda eids: hook(self, eids), **cfg)
+                           fetch=counted, **cfg)
         return resolve(self.state, strategy, base=base, **cfg)
 
     def missing_blobs(self) -> Tuple[str, ...]:

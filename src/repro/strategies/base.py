@@ -5,6 +5,22 @@ pytrees (paper Assumption 9): σ(contribs, base, seed, **cfg) -> merged.
 All randomness must flow from `seed` (Phase 2 derives it from the Merkle
 root; the raw Phase-1 audit feeds varying seeds to reflect default
 stochastic behaviour, per paper Appendix F).
+
+Two execution protocols share one registration:
+
+  * whole-tree (`__call__`): stack k full pytrees and run `fn` — the
+    legacy path, and the only route for `whole_model=True` strategies
+    (population search, SVD factorizations) whose cost profile is not
+    per-tensor;
+  * leafwise (`apply_leaf`): the planner/executor engine
+    (`core/engine`) calls `leaf_fn` one tensor at a time, deriving the
+    per-leaf PRNG key from the *global* flatten index exactly as
+    `leafwise` does — so engine output is byte-identical to `__call__`.
+
+`elementwise=True` marks leaf functions that reduce only over the
+leading k axis (no per-leaf norms/quantiles/shape use): the engine may
+fuse many such leaves into one flattened [k, N] dispatch without
+changing any output byte.
 """
 from __future__ import annotations
 
@@ -23,10 +39,17 @@ class Strategy:
     binary_only: bool = False
     category: str = "linear"          # linear | sparse | geometry | search
     defaults: Dict[str, Any] = field(default_factory=dict)
+    leaf_fn: Optional[Callable] = None  # leaf_fn(stacked[k,...], base, [key])
+    needs_key: bool = False           # leaf_fn consumes a PRNG key
+    whole_model: bool = False         # not per-tensor: legacy path only
+    elementwise: bool = False         # reduces only over the k axis
 
     def __call__(self, contribs: List[Any], *, base: Any = None,
                  seed: int = 0, **cfg) -> Any:
-        assert len(contribs) >= 1
+        if len(contribs) < 1:
+            raise ValueError(
+                f"strategy {self.name!r} requires at least one "
+                "contribution, got an empty list")
         stacked = jax.tree_util.tree_map(
             lambda *xs: jnp.stack(list(xs)), *contribs)
         if base is None:
@@ -34,6 +57,34 @@ class Strategy:
         kw = dict(self.defaults)
         kw.update(cfg)
         return self.fn(stacked, base, seed, **kw)
+
+    def apply_leaf(self, stacked, base, *, leaf_index: int = 0,
+                   seed: int = 0, **cfg) -> Any:
+        """Merge ONE leaf: stacked [k, ...] slices + base leaf.
+
+        Key derivation replicates `leafwise` exactly —
+        `fold_in(PRNGKey(seed & 0x7FFFFFFF), leaf_index)` with the
+        global flatten index — so per-leaf execution is byte-identical
+        to the whole-tree path.
+        """
+        if self.leaf_fn is None:
+            raise TypeError(f"strategy {self.name!r} has no leafwise "
+                            "executor (whole-model only)")
+        kw = dict(self.defaults)
+        kw.update(cfg)
+        if self.needs_key:
+            key = jax.random.fold_in(
+                jax.random.PRNGKey(seed & 0x7FFFFFFF), leaf_index)
+            return self.leaf_fn(stacked, base, key, **kw)
+        return self.leaf_fn(stacked, base, **kw)
+
+    @property
+    def batchable(self) -> bool:
+        """True when leaves may be fused into one flattened dispatch
+        without changing output bytes: elementwise arithmetic, no
+        per-leaf key, no per-leaf fold structure."""
+        return (self.elementwise and not self.needs_key
+                and not self.binary_only and self.leaf_fn is not None)
 
 
 REGISTRY: Dict[str, Strategy] = {}

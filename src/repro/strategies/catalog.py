@@ -420,17 +420,30 @@ def _genetic_merge(s, b, grid=11, gens=3, reg=0.05, **kw):
 
 
 def _reg(name, leaf_fn, *, needs_key=False, stochastic=False,
-         binary_only=False, category="linear", **defaults):
+         binary_only=False, category="linear", whole_model=False,
+         elementwise=False, **defaults):
     register(Strategy(name=name, fn=leafwise(leaf_fn, needs_key=needs_key),
                       stochastic=stochastic, binary_only=binary_only,
-                      category=category, defaults=defaults))
+                      category=category, defaults=defaults,
+                      leaf_fn=leaf_fn, needs_key=needs_key,
+                      whole_model=whole_model, elementwise=elementwise))
 
 
-_reg("weight_average", _weight_average)
-_reg("linear", _linear)
-_reg("task_arithmetic", _task_arithmetic)
-_reg("negative_merge", _negative_merge)
-_reg("fisher_merge", _fisher_merge)
+# `elementwise`: the leaf function reduces only over the leading k axis
+# (no per-leaf norms/quantiles/SVD/shape use), so the engine may fuse
+# arbitrarily many leaves into one flattened [k, N] dispatch — same
+# per-element arithmetic, byte-identical output.
+# `whole_model`: population-search and SVD-based strategies whose cost
+# profile is dominated by per-call factorization/search rather than
+# streaming elementwise math; the engine routes them through the legacy
+# whole-tree path (and caches one whole-model entry) instead of
+# pretending a per-tensor plan buys anything.
+
+_reg("weight_average", _weight_average, elementwise=True)
+_reg("linear", _linear, elementwise=True)
+_reg("task_arithmetic", _task_arithmetic, elementwise=True)
+_reg("negative_merge", _negative_merge, elementwise=True)
+_reg("fisher_merge", _fisher_merge, elementwise=True)
 _reg("dam", _dam)
 _reg("ada_merging", _ada_merging)
 _reg("regression_mean", _regression_mean)
@@ -444,16 +457,17 @@ _reg("model_breadcrumbs", _model_breadcrumbs, category="sparse")
 _reg("emr", _emr, category="sparse")
 _reg("safe_merge", _safe_merge, category="sparse")
 _reg("split_unlearn_merge", _split_unlearn_merge, category="sparse")
-_reg("star", _star, category="sparse")
+_reg("star", _star, category="sparse", whole_model=True)
 
 _reg("slerp", _slerp, binary_only=True, category="geometry")
 _reg("dual_projection", _dual_projection, category="geometry")
-_reg("svd_knot_tying", _svd_knot_tying, category="geometry")
+_reg("svd_knot_tying", _svd_knot_tying, category="geometry",
+     whole_model=True)
 _reg("representation_surgery", _representation_surgery, category="geometry")
 _reg("weight_scope_alignment", _weight_scope_alignment, category="geometry")
 _reg("led_merge", _led_merge, category="geometry")
-_reg("adarank", _adarank, category="geometry")
+_reg("adarank", _adarank, category="geometry", whole_model=True)
 
 _reg("evolutionary_merge", _evolutionary_merge, needs_key=True,
-     stochastic=True, category="search")
-_reg("genetic_merge", _genetic_merge, category="search")
+     stochastic=True, category="search", whole_model=True)
+_reg("genetic_merge", _genetic_merge, category="search", whole_model=True)

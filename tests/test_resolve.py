@@ -8,8 +8,8 @@ import pytest
 from conftest import make_contribs
 from repro.core.resolve import (IncrementalMean, apply_strategy,
                                 cache_info, canonical_order, clear_cache,
-                                hierarchical_resolve, resolve,
-                                seed_from_root, set_cache_limit)
+                                hierarchical_resolve, reset_cache_limits,
+                                resolve, seed_from_root, set_cache_limit)
 from repro.core.state import CRDTMergeState
 from repro.strategies import get_strategy
 
@@ -107,7 +107,8 @@ def test_resolve_cache_is_bounded_lru():
     try:
         states = [_state_with(make_contribs(2, seed=s)) for s in range(5)]
         outs = [resolve(s, "weight_average") for s in states]
-        assert cache_info() == (3, 3)
+        assert cache_info().entries == 3
+        assert cache_info().entry_limit == 3
         # oldest two evicted; newest three still hits
         for s, out in zip(states[2:], outs[2:]):
             assert resolve(s, "weight_average") is out
@@ -116,7 +117,7 @@ def test_resolve_cache_is_bounded_lru():
         assert np.asarray(recomputed).tobytes() == \
             np.asarray(outs[0]).tobytes()           # but byte-identical
     finally:
-        set_cache_limit(64)
+        reset_cache_limits()
         clear_cache()
 
 
@@ -132,9 +133,9 @@ def test_resolve_cache_lru_recency_order():
         assert resolve(s1, "weight_average") is r1   # refresh s1's recency
         resolve(s3, "weight_average")                # evicts s2, not s1
         assert resolve(s1, "weight_average") is r1
-        assert cache_info()[0] == 2
+        assert cache_info().entries == 2
     finally:
-        set_cache_limit(64)
+        reset_cache_limits()
         clear_cache()
 
 
