@@ -2,7 +2,7 @@
 
 Scenario: a k-way merge of `--leaves`-tensor models through the
 planner/executor engine (`core/engine`) vs the legacy whole-tree path
-(`apply_strategy`), then one contributor publishes an updated
+(`reference_apply`), then one contributor publishes an updated
 fine-tune — a NEW contribution (fresh element id, canonical position
 pinned) that differs from its retracted predecessor in `--changed`
 tensors — and the model is re-resolved.
@@ -35,7 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine
-from repro.core.resolve import (apply_strategy, canonical_order,
+from repro.api import MergeSpec
+from repro.core.resolve import (reference_apply, canonical_order,
                                 clear_cache, resolve, seed_from_root)
 from repro.core.state import CRDTMergeState
 
@@ -106,11 +107,12 @@ def run(leaves: int, dim: int, k: int, changed: int, strategy: str):
     # compile/trace warm-up on a disjoint state so cold timing measures
     # the engine, not XLA's first-touch compilation
     clear_cache()
-    resolve(_state(k, leaves, dim, seed0=500), strategy, use_cache=False)
+    resolve(_state(k, leaves, dim, seed0=500), MergeSpec(strategy),
+            use_cache=False)
 
     clear_cache()
     t0 = time.perf_counter()
-    cold_out = resolve(s, strategy)
+    cold_out = resolve(s, MergeSpec(strategy))
     _block(cold_out)
     t_cold = time.perf_counter() - t0
 
@@ -123,7 +125,7 @@ def run(leaves: int, dim: int, k: int, changed: int, strategy: str):
         node=f"n{k - 1}", element_id=_eid(last[:1] + "f"))
     engine.reset_exec_stats()
     t0 = time.perf_counter()
-    warm_out = resolve(s2, strategy)
+    warm_out = resolve(s2, MergeSpec(strategy))
     _block(warm_out)
     t_warm = time.perf_counter() - t0
     stats = engine.exec_stats()
@@ -145,12 +147,12 @@ def run(leaves: int, dim: int, k: int, changed: int, strategy: str):
 
     # -- gate 3: byte-for-byte vs legacy ------------------------------------
     ids = canonical_order(s2)
-    legacy = apply_strategy(strategy, [s2.store[i] for i in ids],
+    legacy = reference_apply(strategy, [s2.store[i] for i in ids],
                             seed=seed_from_root(s2.merkle_root()))
     if not _bytes_equal(warm_out, legacy):
         failures.append("warm engine output differs from legacy path")
     ids0 = canonical_order(s)
-    legacy0 = apply_strategy(strategy, [s.store[i] for i in ids0],
+    legacy0 = reference_apply(strategy, [s.store[i] for i in ids0],
                              seed=seed_from_root(s.merkle_root()))
     if not _bytes_equal(cold_out, legacy0):
         failures.append("cold engine output differs from legacy path")

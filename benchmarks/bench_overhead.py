@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.merkle import merkle_root
-from repro.core.resolve import apply_strategy, canonical_order, resolve, \
+from repro.core.resolve import reference_apply, canonical_order, resolve, \
     seed_from_root
 from repro.core.state import CRDTMergeState
 
@@ -82,7 +82,7 @@ def resolve_overhead(quick: bool = True) -> List[Row]:
         us_crdt = _timeit(crdt_part, reps=20)
         contribs = [acc.store[i] for i in canonical_order(acc)]
         us_strat = _timeit(
-            lambda: apply_strategy("ties", contribs, seed=1), reps=3)
+            lambda: reference_apply("ties", contribs, seed=1), reps=3)
         rows.append((f"resolve_crdt_overhead_k{k}", us_crdt,
                      f"strategy_us={us_strat:.0f};"
                      f"overhead_frac={us_crdt/(us_crdt+us_strat):.4f};"

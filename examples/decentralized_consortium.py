@@ -1,13 +1,19 @@
 """Consortium simulation: 10 institutions, network partitions, Byzantine
 contribution, delta-state gossip with int8 compression.
 
+Trust gating rides the typed API: evidence lands on a Replica via
+report(), and the trust threshold is part of the MergeSpec — so the
+gated resolve runs through the same planner/executor engine as every
+other resolve (per-leaf cache, leaf-granular fetch), and every honest
+replica derives the identical gated model.
+
   PYTHONPATH=src python examples/decentralized_consortium.py
 """
 import jax.numpy as jnp
 import numpy as np
 
+from repro import MergeSpec, Replica
 from repro.core.gossip import GossipNetwork
-from repro.core.trust import TrustState, gated_resolve
 
 
 def main():
@@ -35,22 +41,24 @@ def main():
     print(f"healed: all {n} nodes converged "
           f"(delta gossip sent {net.bytes_sent/1e6:.2f} MB)")
 
-    # Byzantine detection: honest nodes report the outlier; trust evidence
-    # is itself a (grow-only) CRDT, so gating decisions converge too.
-    merged = net.nodes[0].state
-    scores = {eid: float(np.max(np.abs(np.asarray(merged.store[eid]))))
-              for eid in merged.visible()}
+    # Byzantine detection: honest nodes report the outlier; trust
+    # evidence is itself a (grow-only) CRDT, so gating decisions
+    # converge too. A Replica carries the evidence; the threshold
+    # travels in the MergeSpec.
+    rep = Replica("auditor").merge(net.nodes[0].state)
+    scores = {eid: float(np.max(np.abs(np.asarray(rep.state.store[eid]))))
+              for eid in rep.visible()}
     outlier = max(scores, key=scores.get)
-    trust = TrustState()
     for reporter in ("node000", "node001", "node002"):
-        trust = trust.merge(TrustState().report(
-            outlier, "statistical_outlier", reporter))
+        rep.report(outlier, "statistical_outlier", reporter)
     print(f"flagged contribution {outlier[:12]}… "
-          f"(|max|={scores[outlier]:.1f}, trust={trust.score(outlier):.2f})")
+          f"(|max|={scores[outlier]:.1f}, "
+          f"trust={rep.trust.score(outlier):.2f})")
 
-    clean = gated_resolve(merged, trust, "ties",
-                          base=jnp.asarray(base), threshold=0.5)
-    dirty = net.nodes[0].resolve("ties", base=jnp.asarray(base))
+    base_j = jnp.asarray(base)
+    gated = MergeSpec("ties", trust_threshold=0.5)
+    clean = rep.resolve(gated, base=base_j)
+    dirty = rep.resolve(MergeSpec("ties"), base=base_j)
     print(f"resolve with trust gate: |max|={float(jnp.max(jnp.abs(clean))):.3f}"
           f"  vs ungated: |max|={float(jnp.max(jnp.abs(dirty))):.3f}")
     print("gated merge excludes the poisoned model deterministically on "

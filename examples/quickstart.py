@@ -1,18 +1,21 @@
 """Quickstart: CRDT-compliant model merging in ~60 lines.
 
 Three 'institutions' fine-tune the same tiny model, contribute their
-weights into CRDTMergeState replicas, gossip in arbitrary order, and all
+weights into Replica objects, gossip in arbitrary order, and all
 resolve the IDENTICAL merged model — for any of the 26 strategies,
 including stochastic ones (DARE) and order-dependent folds (SLERP).
 
+The public surface is `repro.api`: a `MergeSpec` says *what* to
+resolve (strategy + validated cfg + reduction + trust threshold), a
+`Replica` owns the state, blob store, and a per-replica engine cache.
+
   PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.resolve import resolve, seed_from_root
-from repro.core.state import CRDTMergeState
+from repro import MergeSpec, Replica
+from repro.core.resolve import seed_from_root
 from repro.strategies import list_strategies
 
 
@@ -23,29 +26,36 @@ def main():
                                      jnp.float32) for _ in range(3)]
 
     # each institution has its own replica and contributes independently
-    replicas = [CRDTMergeState().add(ft, node=f"inst{i}")
-                for i, ft in enumerate(fine_tunes)]
+    replicas = [Replica(f"inst{i}") for i in range(3)]
+    for rep, ft in zip(replicas, fine_tunes):
+        rep.contribute(ft)
 
     # deliver in two different orders (network reordering)
-    a = replicas[0].merge(replicas[1]).merge(replicas[2])
-    b = replicas[2].merge(replicas[0].merge(replicas[1]))
-    assert a == b
+    a = Replica("obs-a").merge(replicas[0]).merge(replicas[1]) \
+                        .merge(replicas[2])
+    b = Replica("obs-b").merge(replicas[2]) \
+                        .merge(Replica("tmp").merge(replicas[0])
+                               .merge(replicas[1]))
+    assert a.merkle_root() == b.merkle_root()
     print(f"converged state: {a}")
     print(f"merkle root:     {a.merkle_root().hex()[:16]}…")
     print(f"derived seed:    {seed_from_root(a.merkle_root())}")
 
+    # a MergeSpec validates its cfg against the strategy's schema:
+    # MergeSpec("ties", {"tirm": 0.3}) raises with a did-you-mean.
     print(f"\n{'strategy':26s} identical-on-both-replicas")
     for strat in ("weight_average", "ties", "dare", "slerp",
                   "task_arithmetic", "evolutionary_merge"):
-        ra = resolve(a, strat, base=base, use_cache=False)
-        rb = resolve(b, strat, base=base, use_cache=False)
+        spec = MergeSpec(strat)
+        ra = a.resolve(spec, base=base, use_cache=False)
+        rb = b.resolve(spec, base=base, use_cache=False)
         print(f"{strat:26s} {bool(jnp.array_equal(ra, rb))}")
 
     # retraction: OR-Set remove
     victim = sorted(a.visible())[0]
-    a2 = a.remove(victim, node="inst0")
-    print(f"\nafter retraction: |visible| {len(a.visible())} -> "
-          f"{len(a2.visible())}")
+    before = len(a.visible())
+    a.retract(victim)
+    print(f"\nafter retraction: |visible| {before} -> {len(a.visible())}")
     print(f"all {len(list_strategies())} strategies available: "
           f"{', '.join(list_strategies()[:6])}, …")
 

@@ -9,9 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import MergeSpec, Replica
 from repro.configs import ShapeSpec, smoke_config
-from repro.core.resolve import resolve
-from repro.core.state import CRDTMergeState
 from repro.data.synthetic import make_batch
 from repro.models.model import Model
 from repro.train.serve import greedy_decode
@@ -43,12 +42,13 @@ def main():
     ft1 = quick_finetune(model, jax.tree_util.tree_map(jnp.copy, base_state), 1)
     ft2 = quick_finetune(model, jax.tree_util.tree_map(jnp.copy, base_state), 2)
 
-    s = (CRDTMergeState()
-         .add(ft1["params"], node="serve-a")
-         .add(ft2["params"], node="serve-b"))
-    merged = resolve(s, "ties", base=base)
+    rep = Replica("serve")
+    rep.contribute(ft1["params"])
+    rep.contribute(ft2["params"])
+    base_ref = rep.register_base(base)
+    merged = rep.resolve(MergeSpec("ties", base_ref=base_ref))
     print(f"merged 2 contributions via TIES "
-          f"(root {s.merkle_root().hex()[:12]}…)")
+          f"(root {rep.merkle_root().hex()[:12]}…)")
 
     batch = {k: jnp.asarray(v) for k, v in make_batch(
         cfg, ShapeSpec("serve", 16, args.batch, "prefill")).items()}

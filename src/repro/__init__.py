@@ -1,0 +1,30 @@
+"""repro — CRDT-compliant neural network model merging.
+
+Reproduction of the two-layer architecture (OR-Set CRDT over
+contributions + deterministic strategy execution across 26 merge
+strategies), grown toward a production-scale JAX/Pallas system.
+
+The supported public surface is `repro.api` (re-exported here):
+`MergeSpec` describes what to resolve, `Replica` owns a replica's
+lifecycle. Subpackages (`repro.core`, `repro.strategies`, `repro.net`,
+…) are importable directly for lower-level work.
+
+Attribute access is lazy so `import repro.core.state` does not pull
+the strategy catalog (and JAX compilation machinery) along with it.
+"""
+from typing import Any
+
+__all__ = ["MergeSpec", "Replica", "SpecError", "EngineCache"]
+
+__version__ = "0.2.0"
+
+
+def __getattr__(name: str) -> Any:
+    if name in __all__:
+        from repro import api
+        return getattr(api, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__ + ["__version__"])

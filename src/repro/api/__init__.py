@@ -1,0 +1,39 @@
+"""repro.api — the typed public surface of the merge system.
+
+Two pillars (ISSUE 5 / api v1):
+
+  * `MergeSpec` — a frozen, validated, canonically-hashable description
+    of *what to resolve*: strategy + typed cfg (checked against the
+    strategy's declared schema) + base reference + reduction + trust
+    threshold + hierarchical grouping. `spec.digest()` keys the engine
+    caches; `spec.encode()` is wire-serializable so nodes can gossip
+    what to resolve, not just contributions.
+  * `Replica` — one object owning a replica's lifecycle: Layer-1 state
+    + blob store, a per-replica `EngineCache`, optional trust state,
+    and sync wiring (`attach(SyncNode)`), with every resolve routed
+    through the planner/executor engine.
+
+Attribute access is lazy (PEP 562) so `repro.api.spec` can be imported
+by low-level modules (core.engine, core.resolve) without dragging the
+facade — and its imports of those same modules — into a cycle.
+"""
+from typing import Any
+
+__all__ = ["MergeSpec", "Replica", "SpecError", "EngineCache"]
+
+
+def __getattr__(name: str) -> Any:
+    if name in ("MergeSpec", "SpecError"):
+        from repro.api import spec
+        return getattr(spec, name)
+    if name == "Replica":
+        from repro.api.replica import Replica
+        return Replica
+    if name == "EngineCache":
+        from repro.core.engine import EngineCache
+        return EngineCache
+    raise AttributeError(f"module 'repro.api' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

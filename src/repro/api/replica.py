@@ -1,0 +1,216 @@
+"""Replica — one object owning a replica's full merge lifecycle.
+
+Before this facade, running a replica meant hand-wiring five parts:
+`CRDTMergeState` (Layer 1), the blob store riding inside it, the
+process-global engine cache, an optional `TrustState`, and a
+`SyncNode.fetch_hook` for sharded stores. `Replica` owns all of them:
+
+    rep = Replica("inst-a")
+    eid = rep.contribute(fine_tune)
+    rep.merge(other_rep)                       # CRDT join
+    rep.report(bad_eid, "statistical_outlier")
+    merged = rep.resolve(MergeSpec("ties", {"trim": 0.3},
+                                   trust_threshold=0.5))
+
+Every resolve goes through `core.resolve.resolve_spec`, i.e. the
+planner/executor engine — including trust-gated and hierarchical
+(`group_size`) specs — with THIS replica's `EngineCache`: two replicas
+in one process no longer alias each other's LRU order, byte budget, or
+hit/miss counters.
+
+`attach(sync_node)` hands state ownership to a `repro.net.SyncNode`:
+contributions/retractions flow through the node (so its partial-blob
+bookkeeping stays coherent), and resolves pull non-resident payloads
+through the node's fetch hook — the facade over a sharded,
+anti-entropy-synced deployment.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from repro.api.spec import MergeSpec
+from repro.core.engine import CacheInfo, EngineCache
+from repro.core.hashing import pytree_digest
+from repro.core.state import CRDTMergeState
+from repro.core.trust import TrustState
+
+__all__ = ["Replica"]
+
+
+class Replica:
+    """Facade over state + store + per-replica cache + trust + sync."""
+
+    def __init__(self, node_id: str = "local", *,
+                 state: Optional[CRDTMergeState] = None,
+                 trust: Optional[TrustState] = None,
+                 cache: Optional[EngineCache] = None):
+        self.node_id = node_id
+        self._state = state if state is not None else CRDTMergeState()
+        self.trust = trust
+        self.cache = cache if cache is not None else EngineCache()
+        self._bases: Dict[str, Any] = {}
+        self._node = None                  # attached repro.net.SyncNode
+
+    # ----------------------------------------------------------- state
+
+    @property
+    def state(self) -> CRDTMergeState:
+        return self._node.state if self._node is not None else self._state
+
+    @state.setter
+    def state(self, value: CRDTMergeState) -> None:
+        if self._node is not None:
+            self._node.state = value
+        else:
+            self._state = value
+
+    def contribute(self, contribution: Any,
+                   element_id: Optional[str] = None) -> str:
+        """Publish a model contribution; returns its element id (the
+        content hash that names it everywhere — ordering, Merkle roots,
+        blob fetch, retraction)."""
+        eid = element_id or pytree_digest(contribution).hex()
+        if self._node is not None:
+            self._node.contribute(contribution, element_id=eid)
+        else:
+            self._state = self._state.add(contribution, self.node_id,
+                                          element_id=eid)
+        return eid
+
+    def retract(self, element_id: str) -> None:
+        """OR-Set remove: tombstone every observed tag of the element."""
+        if self._node is not None:
+            self._node.retract(element_id)
+        else:
+            self._state = self._state.remove(element_id, self.node_id)
+
+    def merge(self, other: Any) -> "Replica":
+        """CRDT join with another Replica, a raw CRDTMergeState, or an
+        attached node's state. Trust evidence joins too (it is itself a
+        grow-only CRDT). Returns self for chaining."""
+        if isinstance(other, Replica):
+            state, trust = other.state, other.trust
+        elif isinstance(other, CRDTMergeState):
+            state, trust = other, None
+        else:
+            raise TypeError(f"cannot merge {type(other).__name__}")
+        if self._node is not None:
+            self._node.join(state)
+        else:
+            self._state = self._state.merge(state)
+        if trust is not None:
+            self.trust = trust if self.trust is None \
+                else self.trust.merge(trust)
+        return self
+
+    def visible(self):
+        return self.state.visible()
+
+    def merkle_root(self) -> bytes:
+        return self.state.merkle_root()
+
+    # ----------------------------------------------------------- trust
+
+    def report(self, element_id: str, kind: str,
+               reporter: Optional[str] = None,
+               severity: float = 1.0) -> "Replica":
+        """File trust evidence against a contribution (grow-only CRDT;
+        evidence merges with merge())."""
+        base = self.trust if self.trust is not None else TrustState()
+        self.trust = base.report(element_id, kind,
+                                 reporter or self.node_id, severity)
+        return self
+
+    # ------------------------------------------------------------ base
+
+    def register_base(self, payload: Any) -> str:
+        """Pin a base model; returns its content ref for
+        `MergeSpec(base_ref=...)`. Content-addressed: the ref fully
+        determines the bytes, so specs carrying it are portable."""
+        ref = pytree_digest(payload).hex()
+        self._bases[ref] = payload
+        return ref
+
+    # --------------------------------------------------------- resolve
+
+    def resolve(self, spec: MergeSpec, *, base: Any = None,
+                use_cache: bool = True) -> Any:
+        """Layer-2 resolve of `spec` over this replica's converged
+        visible set — through the planner/executor engine with this
+        replica's cache, gated by this replica's trust state when the
+        spec asks, fetching non-resident payloads through the attached
+        node's hook (leaf-granular: warm re-resolves fetch nothing)."""
+        if not isinstance(spec, MergeSpec):
+            raise TypeError(
+                "Replica.resolve() takes a MergeSpec — e.g. "
+                f"MergeSpec({spec!r}) — not {type(spec).__name__}")
+        from repro.core.resolve import resolve_spec
+        verify_base = True
+        if base is None and spec.base_ref is not None:
+            try:
+                base = self._bases[spec.base_ref]
+            except KeyError:
+                raise KeyError(
+                    f"base_ref {spec.base_ref[:16]}… not registered on "
+                    "this replica; call register_base(payload) first"
+                    ) from None
+            # registry entries are keyed by their digest at
+            # register_base time — re-hashing a multi-GB base on every
+            # (possibly warm, zero-work) resolve would be pure waste
+            verify_base = False
+        return resolve_spec(self.state, spec, base=base,
+                            trust=self.trust, fetch=self._fetch_hook(),
+                            cache=self.cache, use_cache=use_cache,
+                            verify_base=verify_base)
+
+    def _fetch_hook(self):
+        # the node's counted wrapper, so Replica-routed and node-routed
+        # resolves account blob pulls identically
+        return self._node._counted_fetch() if self._node is not None \
+            else None
+
+    # ------------------------------------------------------------ sync
+
+    def attach(self, node: Any) -> "Replica":
+        """Hand state ownership to a `repro.net.SyncNode`: the node's
+        state absorbs this replica's, and from here on contribute /
+        retract / merge / resolve all operate through the node (blob
+        bookkeeping, placement filtering, fetch-on-resolve)."""
+        if self._node is not None:
+            raise RuntimeError("already attached; detach() first")
+        node.join(self._state)
+        self._node = node
+        return self
+
+    def detach(self) -> "Replica":
+        """Take the state back from the attached node."""
+        if self._node is None:
+            raise RuntimeError("not attached")
+        self._state = self._node.state
+        self._node = None
+        return self
+
+    @property
+    def node(self):
+        return self._node
+
+    # ----------------------------------------------------------- cache
+
+    def set_cache_limit(self, entries: Optional[int] = None, *,
+                        bytes: Optional[int] = None) -> None:  # noqa: A002
+        """Bound THIS replica's merge-output cache (entry count and/or
+        resident bytes; LRU eviction applies immediately)."""
+        self.cache.set_limit(entries, bytes=bytes)
+
+    def cache_info(self) -> CacheInfo:
+        return self.cache.info()
+
+    def clear_cache(self) -> None:
+        self.cache.clear()
+
+    def __repr__(self) -> str:
+        where = f" via {self._node.node_id!r}" if self._node else ""
+        ev = len(self.trust.evidence) if self.trust is not None else 0
+        return (f"Replica({self.node_id!r}{where}, "
+                f"visible={len(self.state.visible())}, evidence={ev}, "
+                f"cache={self.cache.info().entries})")

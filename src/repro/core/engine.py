@@ -30,20 +30,31 @@ the legacy whole-tree path and cached as a single whole-model entry.
 
 Sub-root derivation
 -------------------
-For leaf index i of a k-way merge:
+For leaf index i of a k-way merge described by a `repro.api.MergeSpec`:
 
-    sub_root_i = SHA-256( domain || strategy || reduction* || cfg_key ||
+    sub_root_i = SHA-256( domain || spec_fragment ||
                           base_i || k || d_1,i || ... || d_k,i ||
                           [seed || i  iff the strategy consumes a key] )
 
-where d_j,i is `tensor_digest` of contribution j's leaf i in canonical
-(whole-model content hash) order, base_i the base leaf's digest (a fixed
-marker when base is None, i.e. zeros), and reduction* is included only
-when it affects the output (binary-only strategies at k > 2). The seed
-and leaf index enter only for key-consuming strategies: a deterministic
+where `spec_fragment = spec.cache_fragment(with_reduction)` is the
+spec's canonical hash over strategy + normalized cfg (+ reduction only
+when it affects the output: binary-only strategies at k > 2), d_j,i is
+`tensor_digest` of contribution j's leaf i in canonical (whole-model
+content hash) order, and base_i the base leaf's digest (a fixed marker
+when base is None, i.e. zeros). Because the fragment comes from the
+spec's canonical encoding — cfg sorted, schema defaults filled in —
+every entry point that means the same resolve derives the same keys:
+`MergeSpec.digest()` is, transitively, the cache key. The seed and
+leaf index enter only for key-consuming strategies: a deterministic
 strategy's leaf output is independent of both, so its cache entries
 survive arbitrary changes elsewhere in the model — the delta-efficiency
 this engine exists for.
+
+Caches are per-`EngineCache` instance: each `repro.api.Replica` owns
+one, ending the cross-replica aliasing of the old process-global LRU.
+The module-level cache functions (`set_cache_limit`, `cache_info`,
+`clear_cache`, …) remain for compatibility and operate on a shared
+default cache — prefer the per-replica methods in new code.
 
 >>> import jax.numpy as jnp
 >>> contribs = [{"w": jnp.ones((2, 2))}, {"w": jnp.zeros((2, 2))}]
@@ -64,36 +75,33 @@ from typing import (Any, Dict, List, NamedTuple, Optional, Sequence,
 import jax
 import jax.numpy as jnp
 
+from repro.api.spec import MergeSpec, coerce_spec
 from repro.core.hashing import pytree_digest, tensor_digest
 from repro.strategies import get_strategy
 from repro.strategies.base import Strategy
 
-_DOMAIN_LEAF = b"repro/engine/leaf-subroot/v1"
-_DOMAIN_MODEL = b"repro/engine/model-subroot/v1"
+_DOMAIN_LEAF = b"repro/engine/leaf-subroot/v2"
+_DOMAIN_MODEL = b"repro/engine/model-subroot/v2"
 _NO_BASE = b"\x00" * 32          # base=None marker (zeros_like base)
 
 
-# ---------------------------------------------------------------------------
-# cfg cache-key fragments (everything besides the contributions that shapes
-# the output)
-# ---------------------------------------------------------------------------
-
-
-def _cfg_fragment(k: str, v: Any) -> str:
-    """One cfg knob's key contribution. Plain scalars repr exactly;
-    anything array-like is content-hashed — numpy/JAX reprs truncate
-    large arrays with `...`, so two merges differing only in a large
-    array knob would otherwise alias to one cache entry."""
-    if v is None or isinstance(v, (bool, int, float, str, bytes)):
-        return f"{k}={v!r}"
-    try:
-        return f"{k}#{pytree_digest(v).hex()}"
-    except Exception:
-        return f"{k}={v!r}"
-
-
-def cfg_key(cfg: Dict[str, Any]) -> str:
-    return ";".join(_cfg_fragment(k, cfg[k]) for k in sorted(cfg))
+def _as_spec(spec: Optional[MergeSpec], strategy_name: Optional[str],
+             reduction: Optional[str], cfg: Dict[str, Any]) -> MergeSpec:
+    """Normalize the two calling conventions: an explicit MergeSpec, or
+    the legacy (strategy_name, reduction, **cfg) triple — the latter is
+    wrapped in a lenient spec (the kwargs were never validated here and
+    rejecting them now would break the shimmed entry points). A stray
+    reduction=/cfg argument NEXT TO a spec raises instead of being
+    silently ignored."""
+    if spec is None and strategy_name is None:
+        raise TypeError("either a MergeSpec or a strategy name is "
+                        "required")
+    if spec is not None and strategy_name is not None \
+            and strategy_name != spec.strategy:
+        raise TypeError(f"conflicting strategies: positional "
+                        f"{strategy_name!r} vs spec {spec.strategy!r}")
+    return coerce_spec(spec if spec is not None else strategy_name,
+                       cfg, reduction=reduction, lenient=True)
 
 
 # ---------------------------------------------------------------------------
@@ -180,30 +188,36 @@ class MergePlan:
     cfg: Tuple[Tuple[str, Any], ...]      # sorted (name, value) pairs
     treedef: Any
     tasks: Tuple[LeafTask, ...]
+    spec: Optional[MergeSpec] = None      # the spec this plan realizes
 
     def cfg_dict(self) -> Dict[str, Any]:
         return dict(self.cfg)
 
 
-def plan_merge(metas: Sequence[ContribMeta], strategy_name: str, *,
-               base: Any = None, seed: int = 0, reduction: str = "fold",
-               **cfg) -> MergePlan:
+def plan_merge(metas: Sequence[ContribMeta],
+               strategy_name: Optional[str] = None, *,
+               base: Any = None, seed: int = 0,
+               reduction: Optional[str] = None,
+               spec: Optional[MergeSpec] = None, **cfg) -> MergePlan:
     """Emit a per-leaf merge plan from contribution metadata (canonical
-    order). Payloads are not needed to plan — only their digests."""
+    order). Payloads are not needed to plan — only their digests. Takes
+    either a MergeSpec (`spec=`) or the legacy strategy-name + kwargs
+    form (wrapped in a lenient spec)."""
     if not metas:
         raise ValueError("plan_merge() requires at least one contribution")
-    strat = get_strategy(strategy_name)
+    spec = _as_spec(spec, strategy_name, reduction, cfg)
+    strat = get_strategy(spec.strategy)
     if strat.whole_model or strat.leaf_fn is None:
         raise ValueError(
-            f"strategy {strategy_name!r} is whole-model; use merge()")
+            f"strategy {spec.strategy!r} is whole-model; use merge()")
     first = metas[0]
     for m in metas[1:]:
         if m.treedef != first.treedef or m.shapes != first.shapes \
                 or m.dtypes != first.dtypes:
             raise ValueError("contributions disagree on tree structure")
     k = len(metas)
-    ckey = cfg_key(cfg).encode()
-    red = reduction.encode() if (strat.binary_only and k > 2) else b"-"
+    frag = spec.cache_fragment(
+        with_reduction=(strat.binary_only and k > 2))
     if base is None:
         base_frags: Sequence[bytes] = [_NO_BASE] * first.leaf_count
     else:
@@ -213,9 +227,7 @@ def plan_merge(metas: Sequence[ContribMeta], strategy_name: str, *,
     tasks: List[LeafTask] = []
     for i in range(first.leaf_count):
         h = hashlib.sha256(_DOMAIN_LEAF)
-        h.update(strat.name.encode())
-        h.update(red)
-        h.update(ckey)
+        h.update(frag)
         h.update(base_frags[i])
         h.update(k.to_bytes(4, "big"))
         for m in metas:
@@ -231,20 +243,22 @@ def plan_merge(metas: Sequence[ContribMeta], strategy_name: str, *,
         tasks.append(LeafTask(index=i, path=paths[i], sub_root=h.digest(),
                               shape=first.shapes[i], dtype=first.dtypes[i],
                               stacked_nbytes=k * nbytes))
-    return MergePlan(strategy=strategy_name, reduction=reduction, seed=seed,
-                     k=k, cfg=tuple(sorted(cfg.items())),
-                     treedef=first.treedef, tasks=tuple(tasks))
+    return MergePlan(strategy=spec.strategy, reduction=spec.reduction,
+                     seed=seed, k=k, cfg=spec.cfg,
+                     treedef=first.treedef, tasks=tuple(tasks), spec=spec)
 
 
-def plan_for(contribs: Sequence[Any], strategy_name: str, *,
+def plan_for(contribs: Sequence[Any],
+             strategy_name: Optional[str] = None, *,
              contrib_ids: Optional[Sequence[str]] = None,
-             base: Any = None, seed: int = 0, reduction: str = "fold",
-             **cfg) -> MergePlan:
+             base: Any = None, seed: int = 0,
+             reduction: Optional[str] = None,
+             spec: Optional[MergeSpec] = None, **cfg) -> MergePlan:
     """Convenience planner over resident payloads (ids memoize digests)."""
     ids: Sequence[Optional[str]] = contrib_ids or [None] * len(contribs)
     metas = [contrib_meta(c, eid=e) for c, e in zip(contribs, ids)]
     return plan_merge(metas, strategy_name, base=base, seed=seed,
-                      reduction=reduction, **cfg)
+                      reduction=reduction, spec=spec, **cfg)
 
 
 def _leaf_paths(treedef) -> List[str]:
@@ -262,20 +276,8 @@ def _leaf_paths(treedef) -> List[str]:
 # Byte-budgeted sub-root cache (per-leaf entries + whole-model entries)
 # ---------------------------------------------------------------------------
 
-# sub_root -> (value, nbytes). Values are merged leaf arrays (LeafTask
-# entries) or whole output pytrees (whole-model strategies). Eviction is
-# LRU under BOTH an entry count and a resident-byte budget: merge
-# outputs are model tensors, so counting entries alone under-controls
-# memory by orders of magnitude between a layernorm and an embedding.
-_CACHE: "OrderedDict[bytes, Tuple[Any, int]]" = OrderedDict()
-_CACHE_BYTES = 0
 _DEFAULT_ENTRY_LIMIT = 65536
 _DEFAULT_BYTE_LIMIT = 256 * 2 ** 20
-_ENTRY_LIMIT = _DEFAULT_ENTRY_LIMIT
-_BYTE_LIMIT = _DEFAULT_BYTE_LIMIT
-
-_STATS: Counter = Counter()
-_PEAK_STACKED = 0                 # executor high-water mark since reset
 
 
 class CacheInfo(NamedTuple):
@@ -287,117 +289,194 @@ class CacheInfo(NamedTuple):
     misses: int
 
 
+class EngineCache:
+    """One replica's merge-output cache + executor counters.
+
+    sub_root -> (value, nbytes). Values are merged leaf arrays
+    (LeafTask entries) or whole output pytrees (whole-model
+    strategies). Eviction is LRU under BOTH an entry count and a
+    resident-byte budget: merge outputs are model tensors, so counting
+    entries alone under-controls memory by orders of magnitude between
+    a layernorm and an embedding.
+
+    Instances are independent — each `repro.api.Replica` owns one, so
+    two replicas in a process no longer alias each other's LRU order,
+    byte budget, or hit/miss counters. The module-level functions below
+    keep operating on one shared `default_cache()` for compatibility.
+    """
+
+    __slots__ = ("_data", "_bytes", "entry_limit", "byte_limit", "stats",
+                 "peak_stacked")
+
+    def __init__(self, entries: int = _DEFAULT_ENTRY_LIMIT, *,
+                 bytes: int = _DEFAULT_BYTE_LIMIT):  # noqa: A002
+        self._data: "OrderedDict[bytes, Tuple[Any, int]]" = OrderedDict()
+        self._bytes = 0
+        self.entry_limit = entries
+        self.byte_limit = bytes
+        self.stats: Counter = Counter()
+        self.peak_stacked = 0         # executor high-water mark
+
+    # -------------------------------------------------------------- limits
+
+    def set_limit(self, entries: Optional[int] = None, *,
+                  bytes: Optional[int] = None) -> None:  # noqa: A002
+        """Bound the cache; evicts LRU-first immediately. `entries`
+        caps cached tensors; `bytes` caps resident payload bytes
+        (size-aware eviction). Omitted arguments stay unchanged."""
+        if entries is not None:
+            if entries < 1:
+                raise ValueError("cache entry limit must be >= 1")
+            self.entry_limit = entries
+        if bytes is not None:
+            if bytes < 0:
+                raise ValueError("cache byte limit must be >= 0")
+            self.byte_limit = bytes
+        self._evict()
+
+    def info(self) -> CacheInfo:
+        return CacheInfo(len(self._data), self._bytes, self.entry_limit,
+                         self.byte_limit, self.stats["hits"],
+                         self.stats["misses"])
+
+    def clear(self) -> None:
+        self._data.clear()
+        self._bytes = 0
+
+    # ------------------------------------------------------------- entries
+
+    def _evict(self) -> None:
+        while self._data and (len(self._data) > self.entry_limit
+                              or self._bytes > self.byte_limit):
+            _, (_, nbytes) = self._data.popitem(last=False)
+            self._bytes -= nbytes
+
+    def get(self, key: bytes) -> Optional[Any]:
+        if key in self._data:
+            self._data.move_to_end(key)
+            return self._data[key][0]
+        return None
+
+    def put(self, key: bytes, value: Any, nbytes: int) -> None:
+        if key in self._data:
+            self._bytes -= self._data[key][1]
+        self._data[key] = (value, nbytes)
+        self._data.move_to_end(key)
+        self._bytes += nbytes
+        self._evict()
+
+    def __contains__(self, key: bytes) -> bool:
+        return key in self._data
+
+    def lookup(self, key: bytes) -> Optional[Any]:
+        """Fetch-free probe: the cached value (counting a hit) or None
+        (counting nothing — the caller goes on to compute through a
+        path that records the miss itself)."""
+        val = self.get(key)
+        if val is not None:
+            self.stats["hits"] += 1
+        return val
+
+    def split(self, plan: "MergePlan") -> Tuple[List["LeafTask"],
+                                                List["LeafTask"]]:
+        """(hits, misses) — membership only, no recency/counters."""
+        hits = [t for t in plan.tasks if t.sub_root in self._data]
+        misses = [t for t in plan.tasks if t.sub_root not in self._data]
+        return hits, misses
+
+    # ------------------------------------------------------------ counters
+
+    def exec_stats(self) -> Dict[str, int]:
+        """Executor counters since the last reset: `leaf_tasks`
+        executed, `dispatches` issued, `batched_leaves` fused into
+        multi-leaf dispatches, cache `hits`/`misses`, and
+        `peak_stacked_bytes` — the largest set of stacked contribution
+        slices ever live at once."""
+        out = dict(self.stats)
+        out["peak_stacked_bytes"] = self.peak_stacked
+        return out
+
+    def reset_exec_stats(self) -> None:
+        self.stats.clear()
+        self.peak_stacked = 0
+
+    def note_stacked(self, nbytes: int) -> None:
+        self.peak_stacked = max(self.peak_stacked, nbytes)
+
+
+_DEFAULT_CACHE = EngineCache()
+
+
+def default_cache() -> EngineCache:
+    """The process-wide cache the module-level helpers (and every call
+    that does not pass `cache=`) operate on."""
+    return _DEFAULT_CACHE
+
+
+def _cache_or_default(cache: Optional[EngineCache]) -> EngineCache:
+    return cache if cache is not None else _DEFAULT_CACHE
+
+
+# Module-level cache helpers. DEPRECATION NOTE: these act on the shared
+# default cache only and predate per-replica isolation — new code
+# should hold an EngineCache (usually via repro.api.Replica, whose
+# set_cache_limit/cache_info methods scope to that replica) and pass it
+# as `cache=`. Kept working, without warnings, because they remain the
+# right knobs for single-replica processes and the test/bench harness.
+
+
 def set_cache_limit(entries: Optional[int] = None, *,
                     bytes: Optional[int] = None) -> None:  # noqa: A002
-    """Bound the merge-output cache; evicts LRU-first immediately.
-
-    `entries` caps the number of cached tensors; `bytes` caps resident
-    payload bytes (size-aware eviction — the ROADMAP byte-budget item).
-    Omitted arguments are left unchanged.
-    """
-    global _ENTRY_LIMIT, _BYTE_LIMIT
-    if entries is not None:
-        if entries < 1:
-            raise ValueError("cache entry limit must be >= 1")
-        _ENTRY_LIMIT = entries
-    if bytes is not None:
-        if bytes < 0:
-            raise ValueError("cache byte limit must be >= 0")
-        _BYTE_LIMIT = bytes
-    _evict()
+    """Bound the DEFAULT merge-output cache (see EngineCache.set_limit;
+    per-replica caches are bounded via Replica.set_cache_limit)."""
+    _DEFAULT_CACHE.set_limit(entries, bytes=bytes)
 
 
 def cache_info() -> CacheInfo:
-    """Current cache occupancy/limits and lifetime hit/miss counters.
+    """Occupancy/limits/counters of the DEFAULT cache.
 
     >>> _ = set_cache_limit(entries=8, bytes=1 << 20)
     >>> cache_info().entry_limit, cache_info().byte_limit
     (8, 1048576)
     >>> reset_cache_limits()
     """
-    return CacheInfo(len(_CACHE), _CACHE_BYTES, _ENTRY_LIMIT, _BYTE_LIMIT,
-                     _STATS["hits"], _STATS["misses"])
+    return _DEFAULT_CACHE.info()
 
 
 def reset_cache_limits() -> None:
-    """Restore default entry/byte limits (tests, doctests)."""
-    set_cache_limit(_DEFAULT_ENTRY_LIMIT, bytes=_DEFAULT_BYTE_LIMIT)
+    """Restore the default cache's entry/byte limits (tests, doctests)."""
+    _DEFAULT_CACHE.set_limit(_DEFAULT_ENTRY_LIMIT,
+                             bytes=_DEFAULT_BYTE_LIMIT)
 
 
 def clear_cache() -> None:
-    """Drop all cached merge outputs AND planner digest memos."""
-    global _CACHE_BYTES
-    _CACHE.clear()
-    _CACHE_BYTES = 0
+    """Drop the default cache's merge outputs AND the (process-wide)
+    planner digest memos."""
+    _DEFAULT_CACHE.clear()
     _META_MEMO.clear()
 
 
-def _evict() -> None:
-    global _CACHE_BYTES
-    while _CACHE and (len(_CACHE) > _ENTRY_LIMIT
-                      or _CACHE_BYTES > _BYTE_LIMIT):
-        _, (_, nbytes) = _CACHE.popitem(last=False)
-        _CACHE_BYTES -= nbytes
+def cached(key: bytes, cache: Optional[EngineCache] = None) -> bool:
+    return key in _cache_or_default(cache)
 
 
-def _cache_get(key: bytes) -> Optional[Any]:
-    if key in _CACHE:
-        _CACHE.move_to_end(key)
-        return _CACHE[key][0]
-    return None
+def cache_lookup(key: bytes,
+                 cache: Optional[EngineCache] = None) -> Optional[Any]:
+    return _cache_or_default(cache).lookup(key)
 
 
-def _cache_put(key: bytes, value: Any, nbytes: int) -> None:
-    global _CACHE_BYTES
-    if key in _CACHE:
-        _CACHE_BYTES -= _CACHE[key][1]
-    _CACHE[key] = (value, nbytes)
-    _CACHE.move_to_end(key)
-    _CACHE_BYTES += nbytes
-    _evict()
+def plan_cached_split(plan: "MergePlan",
+                      cache: Optional[EngineCache] = None
+                      ) -> Tuple[List["LeafTask"], List["LeafTask"]]:
+    return _cache_or_default(cache).split(plan)
 
 
-def cached(key: bytes) -> bool:
-    return key in _CACHE
+def exec_stats(cache: Optional[EngineCache] = None) -> Dict[str, int]:
+    return _cache_or_default(cache).exec_stats()
 
 
-def cache_lookup(key: bytes) -> Optional[Any]:
-    """Fetch-free probe: the cached value (counting a hit) or None
-    (counting nothing — the caller goes on to compute through a path
-    that records the miss itself)."""
-    val = _cache_get(key)
-    if val is not None:
-        _STATS["hits"] += 1
-    return val
-
-
-def plan_cached_split(plan: MergePlan) -> Tuple[List[LeafTask],
-                                                List[LeafTask]]:
-    """(hits, misses) — membership only, no recency/counter effects."""
-    hits = [t for t in plan.tasks if t.sub_root in _CACHE]
-    misses = [t for t in plan.tasks if t.sub_root not in _CACHE]
-    return hits, misses
-
-
-def exec_stats() -> Dict[str, int]:
-    """Executor counters since the last reset: `leaf_tasks` executed,
-    `dispatches` issued, `batched_leaves` fused into multi-leaf
-    dispatches, cache `hits`/`misses`, and `peak_stacked_bytes` — the
-    largest set of stacked contribution slices ever live at once."""
-    out = dict(_STATS)
-    out["peak_stacked_bytes"] = _PEAK_STACKED
-    return out
-
-
-def reset_exec_stats() -> None:
-    global _PEAK_STACKED
-    _STATS.clear()
-    _PEAK_STACKED = 0
-
-
-def _note_stacked(nbytes: int) -> None:
-    global _PEAK_STACKED
-    _PEAK_STACKED = max(_PEAK_STACKED, nbytes)
+def reset_exec_stats(cache: Optional[EngineCache] = None) -> None:
+    _cache_or_default(cache).reset_exec_stats()
 
 
 # ---------------------------------------------------------------------------
@@ -408,7 +487,8 @@ def _note_stacked(nbytes: int) -> None:
 def execute_plan(plan: MergePlan, contribs: Optional[Sequence[Any]], *,
                  base: Any = None, use_cache: bool = True,
                  max_batch_bytes: Optional[int] = None,
-                 pallas: bool = False) -> Any:
+                 pallas: bool = False,
+                 cache: Optional[EngineCache] = None) -> Any:
     """Run a merge plan and return the merged pytree.
 
     `contribs` is the canonical-order payload list; it may be None when
@@ -428,20 +508,20 @@ def execute_plan(plan: MergePlan, contribs: Optional[Sequence[Any]], *,
     byte-exact path, and an approximate entry would silently poison a
     later exact resolve.
     """
+    cache = _cache_or_default(cache)
     strat = get_strategy(plan.strategy)
-    cfg = plan.cfg_dict()
     outputs: List[Optional[Any]] = [None] * len(plan.tasks)
 
     misses: List[LeafTask] = []
     for t in plan.tasks:
-        hit = _cache_get(t.sub_root) if use_cache else None
+        hit = cache.get(t.sub_root) if use_cache else None
         if hit is not None:
             outputs[t.index] = hit
-            _STATS["hits"] += 1
+            cache.stats["hits"] += 1
         else:
             misses.append(t)
             if use_cache:
-                _STATS["misses"] += 1
+                cache.stats["misses"] += 1
     if misses:
         if contribs is None:
             raise KeyError(
@@ -459,17 +539,18 @@ def execute_plan(plan: MergePlan, contribs: Optional[Sequence[Any]], *,
             approximate = False
             if len(group) == 1:
                 out = [_execute_leaf(strat, plan, group[0], leaves,
-                                     base_leaves)]
+                                     base_leaves, cache)]
             else:
                 out, approximate = _execute_batch(
-                    strat, plan, group, leaves, base_leaves, pallas=pallas)
-                _STATS["batched_leaves"] += len(group)
-            _STATS["dispatches"] += 1
-            _STATS["leaf_tasks"] += len(group)
+                    strat, plan, group, leaves, base_leaves, cache,
+                    pallas=pallas)
+                cache.stats["batched_leaves"] += len(group)
+            cache.stats["dispatches"] += 1
+            cache.stats["leaf_tasks"] += len(group)
             for t, o in zip(group, out):
                 outputs[t.index] = o
                 if use_cache and not approximate:
-                    _cache_put(t.sub_root, o, int(o.nbytes))
+                    cache.put(t.sub_root, o, int(o.nbytes))
     return jax.tree_util.tree_unflatten(plan.treedef, outputs)
 
 
@@ -511,14 +592,14 @@ def _base_leaf(base_leaves, idx: int, like) -> Any:
 
 
 def _execute_leaf(strat: Strategy, plan: MergePlan, task: LeafTask,
-                  leaves, base_leaves) -> Any:
+                  leaves, base_leaves, cache: EngineCache) -> Any:
     """One leaf, exactly the legacy arithmetic: stack the k slices and
     apply the strategy's leaf function (folding per-leaf for binary-only
     strategies at k > 2, with the legacy per-step seeds)."""
     i = task.index
     slices = [l[i] for l in leaves]
     cfg = plan.cfg_dict()
-    _note_stacked(task.stacked_nbytes)
+    cache.note_stacked(task.stacked_nbytes)
     if strat.binary_only and plan.k > 2:
         if plan.reduction == "tree":
             return _leaf_tree_fold(strat, slices, base_leaves, i,
@@ -557,7 +638,7 @@ def _leaf_tree_fold(strat, slices, base_leaves, i, seed, cfg):
 
 
 def _execute_batch(strat: Strategy, plan: MergePlan, group: List[LeafTask],
-                   leaves, base_leaves, *,
+                   leaves, base_leaves, cache: EngineCache, *,
                    pallas: bool) -> Tuple[List[Any], bool]:
     """Fused dispatch over same-dtype elementwise leaves: flatten each
     leaf's k slices, concatenate along the element axis, apply the leaf
@@ -575,7 +656,7 @@ def _execute_batch(strat: Strategy, plan: MergePlan, group: List[LeafTask],
         axis=1)
     # the per-leaf stacks and the concatenated copy are both live while
     # concatenate runs: account 2x, not just the output
-    _note_stacked(2 * int(stacked.nbytes))
+    cache.note_stacked(2 * int(stacked.nbytes))
     if base_leaves is None:
         b = jnp.zeros(stacked.shape[1:], stacked.dtype)
     else:
@@ -584,7 +665,7 @@ def _execute_batch(strat: Strategy, plan: MergePlan, group: List[LeafTask],
     approximate = False
     merged = None
     if pallas:
-        merged = _nary_pallas_batch(strat, stacked, b, k, cfg)
+        merged = _nary_pallas_batch(strat, stacked, b, k, cfg, cache)
         approximate = merged is not None
     if merged is None:
         merged = strat.apply_leaf(stacked, b, leaf_index=group[0].index,
@@ -619,7 +700,7 @@ def _nary_weights(name: str, k: int, cfg: Dict[str, Any]
 
 
 def _nary_pallas_batch(strat: Strategy, stacked, b, k: int,
-                       cfg: Dict[str, Any]):
+                       cfg: Dict[str, Any], cache: EngineCache):
     """Fused Pallas nary_accum dispatch for the linear family; returns
     None when the strategy has no nary weight form (caller falls back to
     the byte-exact jnp path)."""
@@ -630,7 +711,7 @@ def _nary_pallas_batch(strat: Strategy, stacked, b, k: int,
     from repro.kernels.ops import nary_flat_merge
     base_flat = b if uses_base else jnp.zeros_like(b)
     out = nary_flat_merge(stacked, base_flat, weights)
-    _STATS["pallas_dispatches"] += 1
+    cache.stats["pallas_dispatches"] += 1
     return out.astype(stacked.dtype)
 
 
@@ -639,15 +720,17 @@ def _nary_pallas_batch(strat: Strategy, stacked, b, k: int,
 # ---------------------------------------------------------------------------
 
 
-def model_key(strategy_name: str, contrib_digests: Sequence[bytes], *,
-              base: Any = None, seed: int = 0, reduction: str = "fold",
-              **cfg) -> bytes:
-    strat = get_strategy(strategy_name)
+def model_key(strategy_name: Optional[str],
+              contrib_digests: Sequence[bytes], *,
+              base: Any = None, seed: int = 0,
+              reduction: Optional[str] = None,
+              spec: Optional[MergeSpec] = None, **cfg) -> bytes:
+    spec = _as_spec(spec, strategy_name, reduction, cfg)
+    strat = get_strategy(spec.strategy)
     h = hashlib.sha256(_DOMAIN_MODEL)
-    h.update(strat.name.encode())
     k = len(contrib_digests)
-    h.update(reduction.encode() if (strat.binary_only and k > 2) else b"-")
-    h.update(cfg_key(cfg).encode())
+    h.update(spec.cache_fragment(
+        with_reduction=(strat.binary_only and k > 2)))
     h.update(pytree_digest(base) if base is not None else _NO_BASE)
     h.update(k.to_bytes(4, "big"))
     for d in contrib_digests:
@@ -657,46 +740,53 @@ def model_key(strategy_name: str, contrib_digests: Sequence[bytes], *,
     return h.digest()
 
 
-def merge(contribs: Sequence[Any], strategy_name: str, *,
+def merge(contribs: Sequence[Any], strategy_name: Optional[str] = None, *,
           contrib_ids: Optional[Sequence[str]] = None, base: Any = None,
-          seed: int = 0, reduction: str = "fold", use_cache: bool = True,
+          seed: int = 0, reduction: Optional[str] = None,
+          use_cache: bool = True,
           max_batch_bytes: Optional[int] = None, pallas: bool = False,
-          **cfg) -> Any:
+          spec: Optional[MergeSpec] = None,
+          cache: Optional[EngineCache] = None, **cfg) -> Any:
     """Merge an ORDERED contribution list through the engine.
 
-    Byte-identical to `apply_strategy` on the same inputs (verified for
+    Byte-identical to the whole-tree reference path
+    (`core.resolve.reference_apply`) on the same inputs (verified for
     all 26 registry strategies); `whole_model` strategies route through
-    the legacy whole-tree path with a single whole-model cache entry.
+    that path with a single whole-model cache entry. Takes a MergeSpec
+    (`spec=`) or the legacy strategy-name + kwargs form.
     """
     if not contribs:
         raise ValueError("merge() requires at least one contribution")
-    strat = get_strategy(strategy_name)
+    spec = _as_spec(spec, strategy_name, reduction, cfg)
+    cache = _cache_or_default(cache)
+    strat = get_strategy(spec.strategy)
     if strat.whole_model or strat.leaf_fn is None:
         if contrib_ids is not None:
             digests = [bytes.fromhex(e) if _is_hex(e) else e.encode()
                        for e in contrib_ids]
         else:
             digests = [pytree_digest(c) for c in contribs]
-        key = model_key(strategy_name, digests, base=base, seed=seed,
-                        reduction=reduction, **cfg)
+        key = model_key(None, digests, base=base, seed=seed, spec=spec)
         if use_cache:
-            hit = _cache_get(key)
+            hit = cache.get(key)
             if hit is not None:
-                _STATS["hits"] += 1
+                cache.stats["hits"] += 1
                 return hit
-            _STATS["misses"] += 1
-        from repro.core.resolve import apply_strategy
-        out = apply_strategy(strategy_name, list(contribs), base=base,
-                             seed=seed, reduction=reduction, **cfg)
+            cache.stats["misses"] += 1
+        from repro.core.resolve import reference_apply
+        out = reference_apply(spec.strategy, list(contribs), base=base,
+                              seed=seed, reduction=spec.reduction,
+                              **spec.cfg_dict())
         if use_cache:
             nbytes = sum(int(l.nbytes)
                          for l in jax.tree_util.tree_leaves(out))
-            _cache_put(key, out, nbytes)
+            cache.put(key, out, nbytes)
         return out
-    plan = plan_for(contribs, strategy_name, contrib_ids=contrib_ids,
-                    base=base, seed=seed, reduction=reduction, **cfg)
+    plan = plan_for(contribs, contrib_ids=contrib_ids,
+                    base=base, seed=seed, spec=spec)
     return execute_plan(plan, contribs, base=base, use_cache=use_cache,
-                        max_batch_bytes=max_batch_bytes, pallas=pallas)
+                        max_batch_bytes=max_batch_bytes, pallas=pallas,
+                        cache=cache)
 
 
 def _is_hex(s: str) -> bool:

@@ -27,8 +27,9 @@ import random
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
+from repro.api.spec import MergeSpec, coerce_spec
 from repro.core.delta import Delta, delta_since, apply_delta
-from repro.core.resolve import resolve
+from repro.core.resolve import resolve, resolve_spec
 from repro.core.state import CRDTMergeState
 from repro.core.version_vector import VersionVector
 
@@ -70,8 +71,17 @@ class GossipNode:
     def root(self) -> bytes:
         return self.state.merkle_root()
 
-    def resolve(self, strategy: str, base=None, **cfg):
-        return resolve(self.state, strategy, base=base, **cfg)
+    def resolve(self, spec, base=None, *, trust=None, **cfg):
+        """Resolve this node's state. Takes a MergeSpec (with `trust=`
+        supplying the TrustState a `trust_threshold` spec gates on);
+        the string form delegates to the deprecated core.resolve shim
+        (and warns like it)."""
+        if isinstance(spec, MergeSpec):
+            use_cache = cfg.pop("use_cache", True)
+            return resolve_spec(self.state, coerce_spec(spec, cfg),
+                                base=base, trust=trust,
+                                use_cache=use_cache)
+        return resolve(self.state, spec, base=base, trust=trust, **cfg)
 
 
 class GossipNetwork:
@@ -230,8 +240,16 @@ class GossipNetwork:
                 return False
         return True
 
-    def resolve_all(self, strategy: str, base=None, **cfg):
-        return [n.resolve(strategy, base=base, **cfg) for n in self.nodes]
+    def resolve_all(self, spec, base=None, *, use_cache: bool = True,
+                    trust=None, **cfg):
+        """Every node independently resolves the same spec (convergence
+        harness). `spec` is a MergeSpec or a strategy name + cfg (the
+        name form builds a validated spec — no deprecation detour);
+        `trust=` supplies the converged TrustState for gated specs."""
+        spec = coerce_spec(spec, cfg,
+                           reduction=cfg.pop("reduction", None))
+        return [resolve_spec(n.state, spec, base=base, trust=trust,
+                             use_cache=use_cache) for n in self.nodes]
 
     # ------------------------------------------------- tombstone GC (L3)
 

@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.resolve import apply_strategy, resolve, seed_from_root
+from repro.api.spec import MergeSpec
+from repro.core.resolve import reference_apply, resolve_spec, seed_from_root
 from repro.core.state import CRDTMergeState
 from repro.strategies import get_strategy, list_strategies
 
@@ -73,7 +74,7 @@ def audit_raw(strategy_name: str, tensors: List[Any], base: Any = None,
     seeds = _SeedCounter()
 
     def f2(x, y):
-        return apply_strategy(strategy_name, [x, y], base=base,
+        return reference_apply(strategy_name, [x, y], base=base,
                               seed=seeds())
 
     comm = assoc = idem = True
@@ -117,7 +118,8 @@ def _single_states(tensors, n=3) -> List[CRDTMergeState]:
 def audit_wrapped(strategy_name: str, tensors: List[Any],
                   base: Any = None) -> WrappedResult:
     s1, s2, s3 = _single_states(tensors, 3)
-    r = lambda st: resolve(st, strategy_name, base=base, use_cache=False)
+    spec = MergeSpec(strategy_name)
+    r = lambda st: resolve_spec(st, spec, base=base, use_cache=False)
 
     comm = _bitwise_equal(r(s1.merge(s2)), r(s2.merge(s1)))
     assoc = _bitwise_equal(r(s1.merge(s2).merge(s3)),

@@ -9,23 +9,31 @@ canonical order (paper Remark 7) or, optionally, a balanced binary tree
 (equalised influence, still deterministic — implemented as the paper's
 suggested extension).
 
-Execution is delegated to the planner/executor engine (`core/engine`):
-the planner keys every model tensor by a per-leaf sub-root (the hash of
-that leaf's ordered contribution digests + strategy + cfg), the executor
-merges leaf-by-leaf with bounded live memory, and a byte-budgeted
-per-leaf cache makes an unchanged tensor a cache hit even when the
-whole-model Merkle root changed. `apply_strategy` below remains the
-legacy whole-tree reference path; engine output is verified
-byte-identical to it for all 26 strategies (tests/test_engine.py).
+The canonical entry point is `resolve_spec(state, spec)` where `spec`
+is a `repro.api.MergeSpec` — a frozen, validated, canonically-hashable
+description of *what* to resolve (strategy + typed cfg + base ref +
+reduction + trust threshold + hierarchical grouping). Every resolve
+path — plain, trust-gated, hierarchical — funnels through one engine
+pipeline (`_merge_ids`): planner keyed by per-tensor sub-roots,
+leaf-at-a-time execution with bounded live memory, byte-budgeted cache,
+leaf-granular fetch. `repro.api.Replica` is the ergonomic facade.
+
+Legacy shims (all emit DeprecationWarning, all byte-identical to the
+spec path they wrap):
+  * `resolve(state, "ties", trim=0.3)`   -> resolve(state, MergeSpec(...))
+  * `apply_strategy(name, contribs)`     -> reference_apply(...)
+  * `hierarchical_resolve(states, name)` -> resolve over a grouped spec
+  * `repro.core.trust.gated_resolve`     -> spec with trust_threshold
 
 Beyond-paper L3 mitigations implemented here:
-  * per-leaf resolve caching keyed by sub-root (byte-budgeted LRU —
-    `set_cache_limit(bytes=...)`);
+  * per-leaf resolve caching keyed by sub-root (byte-budgeted LRU,
+    per-replica via `EngineCache` — `Replica.set_cache_limit`);
   * incremental resolve for strategies with algebraic structure
     (weight averaging: O(p) per new contribution);
-  * hierarchical resolve (sub-group resolve + second pass);
+  * hierarchical resolve (sub-group resolve + second pass), expressed
+    as `MergeSpec(group_size=...)` so it shares the engine pipeline;
   * fetch-on-resolve: under a sharded blob store (repro.net.store) a
-    replica's store holds only the payloads placed on it, so resolve()
+    replica's store holds only the payloads placed on it, so resolve
     accepts a `fetch` hook that pulls the missing visible payloads over
     the network on demand — determinism is unaffected because payloads
     are content-addressed (equal eid => byte-equal pytree, paper
@@ -36,16 +44,22 @@ Beyond-paper L3 mitigations implemented here:
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.api.spec import MergeSpec, coerce_spec
 from repro.core import engine
-from repro.core.engine import (CacheInfo, cache_info, clear_cache,  # noqa: F401
+from repro.core.engine import (CacheInfo, EngineCache,  # noqa: F401
+                               cache_info, clear_cache, default_cache,
                                reset_cache_limits, set_cache_limit)
+from repro.core.merkle import merkle_root
 from repro.core.state import CRDTMergeState
 from repro.strategies import get_strategy
+
+FetchHook = Callable[[Tuple[str, ...]], Dict[str, Any]]
 
 
 def seed_from_root(root: bytes) -> int:
@@ -63,9 +77,13 @@ def canonical_order(state: CRDTMergeState) -> List[str]:
     return sorted(state.visible())
 
 
+def _warn_shim(old: str, new: str) -> None:
+    warnings.warn(f"{old} is deprecated; use {new}",
+                  DeprecationWarning, stacklevel=3)
+
+
 def _fetch_into(store: Dict[str, Any], absent: List[str],
-                fetch: Optional[Callable[[Tuple[str, ...]],
-                                         Dict[str, Any]]]) -> Dict[str, Any]:
+                fetch: Optional[FetchHook]) -> Dict[str, Any]:
     """Pull `absent` payloads through the fetch hook into a copied store.
     Raises KeyError without a hook: silently merging a subset would be a
     wrong answer with no signal."""
@@ -80,48 +98,40 @@ def _fetch_into(store: Dict[str, Any], absent: List[str],
     return store
 
 
-def resolve(state: CRDTMergeState, strategy_name: str,
-            base: Any = None, *, reduction: str = "fold",
-            use_cache: bool = True,
-            fetch: Optional[Callable[[Tuple[str, ...]],
-                                     Dict[str, Any]]] = None,
-            **cfg) -> Any:
-    """Compute the merged model for the converged state.
+# ---------------------------------------------------------------------------
+# The one engine pipeline every resolve path funnels through
+# ---------------------------------------------------------------------------
 
-    `fetch` is the sharded-store hook: called with the visible eids
-    whose payloads are actually needed and locally absent, it must
-    return them (typically by pulling them over the network — repro.net
-    installs a hook that runs multi-source chunk fetch against the
-    placement's holders). Payloads are needed only for leaf tasks that
-    miss the per-leaf cache: a warm re-resolve on a replica that has
-    shed its blobs fetches nothing. Without a hook, a needed-but-missing
-    payload raises KeyError.
-    """
-    ids = canonical_order(state)
-    if not ids:
-        raise ValueError("resolve() requires a non-empty visible set")
-    seed = seed_from_root(state.merkle_root())
-    strat = get_strategy(strategy_name)
-    store = state.store
+
+def _merge_ids(store: Dict[str, Any], ids: List[str], spec: MergeSpec,
+               seed: int, *, base: Any, fetch: Optional[FetchHook],
+               cache: Optional[EngineCache], use_cache: bool
+               ) -> Tuple[Any, Dict[str, Any]]:
+    """Merge the ordered id list through the planner/executor engine
+    (whole-model strategies route through the legacy whole-tree path
+    with a single cache entry). Returns (merged, store) — the store may
+    have grown by fetched payloads, which grouped resolves reuse."""
+    strat = get_strategy(spec.strategy)
 
     if strat.whole_model or strat.leaf_fn is None:
-        # legacy whole-tree route. The whole-model cache key is
-        # derivable from the eids alone, so probe it BEFORE fetching:
-        # a warm re-resolve on a blob-shedding replica must not re-ship
-        # k full models for a result it already has.
+        # whole-tree route. The whole-model cache key is derivable from
+        # the eids alone, so probe it BEFORE fetching: a warm re-resolve
+        # on a blob-shedding replica must not re-ship k full models for
+        # a result it already has.
         if use_cache:
             key = engine.model_key(
-                strategy_name, [bytes.fromhex(i) for i in ids],
-                base=base, seed=seed, reduction=reduction, **cfg)
-            hit = engine.cache_lookup(key)
+                None, [bytes.fromhex(i) for i in ids],
+                base=base, seed=seed, spec=spec)
+            hit = engine.cache_lookup(key, cache)
             if hit is not None:
-                return hit
+                return hit, store
         absent = [i for i in ids if i not in store]
         if absent:
             store = _fetch_into(store, absent, fetch)
-        return engine.merge([store[i] for i in ids], strategy_name,
-                            contrib_ids=tuple(ids), base=base, seed=seed,
-                            reduction=reduction, use_cache=use_cache, **cfg)
+        out = engine.merge([store[i] for i in ids], contrib_ids=tuple(ids),
+                           base=base, seed=seed, use_cache=use_cache,
+                           spec=spec, cache=cache)
+        return out, store
 
     # engine route: plan from resident payloads + memoized digests
     metas = {}
@@ -147,28 +157,154 @@ def resolve(state: CRDTMergeState, strategy_name: str,
         store = _fetch_into(store, need, fetch)
         for i in unknown:
             metas[i] = engine.contrib_meta(store[i], eid=i)
-    plan = engine.plan_merge([metas[i] for i in ids], strategy_name,
-                             base=base, seed=seed, reduction=reduction,
-                             **cfg)
+    plan = engine.plan_merge([metas[i] for i in ids], base=base,
+                             seed=seed, spec=spec)
     absent = [i for i in ids if i not in store]
     if absent:
-        _, misses = engine.plan_cached_split(plan)
+        _, misses = engine.plan_cached_split(plan, cache)
         if misses or not use_cache:
             store = _fetch_into(store, absent, fetch)
         else:
             # leaf-granular: every task is cached — no payloads needed
-            return engine.execute_plan(plan, None, base=base)
-    return engine.execute_plan(plan, [store[i] for i in ids], base=base,
-                               use_cache=use_cache)
+            return engine.execute_plan(plan, None, base=base,
+                                       cache=cache), store
+    out = engine.execute_plan(plan, [store[i] for i in ids], base=base,
+                              use_cache=use_cache, cache=cache)
+    return out, store
 
 
-def apply_strategy(strategy_name: str, contribs: List[Any], *, base=None,
-                   seed: int = 0, reduction: str = "fold", **cfg) -> Any:
+def _grouped_resolve(store: Dict[str, Any], ids: List[str],
+                     spec: MergeSpec, seed: int, *, base: Any,
+                     fetch: Optional[FetchHook],
+                     cache: Optional[EngineCache], use_cache: bool) -> Any:
+    """Two-level resolve (paper §7.2 L3 mitigation 2): sub-groups of
+    `spec.group_size` over the canonical order resolve first; a second
+    pass merges the sub-group outputs with seed+1. Both passes run
+    through the engine, so group outputs cache by sub-root and missing
+    payloads fetch leaf-granularly per group."""
+    groups = [ids[i:i + spec.group_size]
+              for i in range(0, len(ids), spec.group_size)]
+    firsts = []
+    for g in groups:
+        out, store = _merge_ids(store, g, spec, seed, base=base,
+                                fetch=fetch, cache=cache,
+                                use_cache=use_cache)
+        firsts.append(out)
+    return engine.merge(firsts, base=base, seed=seed + 1,
+                        use_cache=use_cache, spec=spec, cache=cache)
+
+
+def resolve_spec(state: CRDTMergeState, spec: MergeSpec, *,
+                 base: Any = None, trust: Any = None,
+                 fetch: Optional[FetchHook] = None,
+                 cache: Optional[EngineCache] = None,
+                 use_cache: bool = True,
+                 verify_base: bool = True) -> Any:
+    """Compute the merged model the spec describes, over the state's
+    converged visible set.
+
+    `trust` is a `repro.core.trust.TrustState`; when the spec carries a
+    `trust_threshold`, the visible set is deterministically gated at
+    the Layer-2 boundary (evidence is a CRDT, so honest replicas gate
+    identically) and the strategy seed derives from the Merkle root of
+    the GATED id set — exactly the legacy `gated_resolve` seeding.
+
+    `fetch` is the sharded-store hook: called with the visible eids
+    whose payloads are actually needed and locally absent, it must
+    return them (typically by pulling them over the network — repro.net
+    installs a hook that runs multi-source chunk fetch against the
+    placement's holders). Payloads are needed only for leaf tasks that
+    miss the per-leaf cache: a warm re-resolve on a replica that has
+    shed its blobs fetches nothing. Without a hook, a needed-but-missing
+    payload raises KeyError.
+
+    `cache` scopes the per-leaf/whole-model cache (None = the process
+    default; `repro.api.Replica` passes its own).
+    """
+    if not isinstance(spec, MergeSpec):
+        raise TypeError(f"resolve_spec() requires a MergeSpec, got "
+                        f"{type(spec).__name__}")
+    if spec.base_ref is not None:
+        if base is None:
+            raise KeyError(
+                f"spec pins base_ref {spec.base_ref[:16]}… but no base "
+                "payload was supplied; pass base= (or resolve through a "
+                "Replica that registered it)")
+        if verify_base:
+            # the ref pins the base EXACTLY — two replicas resolving
+            # the same gossiped spec must use byte-equal bases or the
+            # determinism story silently breaks. Callers whose base
+            # provably came from a digest-keyed registry (Replica's
+            # base store) pass verify_base=False to skip the
+            # full-model hash.
+            from repro.api.spec import SpecError
+            from repro.core.hashing import pytree_digest
+            got = pytree_digest(base).hex()
+            if got != spec.base_ref:
+                raise SpecError(
+                    f"base payload digest {got[:16]}… does not match "
+                    f"the spec's base_ref {spec.base_ref[:16]}…")
+    if spec.trust_threshold is not None:
+        from repro.core.trust import TrustState, gated_visible
+        t = trust if trust is not None else TrustState()
+        ids = sorted(gated_visible(state, t, spec.trust_threshold))
+        if not ids:
+            raise ValueError("all contributions gated out")
+        root = merkle_root([bytes.fromhex(i) for i in ids])
+    else:
+        ids = canonical_order(state)
+        if not ids:
+            raise ValueError("resolve() requires a non-empty visible set")
+        root = state.merkle_root()
+    seed = seed_from_root(root)
+    if spec.group_size is not None:
+        return _grouped_resolve(state.store, ids, spec, seed, base=base,
+                                fetch=fetch, cache=cache,
+                                use_cache=use_cache)
+    out, _ = _merge_ids(state.store, ids, spec, seed, base=base,
+                        fetch=fetch, cache=cache, use_cache=use_cache)
+    return out
+
+
+def resolve(state: CRDTMergeState, spec: Any, base: Any = None, *,
+            reduction: Optional[str] = None, use_cache: bool = True,
+            fetch: Optional[FetchHook] = None,
+            cache: Optional[EngineCache] = None,
+            trust: Any = None, **cfg) -> Any:
+    """Resolve the state. `spec` is a `repro.api.MergeSpec`.
+
+    The historical form `resolve(state, "ties", trim=0.3)` still works
+    but is DEPRECATED: it wraps the unvalidated kwargs in a lenient
+    MergeSpec and delegates, emitting DeprecationWarning. Construct a
+    MergeSpec instead — unknown or ill-typed cfg then fails at spec
+    construction, and the spec's digest keys the engine cache.
+    """
+    if isinstance(spec, MergeSpec):
+        return resolve_spec(state, coerce_spec(spec, cfg,
+                                               reduction=reduction),
+                            base=base, trust=trust, fetch=fetch,
+                            cache=cache, use_cache=use_cache)
+    _warn_shim("resolve(state, strategy_name, **cfg)",
+               "resolve(state, MergeSpec(strategy, cfg)) or "
+               "Replica.resolve(spec)")
+    lenient = coerce_spec(spec, cfg, reduction=reduction, lenient=True)
+    return resolve_spec(state, lenient, base=base, trust=trust,
+                        fetch=fetch, cache=cache, use_cache=use_cache)
+
+
+# ---------------------------------------------------------------------------
+# Whole-tree reference path (Remark 16 transparency baseline)
+# ---------------------------------------------------------------------------
+
+
+def reference_apply(strategy_name: str, contribs: List[Any], *, base=None,
+                    seed: int = 0, reduction: str = "fold", **cfg) -> Any:
     """Direct (non-CRDT) strategy application over an ORDERED list.
 
     This is exactly what Layer 2 invokes — the legacy whole-tree path,
     kept as the byte-for-byte reference for the Remark 16 transparency
-    check and the engine equivalence suite.
+    check and the engine equivalence suite. Not deprecated: it IS the
+    definition the engine is verified against.
     """
     strat = get_strategy(strategy_name)
     if strat.binary_only and len(contribs) > 2:
@@ -176,6 +312,16 @@ def apply_strategy(strategy_name: str, contribs: List[Any], *, base=None,
             return _tree_fold(strat, contribs, base, seed, cfg)
         return _seq_fold(strat, contribs, base, seed, cfg)
     return strat(contribs, base=base, seed=seed, **cfg)
+
+
+def apply_strategy(strategy_name: str, contribs: List[Any], *, base=None,
+                   seed: int = 0, reduction: str = "fold", **cfg) -> Any:
+    """DEPRECATED alias of `reference_apply` (the old public name)."""
+    _warn_shim("apply_strategy()", "reference_apply() (byte-exact "
+               "reference) or engine.merge(spec=MergeSpec(...)) "
+               "(cached/planned execution)")
+    return reference_apply(strategy_name, contribs, base=base, seed=seed,
+                           reduction=reduction, **cfg)
 
 
 def _seq_fold(strat, contribs, base, seed, cfg):
@@ -234,13 +380,13 @@ class IncrementalMean:
     def sync(self, state: CRDTMergeState) -> bool:
         """Re-fold from the state's canonical visible set.
 
-        Brings the accumulator back in line with
-        resolve(state, "weight_average") after out-of-order arrivals or
-        retractions: retracted ids are dropped, missed ones folded in,
-        and accumulation order restored to canonical. Returns True if a
+        Brings the accumulator back in line with the resolved
+        weight_average after out-of-order arrivals or retractions:
+        retracted ids are dropped, missed ones folded in, and
+        accumulation order restored to canonical. Returns True if a
         re-fold was needed (False = accumulator already canonical).
         Raises KeyError if a visible element's payload is absent from
-        the store (resolve() would fail there too) — silently averaging
+        the store (resolve would fail there too) — silently averaging
         a subset would be a wrong answer with no signal."""
         ids = canonical_order(state)
         absent = [eid for eid in ids if eid not in state.store]
@@ -265,39 +411,35 @@ class IncrementalMean:
         return len(self._ids)
 
 
-def hierarchical_resolve(states: List[CRDTMergeState], strategy_name: str,
+def hierarchical_resolve(states: List[CRDTMergeState], spec: Any,
                          group_size: int = 8, base=None, *,
-                         reduction: str = "fold",
-                         fetch: Optional[Callable[[Tuple[str, ...]],
-                                                  Dict[str, Any]]] = None,
-                         **cfg):
-    """Two-level resolve: sub-groups resolve locally; a second pass merges
-    sub-group outputs (paper §7.2 L3 mitigation 2). Deterministic given
-    the same partitioning policy (groups formed over the canonical order).
+                         reduction: Optional[str] = None,
+                         fetch: Optional[FetchHook] = None,
+                         cache: Optional[EngineCache] = None,
+                         use_cache: bool = True, **cfg):
+    """Two-level resolve over the join of `states`: sub-groups resolve
+    locally; a second pass merges sub-group outputs (paper §7.2 L3
+    mitigation 2). Deterministic given the same partitioning policy
+    (groups formed over the canonical order).
 
-    Honors `reduction=` for both passes and accepts the same `fetch=`
-    sharded-store hook as resolve(): payloads missing from the merged
-    store are pulled before the first pass instead of KeyError-ing.
+    `spec` is a MergeSpec (its `group_size` wins over the parameter;
+    if unset, the parameter's grouping is applied). The historical form
+    `hierarchical_resolve(states, "ties", group_size=4)` is DEPRECATED
+    — it is exactly `resolve(merged_state, MergeSpec(..., group_size))`.
     """
     if not states:
         raise ValueError("hierarchical_resolve() requires >= 1 state")
+    if isinstance(spec, MergeSpec):
+        spec = coerce_spec(spec, cfg, reduction=reduction)
+    else:
+        _warn_shim("hierarchical_resolve(states, strategy_name, **cfg)",
+                   "resolve(state, MergeSpec(strategy, cfg, "
+                   "group_size=...))")
+        spec = coerce_spec(spec, cfg, reduction=reduction, lenient=True)
+    if spec.group_size is None:
+        spec = spec.replace(group_size=group_size)
     merged = states[0]
     for s in states[1:]:
         merged = merged.merge(s)
-    ids = canonical_order(merged)
-    if not ids:
-        raise ValueError("hierarchical_resolve() requires a non-empty "
-                         "visible set")
-    store = merged.store
-    absent = [i for i in ids if i not in store]
-    if absent:
-        store = _fetch_into(store, absent, fetch)
-    seed = seed_from_root(merged.merkle_root())
-    groups = [ids[i:i + group_size] for i in range(0, len(ids), group_size)]
-    firsts = [apply_strategy(strategy_name,
-                             [store[i] for i in g],
-                             base=base, seed=seed, reduction=reduction,
-                             **cfg)
-              for g in groups]
-    return apply_strategy(strategy_name, firsts, base=base, seed=seed + 1,
-                          reduction=reduction, **cfg)
+    return resolve_spec(merged, spec, base=base, fetch=fetch, cache=cache,
+                        use_cache=use_cache)

@@ -79,11 +79,26 @@ def gated_visible(state: CRDTMergeState, trust: TrustState,
 
 def gated_resolve(state: CRDTMergeState, trust: TrustState,
                   strategy: str, base=None, threshold: float = 0.5, **cfg):
-    from repro.core.resolve import apply_strategy, seed_from_root
-    from repro.core.merkle import merkle_root
-    ids = sorted(gated_visible(state, trust, threshold))
-    if not ids:
-        raise ValueError("all contributions gated out")
-    root = merkle_root([bytes.fromhex(i) for i in ids])
-    return apply_strategy(strategy, [state.store[i] for i in ids],
-                          base=base, seed=seed_from_root(root), **cfg)
+    """DEPRECATED: resolve with the trust gate folded into the spec —
+    `resolve(state, MergeSpec(strategy, cfg, trust_threshold=...),
+    trust=trust)` (or `Replica.resolve` on a replica holding the trust
+    state). The spec path routes the gated set through the
+    planner/executor engine, so unlike this shim's original body it
+    honors `reduction=`, hits the per-leaf cache, and pulls non-resident
+    payloads leaf-granularly instead of KeyErroring under a sharded
+    store. Output bytes are identical (the engine is byte-equal to the
+    whole-tree reference, and the seed still derives from the Merkle
+    root of the gated id set)."""
+    import warnings
+
+    from repro.api.spec import MergeSpec
+    from repro.core.resolve import resolve_spec
+    warnings.warn(
+        "gated_resolve() is deprecated; use resolve(state, "
+        "MergeSpec(strategy, cfg, trust_threshold=...), trust=trust) "
+        "or Replica.resolve(spec)", DeprecationWarning, stacklevel=2)
+    reduction = cfg.pop("reduction", "fold")
+    fetch = cfg.pop("fetch", None)
+    spec = MergeSpec.lenient(strategy, cfg, reduction=reduction,
+                             trust_threshold=threshold)
+    return resolve_spec(state, spec, base=base, trust=trust, fetch=fetch)

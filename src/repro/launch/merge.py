@@ -17,8 +17,8 @@ import jax
 
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.configs import get_config, smoke_config
-from repro.core.resolve import resolve, seed_from_root
-from repro.core.state import CRDTMergeState
+from repro.api import MergeSpec, Replica
+from repro.core.resolve import seed_from_root
 from repro.models.model import Model
 from repro.train.step import init_train_state
 
@@ -39,22 +39,22 @@ def main() -> None:
     model = Model(cfg)
     like = init_train_state(model, jax.random.PRNGKey(0))
 
-    state = CRDTMergeState()
+    replica = Replica(args.node)
     for path in args.inputs:
         ckpt, meta = restore_checkpoint(path, like)
-        state = state.add(ckpt["params"], node=args.node)
+        replica.contribute(ckpt["params"])
         print(f"added {path} (data_step={meta.get('data_step')}) "
-              f"visible={len(state.visible())}")
+              f"visible={len(replica.visible())}")
 
     base = None
     if args.base:
         base_ckpt, _ = restore_checkpoint(args.base, like)
         base = base_ckpt["params"]
 
-    merged = resolve(state, args.strategy, base=base)
-    print(f"resolved {len(state.visible())} contributions with "
-          f"{args.strategy} (root {state.merkle_root().hex()[:16]}…, "
-          f"seed {seed_from_root(state.merkle_root())})")
+    merged = replica.resolve(MergeSpec(args.strategy), base=base)
+    print(f"resolved {len(replica.visible())} contributions with "
+          f"{args.strategy} (root {replica.merkle_root().hex()[:16]}…, "
+          f"seed {seed_from_root(replica.merkle_root())})")
 
     out_state = dict(like)
     out_state["params"] = merged
@@ -62,7 +62,7 @@ def main() -> None:
                            metadata={"merged_from": args.inputs,
                                      "strategy": args.strategy,
                                      "merkle_root":
-                                         state.merkle_root().hex(),
+                                         replica.merkle_root().hex(),
                                      "data_step": 0})
     print(f"wrote merged checkpoint to {path}")
 

@@ -21,9 +21,10 @@ from repro.net.store import (BlobSource, Placement, bitmap_indices,
 from repro.net.transport import (InMemoryTransport, LoopbackSocketTransport,
                                  PersistentLoopbackTransport, Transport,
                                  pump)
-from repro.net.wire import (DEFAULT_MAX_FRAME, decode_blob, decode_frame,
-                            decode_message, encode_blob, encode_message,
-                            msg_to_delta, msg_to_state, state_to_msg)
+from repro.net.wire import (DEFAULT_MAX_FRAME, ResolveSpecMsg, decode_blob,
+                            decode_frame, decode_message, encode_blob,
+                            encode_message, msg_to_delta, msg_to_state,
+                            state_to_msg)
 
 __all__ = [
     "SyncNode", "reconcile_root", "state_items",
@@ -32,7 +33,7 @@ __all__ = [
     "rendezvous_holders",
     "InMemoryTransport", "LoopbackSocketTransport",
     "PersistentLoopbackTransport", "Transport", "pump",
-    "DEFAULT_MAX_FRAME", "decode_blob", "decode_frame", "decode_message",
-    "encode_blob", "encode_message",
+    "DEFAULT_MAX_FRAME", "ResolveSpecMsg", "decode_blob", "decode_frame",
+    "decode_message", "encode_blob", "encode_message",
     "msg_to_delta", "msg_to_state", "state_to_msg",
 ]

@@ -62,10 +62,12 @@ from collections import Counter, OrderedDict
 from typing import (Any, Callable, Dict, FrozenSet, Iterable, List, Optional,
                     Sequence, Set, Tuple)
 
+from repro.api.spec import MergeSpec
 from repro.core.delta import Delta, apply_delta
 from repro.core.merkle import bucket_digests, diff_buckets, pick_bucket_bits, \
     prefix_bucket
-from repro.core.resolve import resolve
+from repro.core.resolve import resolve as _legacy_resolve
+from repro.core.resolve import resolve_spec as _resolve_spec
 from repro.core.state import AddEntry, CRDTMergeState
 from repro.core.version_vector import VersionVector
 from repro.net.store import (BlobSource, Placement, bitmap_indices,
@@ -74,9 +76,9 @@ from repro.net.wire import (CHUNK_ENVELOPE, DEFAULT_MAX_FRAME, BlobManifest,
                             BlobReq, BlobResp, BucketItemsMsg, BucketsMsg,
                             ChunkData, ChunkReq, DeltaMsg, HaveEntry,
                             HaveMap, HaveReq, ManifestEntry, Message,
-                            StateMsg, SyncDone, SyncReq, WireError,
-                            decode_blob, encode_blob, manifest_entry,
-                            msg_to_delta, msg_to_state)
+                            ResolveSpecMsg, StateMsg, SyncDone, SyncReq,
+                            WireError, decode_blob, encode_blob,
+                            manifest_entry, msg_to_delta, msg_to_state)
 
 Reply = Tuple[str, Message]
 
@@ -251,6 +253,12 @@ class SyncNode:
         self._req_time: Dict[Tuple[str, int, str], float] = {}
         # eids pinned fetchable regardless of placement responsibility
         self._wanted: Set[str] = set()
+        # latest resolve description gossiped by each peer (wire v2
+        # ResolveSpecMsg): what to resolve converges like everything
+        # else. "Latest" is by the sender's sid, not arrival order —
+        # the network reorders and duplicates frames.
+        self.specs_seen: Dict[str, Any] = {}
+        self._spec_sids: Dict[str, int] = {}
         # request-state generation stamps: entries carry the value of
         # self._sessions at creation/refresh; anything older than the
         # latest begin_sync() is a dead session's leftovers (nothing a
@@ -281,26 +289,52 @@ class SyncNode:
         self.state = self.state.remove(element_id, self.node_id)
         self._gc_partials()
 
+    def join(self, state: CRDTMergeState) -> None:
+        """CRDT-join an externally produced state (e.g. a Replica
+        attaching) and refresh partial-blob bookkeeping."""
+        self.state = self.state.merge(state)
+        self.merge_calls += 1
+        self._gc_partials()
+
     def root(self) -> bytes:
         return self.state.merkle_root()
 
-    def resolve(self, strategy: str, base=None, **cfg):
-        """Layer-2 resolve over this node's state, pulling absent blobs
-        through the fetch hook. The merge engine's pulls are
-        leaf-granular: resolve() invokes the hook only for payloads some
-        cache-missed leaf task actually needs, so a warm re-resolve on a
-        replica that shed its blobs ships zero chunks
+    def _counted_fetch(self):
+        if self.fetch_hook is None:
+            return None
+        hook = self.fetch_hook
+
+        def counted(eids):
+            self.stats["resolve_blob_pulls"] += len(eids)
+            return hook(self, eids)
+
+        return counted
+
+    def resolve_spec(self, spec: MergeSpec, base=None, *, trust=None,
+                     cache=None, use_cache: bool = True):
+        """Layer-2 resolve of a MergeSpec over this node's state,
+        pulling absent blobs through the fetch hook. The merge engine's
+        pulls are leaf-granular: the hook is invoked only for payloads
+        some cache-missed leaf task actually needs, so a warm re-resolve
+        on a replica that shed its blobs ships zero chunks
         (stats["resolve_blob_pulls"] counts what was pulled)."""
-        if self.fetch_hook is not None:
-            hook = self.fetch_hook
+        return _resolve_spec(self.state, spec, base=base, trust=trust,
+                             fetch=self._counted_fetch(), cache=cache,
+                             use_cache=use_cache)
 
-            def counted(eids):
-                self.stats["resolve_blob_pulls"] += len(eids)
-                return hook(self, eids)
-
-            return resolve(self.state, strategy, base=base,
-                           fetch=counted, **cfg)
-        return resolve(self.state, strategy, base=base, **cfg)
+    def resolve(self, spec, base=None, *, trust=None, **cfg):
+        """Resolve this node's state. Takes a MergeSpec (`trust=`
+        supplies the TrustState a `trust_threshold` spec gates on); the
+        historical `resolve("ties", trim=0.3)` string form is
+        DEPRECATED (it rides the core.resolve shim, warning
+        included)."""
+        if isinstance(spec, MergeSpec):
+            use_cache = cfg.pop("use_cache", True)
+            from repro.api.spec import coerce_spec
+            return self.resolve_spec(coerce_spec(spec, cfg), base=base,
+                                     trust=trust, use_cache=use_cache)
+        return _legacy_resolve(self.state, spec, base=base, trust=trust,
+                               fetch=self._counted_fetch(), **cfg)
 
     def missing_blobs(self) -> Tuple[str, ...]:
         """Visible elements whose payload the store lacks. Tombstoned
@@ -379,6 +413,18 @@ class SyncNode:
         return SyncReq(self.node_id, self._sid,
                        _root_of_items(self.items()), bits, self.state.vv)
 
+    def propose_spec(self, spec: MergeSpec,
+                     peers: Iterable[str]) -> List[Reply]:
+        """Gossip *what to resolve*: one ResolveSpecMsg per peer, so a
+        consortium can converge on the resolve description (strategy,
+        cfg, threshold) in-band instead of via out-of-band config.
+        Receivers record the latest spec per sender in `specs_seen`;
+        the codec strict-validates the spec on decode."""
+        self._sid += 1
+        self.stats["specs_proposed"] += 1
+        return [(p, ResolveSpecMsg(self.node_id, self._sid, spec))
+                for p in sorted(peers) if p != self.node_id]
+
     # -- message handling --------------------------------------------------
 
     def handle(self, msg: Message) -> List[Reply]:
@@ -412,6 +458,18 @@ class SyncNode:
             return self._on_have_req(msg)
         if isinstance(msg, HaveMap):
             return self._on_have_map(msg)
+        if isinstance(msg, ResolveSpecMsg):
+            # the codec already strict-validated the spec on decode.
+            # Adopt only non-stale proposals: a reorder-delayed or
+            # duplicated older frame must not overwrite a newer spec
+            # (sids are per-sender monotonic).
+            self.stats["specs_received"] += 1
+            if msg.sid >= self._spec_sids.get(msg.sender, -1):
+                self._spec_sids[msg.sender] = msg.sid
+                self.specs_seen[msg.sender] = msg.spec
+            else:
+                self.stats["specs_stale"] += 1
+            return []
         if isinstance(msg, SyncDone):
             self.state = CRDTMergeState(self.state.adds, self.state.removes,
                                         self.state.vv.merge(msg.vv),

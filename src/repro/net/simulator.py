@@ -408,8 +408,18 @@ class SimGossipNetwork:
             return all(not x.missing_blobs() for x in self.nodes)
         return True
 
-    def resolve_all(self, strategy: str, base=None, **cfg):
-        return [x.resolve(strategy, base=base, **cfg) for x in self.nodes]
+    def resolve_all(self, spec, base=None, *, use_cache: bool = True,
+                    trust=None, **cfg):
+        """Every node independently resolves the same spec. `spec` is a
+        MergeSpec or a strategy name + cfg (the name form builds a
+        validated MergeSpec — no deprecation detour); `trust=` supplies
+        the converged TrustState for `trust_threshold` specs."""
+        from repro.api.spec import coerce_spec
+        spec = coerce_spec(spec, cfg,
+                           reduction=cfg.pop("reduction", None))
+        return [x.resolve_spec(spec, base=base, trust=trust,
+                               use_cache=use_cache)
+                for x in self.nodes]
 
     @property
     def bytes_sent(self) -> int:

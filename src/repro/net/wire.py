@@ -62,9 +62,10 @@ VERSION = 2                             # current protocol version
 ACCEPTED_VERSIONS = frozenset({1, 2})   # decoded without complaint
 # Interop is two-directional: frames whose type already existed in v1
 # keep the v1 stamp, so an un-upgraded peer (which rejects version != 1)
-# still reads everything it can parse; only the v2-introduced discovery
-# frames carry the v2 stamp. Decoding is Postel-lenient about the
-# version/type pairing — the type tag alone selects the decoder.
+# still reads everything it can parse; only the v2-introduced frames
+# (HaveReq/HaveMap discovery, ResolveSpecMsg) carry the v2 stamp.
+# Decoding is Postel-lenient about the version/type pairing — the type
+# tag alone selects the decoder.
 HEADER = struct.Struct(">2sBBI")        # magic, version, type, payload len
 TRAILER = struct.Struct(">I")           # crc32
 FRAME_OVERHEAD = HEADER.size + TRAILER.size
@@ -83,6 +84,7 @@ MSG_CHUNK_REQ = 0x17
 MSG_CHUNK_DATA = 0x18
 MSG_HAVE_REQ = 0x19
 MSG_HAVE_MAP = 0x1A
+MSG_RESOLVE_SPEC = 0x1B
 
 # Streaming transfer sizing. A multi-GB pytree must never become one
 # giant frame: blobs whose canonical encoding exceeds the per-frame data
@@ -297,6 +299,22 @@ class HaveMap:
     entries: Tuple[HaveEntry, ...] = ()
 
     type = MSG_HAVE_MAP
+
+
+@dataclass(frozen=True)
+class ResolveSpecMsg:
+    """Gossip *what to resolve*: a `repro.api.MergeSpec` in its
+    canonical encoding. Contributions already converge via the OR-Set;
+    this frame lets nodes converge on the resolve description too
+    (strategy, typed cfg, base ref, reduction, trust threshold) instead
+    of relying on out-of-band configuration. The payload is the spec's
+    own versioned canonical bytes — the same bytes its digest() (and
+    therefore the engine cache key) hashes."""
+    sender: str
+    sid: int
+    spec: Any                  # repro.api.MergeSpec
+
+    type = MSG_RESOLVE_SPEC
 
 
 Message = Any  # any of the dataclasses above
@@ -744,6 +762,43 @@ def _dec_have_map(r: _Reader) -> HaveMap:
     return HaveMap(sender, sid, tuple(entries))
 
 
+def _enc_resolve_spec(buf: bytearray, m: ResolveSpecMsg) -> None:
+    from repro.api.spec import MergeSpec, SpecError
+    if not isinstance(m.spec, MergeSpec):
+        raise WireError(f"ResolveSpecMsg.spec must be a MergeSpec, "
+                        f"got {type(m.spec).__name__}")
+    try:
+        raw = m.spec.encode()
+        # full strict round-trip at ENCODE time: receivers reject any
+        # spec that fails strict validation (array-valued cfg, lenient
+        # specs with undeclared knobs, …), and a decode failure there
+        # would abort the peer's whole delivery drain — refuse to emit
+        # anything a well-behaved receiver must throw away
+        MergeSpec.decode(raw)
+    except (SpecError, KeyError) as e:
+        raise WireError(f"MergeSpec not gossipable (a peer's strict "
+                        f"decode would reject it): {e}") from e
+    _p_str(buf, m.sender)
+    _p_u64(buf, m.sid)
+    _p_bytes(buf, raw)
+
+
+def _dec_resolve_spec(r: _Reader) -> ResolveSpecMsg:
+    from repro.api.spec import MergeSpec, SpecError
+    sender, sid, raw = r.str_(), r.u64(), r.bytes_()
+    try:
+        spec = MergeSpec.decode(raw)
+    except (SpecError, KeyError, ValueError, struct.error) as e:
+        # strict validation applies on ingest: an unknown strategy or
+        # undeclared cfg from a peer is a malformed frame, not a merge.
+        # ValueError also covers non-numeric _V_INT payloads and
+        # UnicodeDecodeError from corrupt strings — every parse failure
+        # must surface as WireError so a hostile frame cannot abort the
+        # receiver's delivery drain with a foreign exception type.
+        raise WireError(f"bad MergeSpec payload: {e}") from e
+    return ResolveSpecMsg(sender, sid, spec)
+
+
 _ENCODERS = {
     MSG_STATE: _enc_state, MSG_DELTA: _enc_delta,
     MSG_SYNC_REQ: _enc_sync_req, MSG_BUCKETS: _enc_buckets,
@@ -751,7 +806,7 @@ _ENCODERS = {
     MSG_BLOB_RESP: _enc_blob_resp, MSG_SYNC_DONE: _enc_sync_done,
     MSG_BLOB_MANIFEST: _enc_blob_manifest, MSG_CHUNK_REQ: _enc_chunk_req,
     MSG_CHUNK_DATA: _enc_chunk_data, MSG_HAVE_REQ: _enc_have_req,
-    MSG_HAVE_MAP: _enc_have_map,
+    MSG_HAVE_MAP: _enc_have_map, MSG_RESOLVE_SPEC: _enc_resolve_spec,
 }
 _DECODERS = {
     MSG_STATE: _dec_state, MSG_DELTA: _dec_delta,
@@ -760,7 +815,7 @@ _DECODERS = {
     MSG_BLOB_RESP: _dec_blob_resp, MSG_SYNC_DONE: _dec_sync_done,
     MSG_BLOB_MANIFEST: _dec_blob_manifest, MSG_CHUNK_REQ: _dec_chunk_req,
     MSG_CHUNK_DATA: _dec_chunk_data, MSG_HAVE_REQ: _dec_have_req,
-    MSG_HAVE_MAP: _dec_have_map,
+    MSG_HAVE_MAP: _dec_have_map, MSG_RESOLVE_SPEC: _dec_resolve_spec,
 }
 
 # Public registry: every frame tag the codec accepts, with its message
@@ -773,6 +828,7 @@ MESSAGE_TYPES: Dict[int, type] = {
     MSG_SYNC_DONE: SyncDone, MSG_BLOB_MANIFEST: BlobManifest,
     MSG_CHUNK_REQ: ChunkReq, MSG_CHUNK_DATA: ChunkData,
     MSG_HAVE_REQ: HaveReq, MSG_HAVE_MAP: HaveMap,
+    MSG_RESOLVE_SPEC: ResolveSpecMsg,
 }
 
 
@@ -781,7 +837,7 @@ MESSAGE_TYPES: Dict[int, type] = {
 # ---------------------------------------------------------------------------
 
 
-_V2_TYPES = frozenset({MSG_HAVE_REQ, MSG_HAVE_MAP})
+_V2_TYPES = frozenset({MSG_HAVE_REQ, MSG_HAVE_MAP, MSG_RESOLVE_SPEC})
 
 
 def frame_version(mtype: int) -> int:

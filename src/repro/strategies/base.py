@@ -21,11 +21,18 @@ Two execution protocols share one registration:
 leading k axis (no per-leaf norms/quantiles/shape use): the engine may
 fuse many such leaves into one flattened [k, N] dispatch without
 changing any output byte.
+
+`cfg_schema` declares every configuration knob the strategy consumes —
+``{name: (type, default)}`` — so `repro.api.MergeSpec` can reject
+unknown or ill-typed kwargs at construction (the legacy ``**cfg``
+surface silently dropped them at merge time). The audit suite asserts
+each catalog strategy's schema matches its leaf function's signature
+exactly, names and defaults both.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +50,9 @@ class Strategy:
     needs_key: bool = False           # leaf_fn consumes a PRNG key
     whole_model: bool = False         # not per-tensor: legacy path only
     elementwise: bool = False         # reduces only over the k axis
+    # declared cfg knobs: {name: (type, default)}. None = undeclared
+    # (strict MergeSpec construction then rejects any cfg at all).
+    cfg_schema: Optional[Dict[str, Tuple[type, Any]]] = None
 
     def __call__(self, contribs: List[Any], *, base: Any = None,
                  seed: int = 0, **cfg) -> Any:

@@ -419,14 +419,15 @@ def _genetic_merge(s, b, grid=11, gens=3, reg=0.05, **kw):
 # ------------------------------------------------------------------ registry
 
 
-def _reg(name, leaf_fn, *, needs_key=False, stochastic=False,
+def _reg(name, leaf_fn, *, schema, needs_key=False, stochastic=False,
          binary_only=False, category="linear", whole_model=False,
          elementwise=False, **defaults):
     register(Strategy(name=name, fn=leafwise(leaf_fn, needs_key=needs_key),
                       stochastic=stochastic, binary_only=binary_only,
                       category=category, defaults=defaults,
                       leaf_fn=leaf_fn, needs_key=needs_key,
-                      whole_model=whole_model, elementwise=elementwise))
+                      whole_model=whole_model, elementwise=elementwise,
+                      cfg_schema=dict(schema)))
 
 
 # `elementwise`: the leaf function reduces only over the leading k axis
@@ -438,36 +439,61 @@ def _reg(name, leaf_fn, *, needs_key=False, stochastic=False,
 # streaming elementwise math; the engine routes them through the legacy
 # whole-tree path (and caches one whole-model entry) instead of
 # pretending a per-tensor plan buys anything.
+# `schema`: the strategy's declared cfg knobs ({name: (type, default)}),
+# enforced by repro.api.MergeSpec at spec construction. The declaration
+# must mirror the leaf function's keyword signature exactly — names,
+# types AND default values — because MergeSpec canonicalizes declared
+# defaults into the cache key; tests/test_strategies_audit.py diffs
+# every schema against inspect.signature so the two cannot drift.
 
-_reg("weight_average", _weight_average, elementwise=True)
-_reg("linear", _linear, elementwise=True)
-_reg("task_arithmetic", _task_arithmetic, elementwise=True)
-_reg("negative_merge", _negative_merge, elementwise=True)
-_reg("fisher_merge", _fisher_merge, elementwise=True)
-_reg("dam", _dam)
-_reg("ada_merging", _ada_merging)
-_reg("regression_mean", _regression_mean)
+_reg("weight_average", _weight_average, elementwise=True, schema={})
+_reg("linear", _linear, elementwise=True,
+     schema={"t": (float, 0.5)})
+_reg("task_arithmetic", _task_arithmetic, elementwise=True,
+     schema={"lam": (float, 1.0)})
+_reg("negative_merge", _negative_merge, elementwise=True,
+     schema={"lam": (float, 0.5)})
+_reg("fisher_merge", _fisher_merge, elementwise=True,
+     schema={"eps": (float, 1e-8)})
+_reg("dam", _dam, schema={})
+_reg("ada_merging", _ada_merging, schema={"eps": (float, 1e-8)})
+_reg("regression_mean", _regression_mean, schema={"eps": (float, 1e-8)})
 
-_reg("ties", _ties, category="sparse")
-_reg("dare", _dare, needs_key=True, stochastic=True, category="sparse")
+_reg("ties", _ties, category="sparse",
+     schema={"trim": (float, 0.2), "trim_method": (str, "quantile")})
+_reg("dare", _dare, needs_key=True, stochastic=True, category="sparse",
+     schema={"p": (float, 0.5)})
 _reg("dare_ties", _dare_ties, needs_key=True, stochastic=True,
-     category="sparse")
-_reg("della", _della, needs_key=True, stochastic=True, category="sparse")
-_reg("model_breadcrumbs", _model_breadcrumbs, category="sparse")
-_reg("emr", _emr, category="sparse")
-_reg("safe_merge", _safe_merge, category="sparse")
-_reg("split_unlearn_merge", _split_unlearn_merge, category="sparse")
-_reg("star", _star, category="sparse", whole_model=True)
+     category="sparse", schema={"p": (float, 0.5)})
+_reg("della", _della, needs_key=True, stochastic=True, category="sparse",
+     schema={"p_min": (float, 0.2), "p_max": (float, 0.8)})
+_reg("model_breadcrumbs", _model_breadcrumbs, category="sparse",
+     schema={"beta": (float, 0.1), "gamma": (float, 0.1)})
+_reg("emr", _emr, category="sparse", schema={"trim": (float, 0.1)})
+_reg("safe_merge", _safe_merge, category="sparse",
+     schema={"k_sigma": (float, 6.0)})
+_reg("split_unlearn_merge", _split_unlearn_merge, category="sparse",
+     schema={})
+_reg("star", _star, category="sparse", whole_model=True,
+     schema={"keep_frac": (float, 0.75)})
 
-_reg("slerp", _slerp, binary_only=True, category="geometry")
-_reg("dual_projection", _dual_projection, category="geometry")
+_reg("slerp", _slerp, binary_only=True, category="geometry",
+     schema={"t": (float, 0.5)})
+_reg("dual_projection", _dual_projection, category="geometry",
+     schema={"gamma": (float, 0.5), "eps": (float, 1e-12)})
 _reg("svd_knot_tying", _svd_knot_tying, category="geometry",
-     whole_model=True)
-_reg("representation_surgery", _representation_surgery, category="geometry")
-_reg("weight_scope_alignment", _weight_scope_alignment, category="geometry")
-_reg("led_merge", _led_merge, category="geometry")
-_reg("adarank", _adarank, category="geometry", whole_model=True)
+     whole_model=True, schema={"keep_frac": (float, 0.5)})
+_reg("representation_surgery", _representation_surgery,
+     category="geometry", schema={"eps": (float, 1e-8)})
+_reg("weight_scope_alignment", _weight_scope_alignment,
+     category="geometry", schema={})
+_reg("led_merge", _led_merge, category="geometry",
+     schema={"beta": (float, 5.0), "gamma": (float, 0.7)})
+_reg("adarank", _adarank, category="geometry", whole_model=True,
+     schema={"keep_frac": (float, 0.5)})
 
 _reg("evolutionary_merge", _evolutionary_merge, needs_key=True,
-     stochastic=True, category="search", whole_model=True)
-_reg("genetic_merge", _genetic_merge, category="search", whole_model=True)
+     stochastic=True, category="search", whole_model=True,
+     schema={"pop": (int, 16), "gens": (int, 3), "sigma": (float, 0.3)})
+_reg("genetic_merge", _genetic_merge, category="search", whole_model=True,
+     schema={"grid": (int, 11), "gens": (int, 3), "reg": (float, 0.05)})

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeSpec
+from repro.api.spec import MergeSpec
 from repro.core.gossip import GossipNetwork
 from repro.core.resolve import clear_cache
 from repro.data.synthetic import SyntheticTask
@@ -154,7 +155,7 @@ class BranchTrainMerge:
             if not br.alive:
                 continue
             out = self.net.nodes[br.index].resolve(
-                self.strategy, base=self.base_params)
+                MergeSpec(self.strategy), base=self.base_params)
             if merged is None:
                 merged = out
             br.state["params"] = jax.tree_util.tree_map(
@@ -163,7 +164,7 @@ class BranchTrainMerge:
     def _resolved_params(self):
         alive = next(b for b in self.branches if b.alive)
         return self.net.nodes[alive.index].resolve(
-            self.strategy, base=self.base_params)
+            MergeSpec(self.strategy), base=self.base_params)
 
     # -------------------------------------------------------------- eval
 

@@ -1,0 +1,571 @@
+"""repro.api v1: MergeSpec + Replica facade.
+
+Covers the PR 5 acceptance criteria: the public-API snapshot, MergeSpec
+canonical-encoding properties, spec-digest cache keying, the 26 x {fold,
+tree} byte-equivalence grid between the legacy entry points and
+Replica.resolve(spec) (including trust-gated and hierarchical paths),
+per-replica cache isolation, the gated-resolve engine-path bugfix, and
+one-warning deprecation shims.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_contribs
+from repro.api import EngineCache, MergeSpec, Replica, SpecError
+from repro.core import engine
+from repro.core.resolve import (canonical_order, clear_cache,
+                                hierarchical_resolve, reference_apply,
+                                resolve, resolve_spec, seed_from_root)
+from repro.core.state import CRDTMergeState
+from repro.core.trust import TrustState, gated_resolve
+from repro.strategies import get_strategy, list_strategies
+
+
+def _bytes_equal(a, b) -> bool:
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.asarray(x).tobytes() == np.asarray(y).tobytes()
+        for x, y in zip(la, lb))
+
+
+def _state_with(contribs):
+    s = CRDTMergeState()
+    for i, c in enumerate(contribs):
+        s = s.add(c, node=f"n{i}")
+    return s
+
+
+def _legacy(fn, *args, **kw):
+    """Call a deprecated shim, asserting it warns EXACTLY once."""
+    with pytest.warns(DeprecationWarning) as rec:
+        out = fn(*args, **kw)
+    assert len(rec) == 1, [str(w.message) for w in rec]
+    return out
+
+
+# ------------------------------------------------------------ snapshot ---
+
+
+def test_public_api_snapshot():
+    import repro
+    import repro.api
+    expected = ["EngineCache", "MergeSpec", "Replica", "SpecError"]
+    assert sorted(repro.api.__all__) == expected
+    assert sorted(repro.__all__) == expected
+    for name in expected:
+        assert getattr(repro, name) is getattr(repro.api, name)
+    # the facade names resolve to the real implementations
+    assert repro.MergeSpec is MergeSpec
+    assert repro.Replica is Replica
+    assert repro.EngineCache is EngineCache
+
+
+# ----------------------------------------------------- MergeSpec basics ---
+
+
+def test_spec_digest_is_construction_order_insensitive():
+    a = MergeSpec("della", {"p_min": 0.1, "p_max": 0.9})
+    b = MergeSpec("della", {"p_max": 0.9, "p_min": 0.1})
+    assert a == b
+    assert a.digest() == b.digest()
+    assert hash(a) == hash(b)
+
+
+def test_spec_digest_canonicalizes_defaults():
+    """Spelling out a declared default changes nothing — same digest,
+    same engine cache keys."""
+    assert MergeSpec("ties").digest() == \
+        MergeSpec("ties", {"trim": 0.2}).digest()
+    assert MergeSpec("ties").digest() == \
+        MergeSpec("ties", {"trim": 0.2,
+                           "trim_method": "quantile"}).digest()
+    # int literals promote to declared float knobs canonically
+    assert MergeSpec("task_arithmetic", {"lam": 1}).digest() == \
+        MergeSpec("task_arithmetic", {"lam": 1.0}).digest()
+
+
+def test_spec_distinct_cfgs_distinct_digests():
+    specs = [MergeSpec("ties"),
+             MergeSpec("ties", {"trim": 0.3}),
+             MergeSpec("ties", {"trim_method": "histogram"}),
+             MergeSpec("dare"),
+             MergeSpec("dare", {"p": 0.25}),
+             MergeSpec("slerp", reduction="tree"),
+             MergeSpec("slerp"),
+             MergeSpec("ties", trust_threshold=0.5),
+             MergeSpec("ties", group_size=4),
+             MergeSpec("ties", base_ref="ab" * 32)]
+    digests = [s.digest() for s in specs]
+    assert len(set(digests)) == len(digests)
+
+
+def test_spec_wire_round_trip():
+    spec = MergeSpec("della", {"p_min": 0.25, "p_max": 0.75},
+                     reduction="tree", base_ref="cd" * 32,
+                     trust_threshold=0.4, group_size=6)
+    again = MergeSpec.decode(spec.encode())
+    assert again == spec
+    assert again.digest() == spec.digest()
+    assert again.cfg == spec.cfg
+    assert (again.reduction, again.base_ref, again.trust_threshold,
+            again.group_size) == ("tree", "cd" * 32, 0.4, 6)
+
+
+def test_spec_validation_rejects_unknown_cfg_with_did_you_mean():
+    with pytest.raises(SpecError, match="did you mean 'trim'"):
+        MergeSpec("ties", {"tirm": 0.3})
+    with pytest.raises(SpecError, match="unknown cfg key"):
+        MergeSpec("weight_average", {"anything": 1})
+    with pytest.raises(KeyError):
+        MergeSpec("no_such_strategy")
+
+
+def test_spec_validation_rejects_ill_typed_cfg():
+    with pytest.raises(SpecError, match="expects float"):
+        MergeSpec("ties", {"trim": "a lot"})
+    with pytest.raises(SpecError, match="expects float"):
+        MergeSpec("dare", {"p": True})        # bool is not a float knob
+    with pytest.raises(SpecError, match="expects int"):
+        MergeSpec("genetic_merge", {"gens": 2.5})
+    with pytest.raises(SpecError, match="reduction"):
+        MergeSpec("ties", reduction="sideways")
+    with pytest.raises(SpecError, match="group_size"):
+        MergeSpec("ties", group_size=0)
+    with pytest.raises(SpecError, match="trust_threshold"):
+        MergeSpec("ties", trust_threshold=1.5)
+
+
+def test_lenient_spec_allows_unknown_cfg_but_still_keys_cache():
+    big_a = np.zeros(10_000, np.float32)
+    big_b = np.zeros(10_000, np.float32)
+    big_b[5_000] = 1.0
+    assert repr(big_a) == repr(big_b)         # repr would alias these
+    sa = MergeSpec.lenient("weight_average", {"knob": big_a})
+    sb = MergeSpec.lenient("weight_average", {"knob": big_b})
+    assert sa.digest() != sb.digest()         # content-hashed, not repr'd
+    with pytest.raises(SpecError, match="not wire-decodable"):
+        MergeSpec.decode(sa.encode())
+    with pytest.raises(SpecError):
+        MergeSpec("weight_average", {"knob": big_a})   # strict rejects
+
+
+def test_replace_preserves_fields_and_validation_mode():
+    strict = MergeSpec("ties", {"trim": 0.3}, trust_threshold=0.5)
+    grouped = strict.replace(group_size=4)
+    assert grouped.group_size == 4
+    assert grouped.trust_threshold == 0.5
+    assert grouped.cfg == strict.cfg
+    with pytest.raises(SpecError):          # strict copies revalidate
+        strict.replace(cfg={"tirm": 0.3})
+    lenient = MergeSpec.lenient("weight_average", {"oops": 1})
+    again = lenient.replace(group_size=4)   # stays lenient
+    assert again.group_size == 4 and dict(again.cfg)["oops"] == 1
+
+
+def test_base_ref_mismatch_is_rejected():
+    """A spec's base_ref pins the base payload EXACTLY — supplying a
+    different payload must raise, not silently diverge replicas."""
+    contribs = make_contribs(3, seed=50)
+    base = make_contribs(1, seed=51)[0]
+    other = make_contribs(1, seed=52)[0]
+    rep = Replica("pin", state=_state_with(contribs))
+    ref = rep.register_base(base)
+    spec = MergeSpec("task_arithmetic", base_ref=ref)
+    rep.resolve(spec, use_cache=False)                 # registry: fine
+    rep.resolve(spec, base=base, use_cache=False)      # matching: fine
+    with pytest.raises(SpecError, match="does not match"):
+        rep.resolve(spec, base=other, use_cache=False)
+
+
+def test_node_resolve_threads_trust_for_gated_specs():
+    """GossipNode/SyncNode/resolve_all accept trust= with a MergeSpec —
+    a gated spec without its TrustState would silently resolve
+    ungated."""
+    from repro.core.gossip import GossipNode
+    from repro.net.antientropy import SyncNode
+    contribs = make_contribs(3, seed=53)
+    s = _state_with(contribs)
+    bad = sorted(s.visible())[0]
+    trust = TrustState().report(bad, "equivocation", "n0")
+    spec = MergeSpec("weight_average", trust_threshold=0.5)
+    want = resolve_spec(s, spec, trust=trust, use_cache=False)
+    ungated = resolve_spec(s, MergeSpec("weight_average"),
+                           use_cache=False)
+    assert not _bytes_equal(want, ungated)
+    gnode = GossipNode("g")
+    gnode.state = s
+    assert _bytes_equal(gnode.resolve(spec, trust=trust,
+                                      use_cache=False), want)
+    snode = SyncNode("s", state=s)
+    assert _bytes_equal(snode.resolve(spec, trust=trust,
+                                      use_cache=False), want)
+
+
+def test_resolve_rejects_cfg_kwargs_next_to_a_spec():
+    s = _state_with(make_contribs(2))
+    with pytest.raises(TypeError, match="inside the MergeSpec"):
+        resolve(s, MergeSpec("ties"), trim=0.3)
+    with pytest.raises(TypeError, match="inside the MergeSpec"):
+        resolve(s, MergeSpec("slerp"), reduction="tree")
+    with pytest.raises(TypeError, match="inside the MergeSpec"):
+        engine.merge(make_contribs(2), spec=MergeSpec("ties"), trim=0.3)
+    # a positional strategy name conflicting with spec= raises too
+    with pytest.raises(TypeError, match="conflicting strategies"):
+        engine.merge(make_contribs(2), "weight_average",
+                     spec=MergeSpec("task_arithmetic"))
+
+
+def test_resolve_all_name_form_keeps_reduction_kwarg():
+    """The helpers' non-deprecated name form still honors reduction=
+    (it is a call knob, not strategy cfg — must not hit validation)."""
+    from repro.core.gossip import GossipNetwork
+    net = GossipNetwork(5, seed=0)
+    for i, (node, c) in enumerate(zip(net.nodes, make_contribs(5))):
+        node.contribute(c)
+    net.all_pairs_round()
+    tree = net.resolve_all("slerp", reduction="tree", use_cache=False)
+    fold = net.resolve_all("slerp", use_cache=False)
+    assert not _bytes_equal(tree[0], fold[0])
+    assert all(_bytes_equal(tree[0], t) for t in tree[1:])
+
+
+# ------------------------------------------------- equivalence grid ------
+
+
+@pytest.mark.parametrize("reduction", ["fold", "tree"])
+def test_equivalence_grid_all_strategies(reduction):
+    """Replica.resolve(MergeSpec(...)) == legacy resolve(...) bit-for-bit
+    for all 26 strategies under both reductions."""
+    contribs = make_contribs(4, seed=33)
+    s = _state_with(contribs)
+    rep = Replica("grid", state=s)
+    for name in list_strategies():
+        spec = MergeSpec(name, reduction=reduction)
+        new = rep.resolve(spec, use_cache=False)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            old = resolve(s, name, reduction=reduction, use_cache=False)
+        assert _bytes_equal(new, old), (name, reduction)
+
+
+@pytest.mark.parametrize("reduction", ["fold", "tree"])
+def test_equivalence_grid_trust_gated(reduction):
+    """The trust-gated path: Replica.resolve(spec w/ threshold) equals
+    legacy gated_resolve bit-for-bit (fold — the only reduction the old
+    shim body supported — plus tree, which only the new path honors,
+    checked self-consistent against the reference)."""
+    contribs = make_contribs(5, seed=34)
+    s = _state_with(contribs)
+    bad = sorted(s.visible())[1]
+    trust = TrustState().report(bad, "equivocation", "n0")
+    rep = Replica("gated", state=s, trust=trust)
+    for name in list_strategies():
+        spec = MergeSpec(name, reduction=reduction, trust_threshold=0.5)
+        new = rep.resolve(spec, use_cache=False)
+        if reduction == "fold":
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", DeprecationWarning)
+                old = gated_resolve(s, trust, name, threshold=0.5)
+        else:
+            # the legacy shim silently ignored reduction; the reference
+            # is the whole-tree path over the gated canonical order
+            from repro.core.merkle import merkle_root
+            ids = [i for i in canonical_order(s) if i != bad]
+            seed = seed_from_root(
+                merkle_root([bytes.fromhex(i) for i in ids]))
+            old = reference_apply(name, [s.store[i] for i in ids],
+                                  seed=seed, reduction=reduction)
+        assert _bytes_equal(new, old), (name, reduction)
+    assert bad in s.visible()          # gating never mutates the state
+
+
+@pytest.mark.parametrize("reduction", ["fold", "tree"])
+def test_equivalence_grid_hierarchical(reduction):
+    """The hierarchical path: Replica.resolve(spec w/ group_size) equals
+    the legacy hierarchical_resolve shim bit-for-bit."""
+    contribs = make_contribs(9, seed=35)
+    states = [_state_with([c]) for c in contribs]
+    merged = states[0]
+    for st in states[1:]:
+        merged = merged.merge(st)
+    rep = Replica("hier", state=merged)
+    for name in ("weight_average", "ties", "slerp", "dare",
+                 "genetic_merge"):
+        spec = MergeSpec(name, reduction=reduction, group_size=3)
+        new = rep.resolve(spec, use_cache=False)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            old = hierarchical_resolve(states, name, group_size=3,
+                                       reduction=reduction,
+                                       use_cache=False)
+        assert _bytes_equal(new, old), (name, reduction)
+
+
+# ------------------------------------------------- digest keys the cache --
+
+
+def test_spec_digest_is_the_cache_key_across_entry_points():
+    """Same spec => warm cache hit across the legacy shim and the new
+    facade: the shim's lenient spec normalizes to the same digest, so a
+    facade resolve against a shared cache recomputes nothing."""
+    contribs = make_contribs(3, seed=36)
+    s = _state_with(contribs)
+    shared = EngineCache()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy_out = resolve(s, "ties", cache=shared)   # warms `shared`
+    warm_info = shared.info()
+    assert warm_info.misses > 0 and warm_info.entries > 0
+    rep = Replica("warm", state=s, cache=shared)
+    new_out = rep.resolve(MergeSpec("ties"))
+    after = shared.info()
+    assert after.misses == warm_info.misses        # zero new misses
+    assert after.hits > warm_info.hits             # pure hits
+    assert _bytes_equal(legacy_out, new_out)
+    # ...and the same spec spelled with explicit defaults still hits
+    rep.resolve(MergeSpec("ties", {"trim": 0.2}))
+    assert shared.info().misses == after.misses
+
+
+def test_per_replica_cache_isolation():
+    """Two replicas in one process share nothing: entries, budgets, and
+    counters are per-replica, and the module default stays untouched."""
+    clear_cache()
+    contribs = make_contribs(3, seed=37)
+    r1 = Replica("r1", state=_state_with(contribs))
+    r2 = Replica("r2", state=_state_with(contribs))
+    before_default = engine.cache_info()
+    r1.resolve(MergeSpec("weight_average"))
+    assert r1.cache_info().entries > 0
+    assert r2.cache_info().entries == 0            # no aliasing
+    assert engine.cache_info().entries == before_default.entries
+    # limits are per-replica too
+    r1.set_cache_limit(entries=1)
+    assert r1.cache_info().entries == 1
+    assert r1.cache_info().entry_limit == 1
+    assert r2.cache_info().entry_limit != 1
+    # module-level function still governs the default cache only
+    engine.set_cache_limit(entries=7)
+    try:
+        assert engine.cache_info().entry_limit == 7
+        assert r2.cache_info().entry_limit != 7
+    finally:
+        engine.reset_cache_limits()
+    r1.clear_cache()
+    assert r1.cache_info().entries == 0
+
+
+# ------------------------------------------ gated resolve engine path ----
+
+
+def test_gated_resolve_rides_engine_shed_blob_fetch_hook():
+    """Regression (PR 5 bugfix): the trust-gated path goes through the
+    planner/executor engine — it fetches non-resident payloads through
+    the hook leaf-granularly instead of KeyErroring, honors reduction,
+    and warms the per-leaf cache so a re-resolve fetches nothing."""
+    contribs = make_contribs(5, seed=38)   # 4 survive: fold != tree
+    s = _state_with(contribs)
+    bad = sorted(s.visible())[0]
+    trust = TrustState().report(bad, "fingerprint_anomaly", "n1",
+                                severity=2.0)
+    full = resolve_spec(s, MergeSpec("slerp", trust_threshold=0.5),
+                        trust=trust, use_cache=False)
+    # shed one surviving contribution's payload (sharded store)
+    shed = sorted(s.visible())[2]
+    payload = s.store[shed]
+    bare = CRDTMergeState(s.adds, s.removes, s.vv,
+                          {e: p for e, p in s.store.items() if e != shed})
+    calls = []
+
+    def hook(eids):
+        calls.append(eids)
+        return {shed: payload}
+
+    cache = EngineCache()
+    spec = MergeSpec("slerp", trust_threshold=0.5)
+    out = resolve_spec(bare, spec, trust=trust, fetch=hook, cache=cache)
+    assert calls == [(shed,)]                      # leaf-granular pull
+    assert _bytes_equal(out, full)
+    # warm re-resolve on the shed replica: zero additional fetches
+    again = resolve_spec(bare, spec, trust=trust, fetch=hook, cache=cache)
+    assert calls == [(shed,)]
+    assert _bytes_equal(again, out)
+    # reduction now matters on the gated path (the old shim dropped it)
+    tree = resolve_spec(s, MergeSpec("slerp", reduction="tree",
+                                     trust_threshold=0.5),
+                        trust=trust, use_cache=False)
+    assert not _bytes_equal(tree, full)
+
+
+def test_gated_resolve_shim_accepts_fetch_and_reduction():
+    contribs = make_contribs(4, seed=39)
+    s = _state_with(contribs)
+    trust = TrustState()
+    shed = sorted(s.visible())[0]
+    payload = s.store[shed]
+    bare = CRDTMergeState(s.adds, s.removes, s.vv,
+                          {e: p for e, p in s.store.items() if e != shed})
+    clear_cache()
+    want = resolve_spec(s, MergeSpec("ties", trust_threshold=0.5),
+                        use_cache=False)
+    clear_cache()
+    out = _legacy(gated_resolve, bare, trust, "ties",
+                  fetch=lambda eids: {shed: payload})
+    assert _bytes_equal(out, want)
+    clear_cache()
+
+
+# ------------------------------------------------------- deprecations ----
+
+
+def test_each_legacy_shim_warns_once_and_matches_replica():
+    contribs = make_contribs(4, seed=40)
+    s = _state_with(contribs)
+    rep = Replica("shims", state=s)
+    want = rep.resolve(MergeSpec("ties"), use_cache=False)
+
+    out = _legacy(resolve, s, "ties", use_cache=False)
+    assert _bytes_equal(out, want)
+
+    ids = canonical_order(s)
+    seed = seed_from_root(s.merkle_root())
+    from repro.core.resolve import apply_strategy
+    out = _legacy(apply_strategy, "ties", [s.store[i] for i in ids],
+                  seed=seed)
+    assert _bytes_equal(out, want)
+
+    from repro.net.antientropy import SyncNode
+    node = SyncNode("legacy", state=s)
+    out = _legacy(node.resolve, "ties", use_cache=False)
+    assert _bytes_equal(out, want)
+
+    trust = TrustState()
+    gated_rep = Replica("g", state=s, trust=trust)
+    gated_want = gated_rep.resolve(MergeSpec("ties", trust_threshold=0.5),
+                                   use_cache=False)
+    out = _legacy(gated_resolve, s, trust, "ties", threshold=0.5)
+    assert _bytes_equal(out, gated_want)
+    assert _bytes_equal(gated_want, want)      # nothing gated out here
+
+    states = [_state_with([c]) for c in contribs]
+    hier_want = rep.resolve(MergeSpec("ties", group_size=2),
+                            use_cache=False)
+    out = _legacy(hierarchical_resolve, states, "ties", group_size=2,
+                  use_cache=False)
+    assert _bytes_equal(out, hier_want)
+
+
+# ------------------------------------------------------ replica facade ---
+
+
+def test_replica_lifecycle_contribute_retract_merge_report():
+    contribs = make_contribs(3, seed=41)
+    r1, r2 = Replica("a"), Replica("b")
+    eids = [r1.contribute(c) for c in contribs[:2]]
+    e3 = r2.contribute(contribs[2])
+    r1.merge(r2)
+    assert r1.visible() == {*eids, e3}
+    r1.retract(eids[0])
+    assert r1.visible() == {eids[1], e3}
+    # evidence is a CRDT: merging replicas merges trust too
+    r2.report(e3, "statistical_outlier")
+    r1.merge(r2)
+    assert r1.trust is not None and r1.trust.score(e3) < 1.0
+    gated = r1.resolve(MergeSpec("weight_average", trust_threshold=0.8),
+                       use_cache=False)
+    want = reference_apply("weight_average", [r1.state.store[eids[1]]])
+    assert _bytes_equal(gated, want)
+
+
+def test_replica_base_ref_registry():
+    contribs = make_contribs(3, seed=42)
+    base = make_contribs(1, seed=43)[0]
+    rep = Replica("b", state=_state_with(contribs))
+    ref = rep.register_base(base)
+    spec = MergeSpec("task_arithmetic", base_ref=ref)
+    out = rep.resolve(spec, use_cache=False)
+    ids = canonical_order(rep.state)
+    want = reference_apply("task_arithmetic",
+                           [rep.state.store[i] for i in ids], base=base,
+                           seed=seed_from_root(rep.state.merkle_root()))
+    assert _bytes_equal(out, want)
+    missing = MergeSpec("task_arithmetic", base_ref="ee" * 32)
+    with pytest.raises(KeyError, match="not registered"):
+        rep.resolve(missing)
+    # resolve_spec without a payload for a pinned ref is a hard error
+    with pytest.raises(KeyError, match="base_ref"):
+        resolve_spec(rep.state, missing)
+
+
+def test_replica_attach_syncnode_fetch_and_delegation():
+    from repro.net.antientropy import SyncNode
+    contribs = make_contribs(3, seed=44)
+    s = _state_with(contribs)
+    full_store = dict(s.store)
+    node = SyncNode("store-node",
+                    state=CRDTMergeState(s.adds, s.removes, s.vv, {}))
+    node.fetch_hook = lambda _n, eids: {e: full_store[e] for e in eids}
+    rep = Replica("edge").attach(node)
+    assert rep.state.visible() == s.visible()      # state now node-owned
+    out = rep.resolve(MergeSpec("ties"))
+    assert node.stats["resolve_blob_pulls"] == 3   # pulled via the hook
+    want = resolve_spec(s, MergeSpec("ties"), use_cache=False)
+    assert _bytes_equal(out, want)
+    # contributions flow through the node while attached
+    extra = make_contribs(4, seed=45)[3]
+    eid = rep.contribute(extra)
+    assert eid in node.state.store
+    rep.detach()
+    assert rep.state.visible() == s.visible() | {eid}
+    with pytest.raises(RuntimeError):
+        rep.detach()
+
+
+def test_replica_rejects_string_strategy():
+    rep = Replica("strict", state=_state_with(make_contribs(2)))
+    with pytest.raises(TypeError, match="MergeSpec"):
+        rep.resolve("ties")
+
+
+# ------------------------------------------------------- spec gossip -----
+
+
+def test_sync_nodes_gossip_resolve_specs():
+    """Nodes exchange *what to resolve* over the wire and then resolve
+    identically from the gossiped spec."""
+    from repro.net.antientropy import SyncNode
+    from repro.net.transport import InMemoryTransport, pump
+    contribs = make_contribs(3, seed=46)
+    a, b = SyncNode("a"), SyncNode("b")
+    for c in contribs:
+        a.contribute(c)
+    t = InMemoryTransport()
+    t.register("a")
+    t.register("b")
+    t.send("a", "b", a.begin_sync("b"))
+    pump({"a": a, "b": b}, t)
+    spec = MergeSpec("ties", {"trim": 0.3}, reduction="tree")
+    for peer, msg in a.propose_spec(spec, ["b"]):
+        t.send("a", peer, msg)
+    pump({"a": a, "b": b}, t)
+    assert b.specs_seen["a"] == spec
+    ra = a.resolve_spec(spec, use_cache=False)
+    rb = b.resolve_spec(b.specs_seen["a"], use_cache=False)
+    assert _bytes_equal(ra, rb)
+    # adoption is by the sender's sid, not arrival order: a reordered
+    # or duplicated older proposal must not clobber a newer one
+    from repro.net.wire import ResolveSpecMsg, WireError, encode_message
+    stale = MergeSpec("weight_average")
+    b.handle(ResolveSpecMsg("a", 1, stale))
+    assert b.specs_seen["a"] == spec
+    assert b.stats["specs_stale"] == 1
+    # specs a peer's strict decode would reject are refused at encode —
+    # a typo'd lenient spec must never crash a receiver's frame drain
+    with pytest.raises(WireError):
+        encode_message(ResolveSpecMsg(
+            "a", 9, MergeSpec.lenient("ties", {"trm": 0.3})))

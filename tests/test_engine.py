@@ -11,8 +11,9 @@ import pytest
 from conftest import make_contribs
 from repro.core import engine
 from repro.core.properties import controlled_tensors
-from repro.core.resolve import (apply_strategy, cache_info, canonical_order,
-                                clear_cache, hierarchical_resolve,
+from repro.api import MergeSpec
+from repro.core.resolve import (cache_info, canonical_order, clear_cache,
+                                hierarchical_resolve, reference_apply,
                                 reset_cache_limits, resolve, seed_from_root,
                                 set_cache_limit)
 from repro.core.state import CRDTMergeState
@@ -65,7 +66,7 @@ def test_engine_matches_legacy_on_tier1_grid(name, reduction, grid):
     """Engine output is byte-identical to the legacy whole-tree path for
     every registry strategy under both reductions (paper Def. 6
     transparency, now across the planner/executor split)."""
-    legacy = apply_strategy(name, grid, seed=123, reduction=reduction)
+    legacy = reference_apply(name, grid, seed=123, reduction=reduction)
     eng = engine.merge(grid, name, seed=123, reduction=reduction,
                        use_cache=False)
     assert _bytes_equal(legacy, eng), name
@@ -76,7 +77,7 @@ def test_engine_matches_legacy_on_pytrees_with_base(name):
     """Mixed-shape pytree + explicit base: exercises batched same-dtype
     dispatches, per-leaf folds, and global-leaf-index key derivation."""
     contribs, base = _pytree_contribs(k=3, seed=7)
-    legacy = apply_strategy(name, contribs, base=base, seed=99)
+    legacy = reference_apply(name, contribs, base=base, seed=99)
     eng = engine.merge(contribs, name, base=base, seed=99, use_cache=False)
     assert _bytes_equal(legacy, eng), name
 
@@ -93,8 +94,8 @@ def test_resolve_routes_through_engine_byte_identical():
     seed = seed_from_root(s.merkle_root())
     for name in ("weight_average", "ties", "dare", "slerp",
                  "genetic_merge", "star", "evolutionary_merge"):
-        wrapped = resolve(s, name, use_cache=False)
-        direct = apply_strategy(name, ordered, seed=seed)
+        wrapped = resolve(s, MergeSpec(name), use_cache=False)
+        direct = reference_apply(name, ordered, seed=seed)
         assert _bytes_equal(wrapped, direct), name
 
 
@@ -113,7 +114,7 @@ def test_convergence_20_orderings_through_engine():
         merged = states[0]
         for st in states[1:]:
             merged = merged.merge(st)
-        out = resolve(merged, "ties", use_cache=False)
+        out = resolve(merged, MergeSpec("ties"), use_cache=False)
         if reference is None:
             reference = out
         else:
@@ -141,17 +142,17 @@ def test_incremental_resolve_only_changed_leaves_recompute():
     s = CRDTMergeState()
     for j, p in enumerate(["aa", "bb", "cc"]):
         s = s.add(_leafy_model(j), node=f"n{j}", element_id=_ctrl_eid(p))
-    resolve(s, "ties")
+    resolve(s, MergeSpec("ties"))
     s2 = s.remove(_ctrl_eid("cc"), "n2").add(
         _leafy_model(2, bump=(0, 5, 7)), node="n2",
         element_id=_ctrl_eid("cd"))          # still sorts last
     assert s2.merkle_root() != s.merkle_root()
     engine.reset_exec_stats()
-    out = resolve(s2, "ties")
+    out = resolve(s2, MergeSpec("ties"))
     stats = engine.exec_stats()
     assert stats["leaf_tasks"] == 3
     assert stats["hits"] == 9 and stats["misses"] == 3
-    legacy = apply_strategy(
+    legacy = reference_apply(
         "ties", [s2.store[i] for i in canonical_order(s2)],
         seed=seed_from_root(s2.merkle_root()))
     assert _bytes_equal(out, legacy)
@@ -167,14 +168,14 @@ def test_stochastic_strategies_do_not_reuse_stale_leaves():
     for j, p in enumerate(["aa", "bb", "cc"]):
         s = s.add(_leafy_model(j, n_leaves=4), node=f"n{j}",
                   element_id=_ctrl_eid(p))
-    resolve(s, "dare")
+    resolve(s, MergeSpec("dare"))
     s2 = s.remove(_ctrl_eid("cc"), "n2").add(
         _leafy_model(2, n_leaves=4, bump=(0,)), node="n2",
         element_id=_ctrl_eid("cd"))
     engine.reset_exec_stats()
-    out = resolve(s2, "dare")
+    out = resolve(s2, MergeSpec("dare"))
     assert engine.exec_stats()["leaf_tasks"] == 4      # no stale reuse
-    legacy = apply_strategy(
+    legacy = reference_apply(
         "dare", [s2.store[i] for i in canonical_order(s2)],
         seed=seed_from_root(s2.merkle_root()))
     assert _bytes_equal(out, legacy)
@@ -195,12 +196,12 @@ def test_cache_byte_budget_eviction():
         s = CRDTMergeState()
         for j in range(3):
             s = s.add(_leafy_model(j), node=f"n{j}")
-        out1 = resolve(s, "weight_average")
+        out1 = resolve(s, MergeSpec("weight_average"))
         info = cache_info()
         assert info.entries == 5
         assert info.bytes == 5 * leaf_bytes
         assert info.bytes <= info.byte_limit
-        out2 = resolve(s, "weight_average")   # 5 hits + 7 recomputes
+        out2 = resolve(s, MergeSpec("weight_average"))   # 5 hits + 7 recomputes
         assert _bytes_equal(out1, out2)
     finally:
         reset_cache_limits()
@@ -214,7 +215,7 @@ def test_cache_single_entry_larger_than_budget_not_retained():
         s = CRDTMergeState()
         for j in range(2):
             s = s.add(_leafy_model(j, n_leaves=2), node=f"n{j}")
-        resolve(s, "weight_average")
+        resolve(s, MergeSpec("weight_average"))
         assert cache_info().entries == 0
         assert cache_info().bytes == 0
     finally:
@@ -228,9 +229,9 @@ def test_whole_model_strategy_gets_single_cached_entry():
     s = CRDTMergeState()
     for i, c in enumerate(contribs):
         s = s.add(c, node=f"n{i}")
-    r1 = resolve(s, "genetic_merge")
+    r1 = resolve(s, MergeSpec("genetic_merge"))
     assert cache_info().entries == 1          # one whole-model entry
-    r2 = resolve(s, "genetic_merge")
+    r2 = resolve(s, MergeSpec("genetic_merge"))
     assert r2 is r1                           # identical cached tree
     clear_cache()
 
@@ -245,7 +246,7 @@ def test_resolve_fetches_nothing_when_fully_cached():
     s = CRDTMergeState()
     for j in range(3):
         s = s.add(_leafy_model(j), node=f"n{j}")
-    warm = resolve(s, "ties")
+    warm = resolve(s, MergeSpec("ties"))
     bare = CRDTMergeState(s.adds, s.removes, s.vv, {})   # all blobs shed
     calls = []
 
@@ -253,11 +254,11 @@ def test_resolve_fetches_nothing_when_fully_cached():
         calls.append(eids)
         return {e: s.store[e] for e in eids}
 
-    out = resolve(bare, "ties", fetch=hook)
+    out = resolve(bare, MergeSpec("ties"), fetch=hook)
     assert calls == []
     assert _bytes_equal(out, warm)
     # without a hook it also succeeds — nothing is needed
-    assert _bytes_equal(resolve(bare, "ties"), warm)
+    assert _bytes_equal(resolve(bare, MergeSpec("ties")), warm)
     clear_cache()
 
 
@@ -270,7 +271,7 @@ def test_whole_model_warm_resolve_fetches_nothing():
     s = CRDTMergeState()
     for j in range(3):
         s = s.add(_leafy_model(j, n_leaves=3), node=f"n{j}")
-    warm = resolve(s, "star")
+    warm = resolve(s, MergeSpec("star"))
     bare = CRDTMergeState(s.adds, s.removes, s.vv, {})
     calls = []
 
@@ -278,7 +279,7 @@ def test_whole_model_warm_resolve_fetches_nothing():
         calls.append(eids)
         return {e: s.store[e] for e in eids}
 
-    out = resolve(bare, "star", fetch=hook)
+    out = resolve(bare, MergeSpec("star"), fetch=hook)
     assert calls == []
     assert out is warm                    # the cached whole-model tree
     clear_cache()
@@ -296,16 +297,16 @@ def test_resolve_fetches_only_when_leaves_miss():
     bare = CRDTMergeState(s.adds, s.removes, s.vv,
                           {e: p for e, p in s.store.items() if e != victim})
     with pytest.raises(KeyError):
-        resolve(bare, "ties")
+        resolve(bare, MergeSpec("ties"))
     calls = []
 
     def hook(eids):
         calls.append(eids)
         return {victim: payload}
 
-    out = resolve(bare, "ties", fetch=hook)
+    out = resolve(bare, MergeSpec("ties"), fetch=hook)
     assert calls == [(victim,)]
-    assert _bytes_equal(out, resolve(s, "ties", use_cache=False))
+    assert _bytes_equal(out, resolve(s, MergeSpec("ties"), use_cache=False))
     clear_cache()
 
 
@@ -355,33 +356,43 @@ def test_bounded_peak_stacked_bytes():
 
 
 def test_hierarchical_resolve_honors_fetch_and_reduction():
+    clear_cache()
     contribs = make_contribs(12, seed=21)   # 4 sub-groups: fold != tree
     states = [CRDTMergeState().add(c, node=f"n{i}")
               for i, c in enumerate(contribs)]
-    fold = hierarchical_resolve(states, "slerp", group_size=3)
-    tree = hierarchical_resolve(states, "slerp", group_size=3,
-                                reduction="tree")
+    fold = hierarchical_resolve(states, MergeSpec("slerp"), group_size=3)
+    tree = hierarchical_resolve(
+        states, MergeSpec("slerp", reduction="tree"), group_size=3)
     assert not _bytes_equal(fold, tree)           # reduction= is honored
-    assert _bytes_equal(tree, hierarchical_resolve(
-        states, "slerp", group_size=3, reduction="tree"))
-    # sharded store: one payload lives elsewhere -> fetch= pulls it
+    with pytest.warns(DeprecationWarning):        # string-form shim
+        legacy_tree = hierarchical_resolve(states, "slerp", group_size=3,
+                                           reduction="tree")
+    assert _bytes_equal(tree, legacy_tree)
+    # sharded store: one payload lives elsewhere -> fetch= pulls it.
+    # Hierarchical passes now cache by sub-root, so drop the warm cache
+    # first: a cached group output would (correctly) resolve with zero
+    # fetches, which is its own test below.
     victim_state = states[0]
     eid = canonical_order(victim_state)[0]
     payload = victim_state.store[eid]
     states[0] = CRDTMergeState(victim_state.adds, victim_state.removes,
                                victim_state.vv, {})
+    warm = hierarchical_resolve(states, MergeSpec("slerp"), group_size=3)
+    assert _bytes_equal(warm, fold)     # cache-complete: no payload need
+    clear_cache()
     with pytest.raises(KeyError):
-        hierarchical_resolve(states, "slerp", group_size=3)
+        hierarchical_resolve(states, MergeSpec("slerp"), group_size=3)
     calls = []
 
     def hook(eids):
         calls.append(eids)
         return {eid: payload}
 
-    fetched = hierarchical_resolve(states, "slerp", group_size=3,
+    fetched = hierarchical_resolve(states, MergeSpec("slerp"), group_size=3,
                                    fetch=hook)
     assert calls == [(eid,)]
     assert _bytes_equal(fetched, fold)
+    clear_cache()
 
 
 def test_pallas_batched_dispatch_matches_to_tolerance():
@@ -413,7 +424,7 @@ def test_pallas_outputs_never_poison_the_exact_cache():
     engine.merge(contribs, "task_arithmetic", base=base, lam=0.7,
                  pallas=True)                 # use_cache defaults True
     exact = engine.merge(contribs, "task_arithmetic", base=base, lam=0.7)
-    legacy = apply_strategy("task_arithmetic", contribs, base=base,
+    legacy = reference_apply("task_arithmetic", contribs, base=base,
                             lam=0.7)
     assert _bytes_equal(exact, legacy)
     clear_cache()
@@ -431,11 +442,11 @@ def test_syncnode_resolve_counts_blob_pulls():
     node = SyncNode("replica",
                     state=CRDTMergeState(s.adds, s.removes, s.vv, {}))
     node.fetch_hook = lambda _n, eids: {e: full_store[e] for e in eids}
-    cold = node.resolve("ties")
+    cold = node.resolve(MergeSpec("ties"))
     assert node.stats["resolve_blob_pulls"] == 2
     # payloads were fetched transiently, not retained: a warm re-resolve
     # of the same state needs nothing
-    warm = node.resolve("ties")
+    warm = node.resolve(MergeSpec("ties"))
     assert node.stats["resolve_blob_pulls"] == 2      # unchanged
     assert _bytes_equal(cold, warm)
     clear_cache()

@@ -8,7 +8,9 @@ from _hypothesis_compat import given, settings, st
 from repro.core.delta import apply_delta, delta_since
 from repro.core.gossip import GossipNetwork
 from repro.core.state import CRDTMergeState
-from repro.core.trust import TrustState, gated_resolve, gated_visible
+from repro.api import MergeSpec
+from repro.core.resolve import resolve
+from repro.core.trust import TrustState, gated_visible
 from repro.core.version_vector import VersionVector
 
 
@@ -75,8 +77,8 @@ def test_delta_gossip_equals_full_state_gossip():
                                 if i != j])
     assert full.converged() and delt.converged()
     assert full.roots()[0] == delt.roots()[0]
-    a = full.nodes[0].resolve("ties")
-    b = delt.nodes[0].resolve("ties")
+    a = full.nodes[0].resolve(MergeSpec("ties"))
+    b = delt.nodes[0].resolve(MergeSpec("ties"))
     assert bool(jnp.array_equal(a, b))
 
 
@@ -125,8 +127,9 @@ def test_trust_gating_converges_and_filters():
     assert merged_t == t2.merge(t1)
     vis = gated_visible(s, merged_t, threshold=0.5)
     assert bad not in vis and len(vis) == 4
-    r1 = gated_resolve(s, merged_t, "weight_average")
-    r2 = gated_resolve(s, t2.merge(t1), "weight_average")
+    gated = MergeSpec("weight_average", trust_threshold=0.5)
+    r1 = resolve(s, gated, trust=merged_t)
+    r2 = resolve(s, gated, trust=t2.merge(t1))
     assert bool(jnp.array_equal(r1, r2))
 
 

@@ -223,17 +223,19 @@ def test_invalid_bits_dropped_not_crashed():
 def test_resolve_cache_distinguishes_cfg_and_base():
     """Same state, different strategy knobs/base => different outputs,
     never a stale aliased cache entry."""
+    from repro.api import MergeSpec
     from repro.core.resolve import clear_cache, resolve
     rng = np.random.default_rng(21)
     s = CRDTMergeState()
     for _ in range(3):
         s = s.add(_payload(rng)["w"], node="a")
     clear_cache()
-    r_lo = resolve(s, "slerp", t=0.1)
-    r_hi = resolve(s, "slerp", t=0.9)
+    lo, hi = MergeSpec("slerp", {"t": 0.1}), MergeSpec("slerp", {"t": 0.9})
+    r_lo = resolve(s, lo)
+    r_hi = resolve(s, hi)
     assert not bool(jnp.array_equal(r_lo, r_hi))
-    assert resolve(s, "slerp", t=0.1) is r_lo      # both stay cached
-    assert resolve(s, "slerp", t=0.9) is r_hi
+    assert resolve(s, lo) is r_lo      # both stay cached
+    assert resolve(s, hi) is r_hi
     clear_cache()
 
 

@@ -292,18 +292,19 @@ def test_fetch_on_resolve_pulls_missing_payloads():
     client = g.nodes[n_storage]
     assert len(client.state.visible()) == n_storage
     assert not client.state.store                 # nothing resident
+    from repro.api import MergeSpec
+    from repro.core.resolve import resolve_spec
     with pytest.raises(KeyError):
         # without the hook, missing payloads are a hard error
-        from repro.core.resolve import resolve
-        resolve(client.state, "weight_average", use_cache=False)
-    out = client.resolve("weight_average", use_cache=False)
+        resolve_spec(client.state, MergeSpec("weight_average"),
+                     use_cache=False)
+    out = client.resolve(MergeSpec("weight_average"), use_cache=False)
     # byte-identical to a fully-resident replica's resolve
     full = g.nodes[0].state
     for i in range(1, n_storage):
         full = full.merge(g.nodes[i].state)
-    want = np.asarray(
-        __import__("repro.core.resolve", fromlist=["resolve"]).resolve(
-            full, "weight_average", use_cache=False)["w"])
+    want = np.asarray(resolve_spec(full, MergeSpec("weight_average"),
+                                   use_cache=False)["w"])
     assert np.asarray(out["w"]).tobytes() == want.tobytes()
     assert len(client.state.store) == n_storage   # payloads now resident
 

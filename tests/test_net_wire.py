@@ -250,6 +250,61 @@ def test_have_message_roundtrips():
         encode_message(HaveMap("b", 9, (HaveEntry("e" * 64, 0, b"\x01"),)))
 
 
+def test_resolve_spec_message_roundtrips():
+    """ResolveSpecMsg (0x1B) carries a MergeSpec's canonical encoding;
+    decode strict-validates, so malformed/undeclared specs are rejected
+    as WireError, never half-applied."""
+    from repro.api import MergeSpec
+    from repro.net.wire import ResolveSpecMsg
+    spec = MergeSpec("della", {"p_min": 0.25}, reduction="tree",
+                     trust_threshold=0.5, group_size=4)
+    out = roundtrip(ResolveSpecMsg("a", 3, spec))
+    assert out.sender == "a" and out.sid == 3
+    assert out.spec == spec and out.spec.digest() == spec.digest()
+    # v2 stamp (new frame type)
+    assert encode_message(ResolveSpecMsg("a", 3, spec))[2] == 2
+    # non-spec payloads and undecodable cfg are encode-time errors
+    with pytest.raises(WireError):
+        encode_message(ResolveSpecMsg("a", 3, "ties"))
+    lenient = MergeSpec.lenient("weight_average",
+                                {"knob": np.zeros(4, np.float32)})
+    with pytest.raises(WireError):
+        encode_message(ResolveSpecMsg("a", 3, lenient))
+    # a frame whose spec payload is not a MergeSpec encoding is a
+    # WireError on decode (checksum fine, content strict-validated)
+    import struct
+    import zlib
+
+    from repro.net import wire
+    def spec_frame(spec_bytes: bytes) -> bytes:
+        payload = bytearray()
+        payload += struct.pack(">I", 1) + b"a"     # sender
+        payload += struct.pack(">Q", 3)            # sid
+        payload += struct.pack(">I", len(spec_bytes)) + spec_bytes
+        return wire.HEADER.pack(wire.MAGIC, 2, wire.MSG_RESOLVE_SPEC,
+                                len(payload)) + bytes(payload) + \
+            wire.TRAILER.pack(zlib.crc32(bytes(payload)) & 0xFFFFFFFF)
+
+    with pytest.raises(WireError):
+        decode_message(spec_frame(b"garbage-not-a-spec"))
+    # a parse failure deep inside the spec TLV must also surface as
+    # WireError, never a bare ValueError/UnicodeDecodeError that would
+    # abort a receiver's delivery drain: non-numeric _V_INT payload
+    evil = bytearray(b"MS1")
+    evil += struct.pack(">I", 4) + b"ties"         # strategy
+    evil += struct.pack(">I", 4) + b"fold"         # reduction
+    evil += b"\x00\x00\x00"                        # no base/thresh/group
+    evil += struct.pack(">I", 1)                   # one cfg entry
+    evil += struct.pack(">I", 4) + b"trim"
+    evil += b"\x02" + struct.pack(">I", 3) + b"abc"   # _V_INT "abc"
+    with pytest.raises(WireError):
+        decode_message(spec_frame(bytes(evil)))
+    # invalid UTF-8 in the strategy name
+    evil2 = b"MS1" + struct.pack(">I", 2) + b"\xff\xfe"
+    with pytest.raises(WireError):
+        decode_message(spec_frame(evil2))
+
+
 def test_wire_version_stamps_preserve_v1_interop():
     """Two-directional mixed-version interop: legacy frame types keep
     the v1 stamp (an un-upgraded peer, which rejects version != 1, can

@@ -6,10 +6,12 @@ import numpy as np
 import pytest
 
 from conftest import make_contribs
-from repro.core.resolve import (IncrementalMean, apply_strategy,
-                                cache_info, canonical_order, clear_cache,
-                                hierarchical_resolve, reset_cache_limits,
-                                resolve, seed_from_root, set_cache_limit)
+from repro.api import MergeSpec
+from repro.core.resolve import (IncrementalMean, cache_info,
+                                canonical_order, clear_cache,
+                                hierarchical_resolve, reference_apply,
+                                reset_cache_limits, resolve,
+                                seed_from_root, set_cache_limit)
 from repro.core.state import CRDTMergeState
 from repro.strategies import get_strategy
 
@@ -33,8 +35,8 @@ def test_resolve_bitwise_identical_across_replicas():
     s1 = _state_with(contribs)
     s2 = _state_with(contribs[::-1])
     for strat in ("weight_average", "dare", "slerp", "evolutionary_merge"):
-        r1 = resolve(s1, strat, use_cache=False)
-        r2 = resolve(s2, strat, use_cache=False)
+        r1 = resolve(s1, MergeSpec(strat), use_cache=False)
+        r2 = resolve(s2, MergeSpec(strat), use_cache=False)
         assert bool(jnp.array_equal(r1, r2)), strat
 
 
@@ -56,8 +58,8 @@ def test_remark16_wrapper_transparency():
     seed = seed_from_root(s.merkle_root())
     for strat in ("weight_average", "ties", "dare", "slerp",
                   "task_arithmetic", "fisher_merge"):
-        wrapped = resolve(s, strat, use_cache=False)
-        direct = apply_strategy(strat, ordered, seed=seed)
+        wrapped = resolve(s, MergeSpec(strat), use_cache=False)
+        direct = reference_apply(strat, ordered, seed=seed)
         assert bool(jnp.array_equal(wrapped, direct)), strat
         assert np.asarray(wrapped).tobytes() == \
             np.asarray(direct).tobytes(), strat
@@ -66,10 +68,10 @@ def test_remark16_wrapper_transparency():
 def test_fold_vs_tree_reduction_both_deterministic():
     contribs = make_contribs(7)
     s = _state_with(contribs)
-    f1 = resolve(s, "slerp", reduction="fold", use_cache=False)
-    f2 = resolve(s, "slerp", reduction="fold", use_cache=False)
-    t1 = resolve(s, "slerp", reduction="tree", use_cache=False)
-    t2 = resolve(s, "slerp", reduction="tree", use_cache=False)
+    f1 = resolve(s, MergeSpec("slerp"), use_cache=False)
+    f2 = resolve(s, MergeSpec("slerp"), use_cache=False)
+    t1 = resolve(s, MergeSpec("slerp", reduction="tree"), use_cache=False)
+    t2 = resolve(s, MergeSpec("slerp", reduction="tree"), use_cache=False)
     assert bool(jnp.array_equal(f1, f2))
     assert bool(jnp.array_equal(t1, t2))
     assert not bool(jnp.array_equal(f1, t1))   # different (documented) order
@@ -82,7 +84,7 @@ def test_fold_weighting_imbalance_remark7():
     s = _state_with(ones)
     ids = canonical_order(s)
     ordered = [s.store[i] for i in ids]
-    folded = apply_strategy("slerp", ordered, seed=0)
+    folded = reference_apply("slerp", ordered, seed=0)
     last = ordered[-1]
     w_last = float(jnp.mean((folded / last)))
     # exponential-decay weighting: last element dominates vs uniform 1/k
@@ -94,8 +96,8 @@ def test_resolve_cache_hits():
     clear_cache()
     contribs = make_contribs(3)
     s = _state_with(contribs)
-    r1 = resolve(s, "weight_average")
-    r2 = resolve(s, "weight_average")
+    r1 = resolve(s, MergeSpec("weight_average"))
+    r2 = resolve(s, MergeSpec("weight_average"))
     assert r1 is r2                     # cached object
 
 
@@ -106,13 +108,13 @@ def test_resolve_cache_is_bounded_lru():
     set_cache_limit(3)
     try:
         states = [_state_with(make_contribs(2, seed=s)) for s in range(5)]
-        outs = [resolve(s, "weight_average") for s in states]
+        outs = [resolve(s, MergeSpec("weight_average")) for s in states]
         assert cache_info().entries == 3
         assert cache_info().entry_limit == 3
         # oldest two evicted; newest three still hits
         for s, out in zip(states[2:], outs[2:]):
-            assert resolve(s, "weight_average") is out
-        recomputed = resolve(states[0], "weight_average")
+            assert resolve(s, MergeSpec("weight_average")) is out
+        recomputed = resolve(states[0], MergeSpec("weight_average"))
         assert recomputed is not outs[0]            # evicted => recomputed
         assert np.asarray(recomputed).tobytes() == \
             np.asarray(outs[0]).tobytes()           # but byte-identical
@@ -128,11 +130,11 @@ def test_resolve_cache_lru_recency_order():
         s1 = _state_with(make_contribs(2, seed=10))
         s2 = _state_with(make_contribs(2, seed=11))
         s3 = _state_with(make_contribs(2, seed=12))
-        r1 = resolve(s1, "weight_average")
-        resolve(s2, "weight_average")
-        assert resolve(s1, "weight_average") is r1   # refresh s1's recency
-        resolve(s3, "weight_average")                # evicts s2, not s1
-        assert resolve(s1, "weight_average") is r1
+        r1 = resolve(s1, MergeSpec("weight_average"))
+        resolve(s2, MergeSpec("weight_average"))
+        assert resolve(s1, MergeSpec("weight_average")) is r1   # refresh s1's recency
+        resolve(s3, MergeSpec("weight_average"))                # evicts s2, not s1
+        assert resolve(s1, MergeSpec("weight_average")) is r1
         assert cache_info().entries == 2
     finally:
         reset_cache_limits()
@@ -145,13 +147,13 @@ def test_incremental_mean_matches_weight_average():
     inc = IncrementalMean()
     for eid in canonical_order(s):
         inc.add(eid, s.store[eid])
-    full = resolve(s, "weight_average", use_cache=False)
+    full = resolve(s, MergeSpec("weight_average"), use_cache=False)
     assert jnp.allclose(inc.value(), full, atol=1e-6)
 
 
 def test_incremental_mean_sync_repairs_divergence():
     """Regression: out-of-order arrivals and retractions silently
-    diverged the accumulator from resolve(state, "weight_average") —
+    diverged the accumulator from resolve(state, MergeSpec("weight_average")) —
     sync(state) re-folds from the canonical visible set."""
     contribs = make_contribs(5)
     s = _state_with(contribs)
@@ -162,7 +164,7 @@ def test_incremental_mean_sync_repairs_divergence():
     # one element is retracted after the fact — add() never sees it
     victim = canonical_order(s)[1]
     s = s.remove(victim, "n0")
-    full = resolve(s, "weight_average", use_cache=False)
+    full = resolve(s, MergeSpec("weight_average"), use_cache=False)
     assert not jnp.allclose(inc.value(), full, atol=1e-6)   # diverged
     assert inc.sync(s)                       # re-fold was needed
     assert inc.count() == len(canonical_order(s))
@@ -205,25 +207,25 @@ def test_resolve_cache_distinguishes_large_array_cfg():
     mask_b[5_000] = 1.0
     assert repr(mask_a) == repr(mask_b)      # the aliasing precondition
     clear_cache()
-    r_a = resolve(s, "weight_average", knob=mask_a)
-    r_b = resolve(s, "weight_average", knob=mask_b)
+    r_a = resolve(s, MergeSpec.lenient("weight_average", {"knob": mask_a}))
+    r_b = resolve(s, MergeSpec.lenient("weight_average", {"knob": mask_b}))
     assert r_a is not r_b                    # distinct cache entries
-    assert resolve(s, "weight_average", knob=mask_a) is r_a
-    assert resolve(s, "weight_average", knob=mask_b) is r_b
+    assert resolve(s, MergeSpec.lenient("weight_average", {"knob": mask_a})) is r_a
+    assert resolve(s, MergeSpec.lenient("weight_average", {"knob": mask_b})) is r_b
     clear_cache()
 
 
 def test_hierarchical_resolve_deterministic():
     contribs = make_contribs(9)
     states = [_state_with([c]) for c in contribs]
-    r1 = hierarchical_resolve(states, "weight_average", group_size=3)
-    r2 = hierarchical_resolve(states[::-1], "weight_average", group_size=3)
+    r1 = hierarchical_resolve(states, MergeSpec("weight_average"), group_size=3)
+    r2 = hierarchical_resolve(states[::-1], MergeSpec("weight_average"), group_size=3)
     assert bool(jnp.array_equal(r1, r2))
 
 
 def test_resolve_empty_raises():
     with pytest.raises(ValueError):
-        resolve(CRDTMergeState(), "weight_average")
+        resolve(CRDTMergeState(), MergeSpec("weight_average"))
 
 
 def test_resolve_on_pytrees():
@@ -232,5 +234,5 @@ def test_resolve_on_pytrees():
         return {"a": jnp.asarray(rng.standard_normal((4, 4)), jnp.float32),
                 "b": {"w": jnp.asarray(rng.standard_normal(7), jnp.float32)}}
     s = _state_with([tree(i) for i in range(3)])
-    out = resolve(s, "ties", use_cache=False)
+    out = resolve(s, MergeSpec("ties"), use_cache=False)
     assert out["a"].shape == (4, 4) and out["b"]["w"].shape == (7,)

@@ -28,6 +28,51 @@ def test_all_26_strategies_registered():
     assert set(list_strategies()) == set(TABLE3_EXPECTED)
 
 
+# ---------------------------------------------------------------------------
+# cfg schema audit (repro.api MergeSpec validation contract)
+# ---------------------------------------------------------------------------
+
+
+def _signature_schema(strat):
+    """The schema implied by the leaf function's keyword signature:
+    every defaulted parameter after the positional (s, b[, key])
+    tensors. This is ground truth for what the strategy consumes."""
+    import inspect
+    sig = inspect.signature(strat.leaf_fn)
+    skip = 3 if strat.needs_key else 2
+    schema = {}
+    for i, (pname, p) in enumerate(sig.parameters.items()):
+        if i < skip or p.kind is inspect.Parameter.VAR_KEYWORD:
+            continue
+        schema[pname] = (type(p.default), p.default)
+    return schema
+
+
+@pytest.mark.parametrize("name", sorted(TABLE3_EXPECTED))
+def test_declared_cfg_schema_matches_leaf_signature(name):
+    """Every catalog strategy declares a cfg schema, and the declaration
+    mirrors the leaf function's keyword signature exactly — names,
+    types, AND default values. (Defaults matter doubly: MergeSpec
+    canonicalizes declared defaults into the digest, so a drifted
+    default would silently change both cache keys and outputs.)"""
+    strat = get_strategy(name)
+    assert strat.cfg_schema is not None, f"{name} declares no cfg schema"
+    assert strat.cfg_schema == _signature_schema(strat), name
+
+
+def test_schemas_cover_audit_kwargs():
+    """The kwargs this audit suite itself exercises are all declared."""
+    assert "trim" in get_strategy("ties").cfg_schema
+    assert "t" in get_strategy("slerp").cfg_schema
+    assert "lam" in get_strategy("task_arithmetic").cfg_schema
+    from repro.api import MergeSpec, SpecError
+    with pytest.raises(SpecError, match="did you mean 'trim'"):
+        MergeSpec("ties", {"tirm": 0.2})
+    with pytest.raises(SpecError, match="did you mean 'p_min'"):
+        MergeSpec("della", {"p_mn": 0.2})
+    assert MergeSpec("slerp", {"t": 0.3}).cfg_dict()["t"] == 0.3
+
+
 @pytest.mark.parametrize("name", sorted(TABLE3_EXPECTED))
 def test_table3_raw_pattern(name, tensors):
     r = audit_raw(name, tensors)
