@@ -140,5 +140,23 @@ def main(quick: bool = True) -> List[Row]:
 
 
 if __name__ == "__main__":
-    for r in main(quick="--full" not in sys.argv):
+    quick = "--full" not in sys.argv
+    trace_out = ""
+    if "--trace-out" in sys.argv:
+        trace_out = sys.argv[sys.argv.index("--trace-out") + 1]
+    tracer = None
+    if trace_out:
+        from repro.obs import Tracer, default_registry, set_tracer
+        default_registry().clear()
+        tracer = Tracer(bench="gossip", quick=quick)
+        set_tracer(tracer)
+    for r in main(quick):
         print(",".join(str(x) for x in r))
+    if trace_out:
+        from repro.obs import (default_registry, set_tracer, to_events,
+                               write_jsonl)
+        set_tracer(None)
+        events = to_events(tracer=tracer, registry=default_registry(),
+                           meta={"bench": "gossip", "quick": quick})
+        n = write_jsonl(trace_out, events)
+        print(f"# trace: {n} events -> {trace_out}", file=sys.stderr)

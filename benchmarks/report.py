@@ -108,9 +108,30 @@ def roofline_table(cells: List[Dict]) -> str:
     return "\n".join(out)
 
 
+def obs_table(path: str, prefix: str = "") -> str:
+    """Telemetry appendix: metric events from a repro.obs JSONL trace
+    (`bench_gossip --trace-out`, `Replica.trace_to`) as markdown, with
+    units inferred by the repro.obs.export.report_rows adapter."""
+    from repro.obs.export import report_rows
+    snapshot: Dict[str, float] = {}
+    with open(path) as f:
+        for line in f:
+            ev = json.loads(line)
+            if ev.get("kind") == "metric":
+                snapshot[ev["name"]] = ev["value"]
+    out = ["| metric | value | unit |", "|---|---|---|"]
+    for name, value, note in report_rows(snapshot, prefix):
+        sval = f"{int(value)}" if float(value).is_integer() \
+            else f"{value:.6g}"
+        out.append(f"| `{name}` | {sval} | {note} |")
+    return "\n".join(out)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--obs", default="",
+                    help="JSONL telemetry trace to append as a table")
     args = ap.parse_args()
     cells = load(args.dir)
     print("## Single-pod 16x16 (256 chips)\n")
@@ -119,6 +140,9 @@ def main() -> None:
     print(dryrun_table(cells, 3))
     print("\n## Roofline (single-pod)\n")
     print(roofline_table(cells))
+    if args.obs:
+        print("\n## Telemetry\n")
+        print(obs_table(args.obs))
 
 
 if __name__ == "__main__":

@@ -33,6 +33,7 @@ from repro.core.engine import CacheInfo, EngineCache
 from repro.core.hashing import pytree_digest
 from repro.core.state import CRDTMergeState
 from repro.core.trust import TrustState
+from repro.obs import MetricsRegistry
 
 __all__ = ["Replica"]
 
@@ -43,11 +44,18 @@ class Replica:
     def __init__(self, node_id: str = "local", *,
                  state: Optional[CRDTMergeState] = None,
                  trust: Optional[TrustState] = None,
-                 cache: Optional[EngineCache] = None):
+                 cache: Optional[EngineCache] = None,
+                 obs: Optional[MetricsRegistry] = None):
         self.node_id = node_id
         self._state = state if state is not None else CRDTMergeState()
         self.trust = trust
-        self.cache = cache if cache is not None else EngineCache()
+        # per-replica telemetry scope: a fresh cache shares the
+        # replica's registry, so engine counters surface through
+        # metrics(); an injected cache keeps its own (its owner may
+        # already be watching it — metrics() merges both).
+        self.obs = obs if obs is not None else MetricsRegistry()
+        self.cache = cache if cache is not None else EngineCache(
+            obs=self.obs)
         self._bases: Dict[str, Any] = {}
         self._node = None                  # attached repro.net.SyncNode
 
@@ -207,6 +215,44 @@ class Replica:
 
     def clear_cache(self) -> None:
         self.cache.clear()
+
+    # --------------------------------------------------- observability
+
+    def metrics(self, *, deterministic_only: bool = False
+                ) -> Dict[str, float]:
+        """Snapshot of every metric series in this replica's scope:
+        its own registry, its engine cache's, and — when attached — the
+        sync node's. With `deterministic_only`, just the aggregates
+        that are a pure function of the converged contribution set
+        (identical across replicas and delivery orders; what the SEC
+        telemetry tests compare)."""
+        scopes = [self.obs]
+        if self.cache.obs is not self.obs:
+            scopes.append(self.cache.obs)
+        node_obs = getattr(self._node, "obs", None)
+        if node_obs is not None and node_obs is not self.obs:
+            scopes.append(node_obs)
+        if deterministic_only:
+            out: Dict[str, float] = {}
+            for s in scopes:
+                out.update(s.aggregate())
+            return out
+        return scopes[0].merged(*scopes[1:])
+
+    def trace_to(self, path: str) -> int:
+        """Export this replica's telemetry as JSONL: one meta header,
+        the process tracer's finished spans (if tracing is on), then
+        every metric series from metrics(). Returns lines written."""
+        from repro.obs import current_tracer, to_events, write_jsonl
+        from repro.obs.trace import NULL_TRACER
+        tracer = current_tracer()
+        events = to_events(
+            tracer=None if tracer is NULL_TRACER else tracer,
+            meta={"node": self.node_id})
+        for name, value in sorted(self.metrics().items()):
+            events.append({"kind": "metric", "name": name,
+                           "value": value})
+        return write_jsonl(path, events)
 
     def __repr__(self) -> str:
         where = f" via {self._node.node_id!r}" if self._node else ""

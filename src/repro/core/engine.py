@@ -67,7 +67,7 @@ default cache — prefer the per-replica methods in new code.
 from __future__ import annotations
 
 import hashlib
-from collections import Counter, OrderedDict
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import (Any, Dict, List, NamedTuple, Optional, Sequence,
                     Tuple)
@@ -77,6 +77,7 @@ import jax.numpy as jnp
 
 from repro.api.spec import MergeSpec, coerce_spec
 from repro.core.hashing import pytree_digest, tensor_digest
+from repro.obs import CounterView, MetricsRegistry, span
 from repro.strategies import get_strategy
 from repro.strategies.base import Strategy
 
@@ -216,33 +217,36 @@ def plan_merge(metas: Sequence[ContribMeta],
                 or m.dtypes != first.dtypes:
             raise ValueError("contributions disagree on tree structure")
     k = len(metas)
-    frag = spec.cache_fragment(
-        with_reduction=(strat.binary_only and k > 2))
-    if base is None:
-        base_frags: Sequence[bytes] = [_NO_BASE] * first.leaf_count
-    else:
-        base_leaves = first.treedef.flatten_up_to(base)
-        base_frags = [tensor_digest(bl) for bl in base_leaves]
-    paths = _leaf_paths(first.treedef)
-    tasks: List[LeafTask] = []
-    for i in range(first.leaf_count):
-        h = hashlib.sha256(_DOMAIN_LEAF)
-        h.update(frag)
-        h.update(base_frags[i])
-        h.update(k.to_bytes(4, "big"))
-        for m in metas:
-            h.update(m.digests[i])
-        if strat.needs_key:
-            # key-consuming strategies: output depends on the Merkle-
-            # derived seed and the global leaf index (leafwise fold_in)
-            h.update(str(seed).encode())
-            h.update(i.to_bytes(4, "big"))
-        nbytes = jnp.dtype(first.dtypes[i]).itemsize
-        for d in first.shapes[i]:
-            nbytes *= d
-        tasks.append(LeafTask(index=i, path=paths[i], sub_root=h.digest(),
-                              shape=first.shapes[i], dtype=first.dtypes[i],
-                              stacked_nbytes=k * nbytes))
+    with span("engine.plan", strategy=spec.strategy, k=k,
+              leaves=first.leaf_count):
+        frag = spec.cache_fragment(
+            with_reduction=(strat.binary_only and k > 2))
+        if base is None:
+            base_frags: Sequence[bytes] = [_NO_BASE] * first.leaf_count
+        else:
+            base_leaves = first.treedef.flatten_up_to(base)
+            base_frags = [tensor_digest(bl) for bl in base_leaves]
+        paths = _leaf_paths(first.treedef)
+        tasks: List[LeafTask] = []
+        for i in range(first.leaf_count):
+            h = hashlib.sha256(_DOMAIN_LEAF)
+            h.update(frag)
+            h.update(base_frags[i])
+            h.update(k.to_bytes(4, "big"))
+            for m in metas:
+                h.update(m.digests[i])
+            if strat.needs_key:
+                # key-consuming strategies: output depends on the Merkle-
+                # derived seed and the global leaf index (leafwise fold_in)
+                h.update(str(seed).encode())
+                h.update(i.to_bytes(4, "big"))
+            nbytes = jnp.dtype(first.dtypes[i]).itemsize
+            for d in first.shapes[i]:
+                nbytes *= d
+            tasks.append(
+                LeafTask(index=i, path=paths[i], sub_root=h.digest(),
+                         shape=first.shapes[i], dtype=first.dtypes[i],
+                         stacked_nbytes=k * nbytes))
     return MergePlan(strategy=spec.strategy, reduction=spec.reduction,
                      seed=seed, k=k, cfg=spec.cfg,
                      treedef=first.treedef, tasks=tuple(tasks), spec=spec)
@@ -303,18 +307,26 @@ class EngineCache:
     two replicas in a process no longer alias each other's LRU order,
     byte budget, or hit/miss counters. The module-level functions below
     keep operating on one shared `default_cache()` for compatibility.
+
+    Counters live on a per-cache `repro.obs` registry (`self.obs`,
+    injectable for Replica-scoped telemetry); `self.stats` remains a
+    Counter-shaped read-through view over the
+    `engine_events_total{event=...}` series, so existing call sites and
+    tests are unchanged.
     """
 
-    __slots__ = ("_data", "_bytes", "entry_limit", "byte_limit", "stats",
-                 "peak_stacked")
+    __slots__ = ("_data", "_bytes", "entry_limit", "byte_limit", "obs",
+                 "stats", "peak_stacked")
 
     def __init__(self, entries: int = _DEFAULT_ENTRY_LIMIT, *,
-                 bytes: int = _DEFAULT_BYTE_LIMIT):  # noqa: A002
+                 bytes: int = _DEFAULT_BYTE_LIMIT,  # noqa: A002
+                 obs: Optional[MetricsRegistry] = None):
         self._data: "OrderedDict[bytes, Tuple[Any, int]]" = OrderedDict()
         self._bytes = 0
         self.entry_limit = entries
         self.byte_limit = bytes
-        self.stats: Counter = Counter()
+        self.obs = obs if obs is not None else MetricsRegistry()
+        self.stats = CounterView(self.obs, "engine_events_total")
         self.peak_stacked = 0         # executor high-water mark
 
     # -------------------------------------------------------------- limits
@@ -342,14 +354,20 @@ class EngineCache:
     def clear(self) -> None:
         self._data.clear()
         self._bytes = 0
+        self.obs.gauge("engine_cache_resident_bytes").set(0)
 
     # ------------------------------------------------------------- entries
 
     def _evict(self) -> None:
+        evicted = 0
         while self._data and (len(self._data) > self.entry_limit
                               or self._bytes > self.byte_limit):
             _, (_, nbytes) = self._data.popitem(last=False)
             self._bytes -= nbytes
+            evicted += 1
+        if evicted:
+            self.stats["evictions"] += evicted
+            self.obs.gauge("engine_cache_resident_bytes").set(self._bytes)
 
     def get(self, key: bytes) -> Optional[Any]:
         if key in self._data:
@@ -363,6 +381,7 @@ class EngineCache:
         self._data[key] = (value, nbytes)
         self._data.move_to_end(key)
         self._bytes += nbytes
+        self.obs.gauge("engine_cache_resident_bytes").set(self._bytes)
         self._evict()
 
     def __contains__(self, key: bytes) -> bool:
@@ -399,9 +418,11 @@ class EngineCache:
     def reset_exec_stats(self) -> None:
         self.stats.clear()
         self.peak_stacked = 0
+        self.obs.gauge("engine_peak_stacked_bytes").set(0)
 
     def note_stacked(self, nbytes: int) -> None:
         self.peak_stacked = max(self.peak_stacked, nbytes)
+        self.obs.gauge("engine_peak_stacked_bytes").set_max(nbytes)
 
 
 _DEFAULT_CACHE = EngineCache()
@@ -511,6 +532,7 @@ def execute_plan(plan: MergePlan, contribs: Optional[Sequence[Any]], *,
     cache = _cache_or_default(cache)
     strat = get_strategy(plan.strategy)
     outputs: List[Optional[Any]] = [None] * len(plan.tasks)
+    cache.obs.gauge("engine_plan_leaves").set(len(plan.tasks))
 
     misses: List[LeafTask] = []
     for t in plan.tasks:
@@ -522,35 +544,38 @@ def execute_plan(plan: MergePlan, contribs: Optional[Sequence[Any]], *,
             misses.append(t)
             if use_cache:
                 cache.stats["misses"] += 1
-    if misses:
-        if contribs is None:
-            raise KeyError(
-                f"{len(misses)} leaf tasks miss the cache but no payloads "
-                "were supplied; fetch the contribution blobs first")
-        if len(contribs) != plan.k:
-            raise ValueError(f"plan expects {plan.k} contributions, "
-                             f"got {len(contribs)}")
-        leaves = [plan.treedef.flatten_up_to(c) for c in contribs]
-        base_leaves = (plan.treedef.flatten_up_to(base)
-                       if base is not None else None)
-        if max_batch_bytes is None:
-            max_batch_bytes = max(t.stacked_nbytes for t in plan.tasks)
-        for group in _dispatch_groups(strat, misses, max_batch_bytes):
-            approximate = False
-            if len(group) == 1:
-                out = [_execute_leaf(strat, plan, group[0], leaves,
-                                     base_leaves, cache)]
-            else:
-                out, approximate = _execute_batch(
-                    strat, plan, group, leaves, base_leaves, cache,
-                    pallas=pallas)
-                cache.stats["batched_leaves"] += len(group)
-            cache.stats["dispatches"] += 1
-            cache.stats["leaf_tasks"] += len(group)
-            for t, o in zip(group, out):
-                outputs[t.index] = o
-                if use_cache and not approximate:
-                    cache.put(t.sub_root, o, int(o.nbytes))
+    with span("engine.execute", strategy=plan.strategy, k=plan.k,
+              leaves=len(plan.tasks), misses=len(misses)):
+        if misses:
+            if contribs is None:
+                raise KeyError(
+                    f"{len(misses)} leaf tasks miss the cache but no "
+                    "payloads were supplied; fetch the contribution "
+                    "blobs first")
+            if len(contribs) != plan.k:
+                raise ValueError(f"plan expects {plan.k} contributions, "
+                                 f"got {len(contribs)}")
+            leaves = [plan.treedef.flatten_up_to(c) for c in contribs]
+            base_leaves = (plan.treedef.flatten_up_to(base)
+                           if base is not None else None)
+            if max_batch_bytes is None:
+                max_batch_bytes = max(t.stacked_nbytes for t in plan.tasks)
+            for group in _dispatch_groups(strat, misses, max_batch_bytes):
+                approximate = False
+                if len(group) == 1:
+                    out = [_execute_leaf(strat, plan, group[0], leaves,
+                                         base_leaves, cache)]
+                else:
+                    out, approximate = _execute_batch(
+                        strat, plan, group, leaves, base_leaves, cache,
+                        pallas=pallas)
+                    cache.stats["batched_leaves"] += len(group)
+                cache.stats["dispatches"] += 1
+                cache.stats["leaf_tasks"] += len(group)
+                for t, o in zip(group, out):
+                    outputs[t.index] = o
+                    if use_cache and not approximate:
+                        cache.put(t.sub_root, o, int(o.nbytes))
     return jax.tree_util.tree_unflatten(plan.treedef, outputs)
 
 
@@ -761,6 +786,7 @@ def merge(contribs: Sequence[Any], strategy_name: Optional[str] = None, *,
     cache = _cache_or_default(cache)
     strat = get_strategy(spec.strategy)
     if strat.whole_model or strat.leaf_fn is None:
+        cache.stats["whole_model_dispatches"] += 1
         if contrib_ids is not None:
             digests = [bytes.fromhex(e) if _is_hex(e) else e.encode()
                        for e in contrib_ids]
@@ -774,14 +800,17 @@ def merge(contribs: Sequence[Any], strategy_name: Optional[str] = None, *,
                 return hit
             cache.stats["misses"] += 1
         from repro.core.resolve import reference_apply
-        out = reference_apply(spec.strategy, list(contribs), base=base,
-                              seed=seed, reduction=spec.reduction,
-                              **spec.cfg_dict())
+        with span("engine.whole_model", strategy=spec.strategy,
+                  k=len(contribs)):
+            out = reference_apply(spec.strategy, list(contribs), base=base,
+                                  seed=seed, reduction=spec.reduction,
+                                  **spec.cfg_dict())
         if use_cache:
             nbytes = sum(int(l.nbytes)
                          for l in jax.tree_util.tree_leaves(out))
             cache.put(key, out, nbytes)
         return out
+    cache.stats["planned_merges"] += 1
     plan = plan_for(contribs, contrib_ids=contrib_ids,
                     base=base, seed=seed, spec=spec)
     return execute_plan(plan, contribs, base=base, use_cache=use_cache,

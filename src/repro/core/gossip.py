@@ -32,6 +32,7 @@ from repro.core.delta import Delta, delta_since, apply_delta
 from repro.core.resolve import resolve, resolve_spec
 from repro.core.state import CRDTMergeState
 from repro.core.version_vector import VersionVector
+from repro.obs import MetricsRegistry
 
 
 class GossipNode:
@@ -87,7 +88,8 @@ class GossipNode:
 class GossipNetwork:
     def __init__(self, n: int, seed: int = 0, use_deltas: bool = False,
                  transport=None, compress_payloads: bool = False,
-                 placement=None):
+                 placement=None, obs: Optional[MetricsRegistry] = None):
+        self.obs = obs if obs is not None else MetricsRegistry()
         self.nodes = [GossipNode(f"node{i:03d}") for i in range(n)]
         self.rng = random.Random(seed)
         self.use_deltas = use_deltas
@@ -124,11 +126,18 @@ class GossipNetwork:
         """Payloads `dst_id` should receive under the placement (all of
         them when no placement is configured)."""
         if self.placement is None:
+            self.obs.counter("gossip_payloads_shipped_total").inc(
+                len(payloads))
             return payloads
-        return {eid: p for eid, p in payloads.items()
-                if self.placement.is_holder(dst_id, eid)}
+        placed = {eid: p for eid, p in payloads.items()
+                  if self.placement.is_holder(dst_id, eid)}
+        self.obs.counter("gossip_payloads_shipped_total").inc(len(placed))
+        self.obs.counter("gossip_payloads_filtered_total").inc(
+            len(payloads) - len(placed))
+        return placed
 
     def _send(self, i: int, j: int):
+        self.obs.counter("gossip_sends_total").inc()
         src, dst = self.nodes[i], self.nodes[j]
         if self.transport is not None:
             self._send_wire(src, dst)
@@ -197,6 +206,7 @@ class GossipNetwork:
     def all_pairs_round(self, order: Optional[List[Tuple[int, int]]] = None):
         """The paper's prototype: every directed pair, in a (possibly
         shuffled) order."""
+        self.obs.counter("gossip_rounds_total").inc(protocol="all_pairs")
         n = len(self.nodes)
         pairs = order or [(i, j) for i in range(n) for j in range(n)
                           if i != j]
@@ -208,6 +218,7 @@ class GossipNetwork:
         self.drain()
 
     def epidemic_round(self, fanout: int = 3):
+        self.obs.counter("gossip_rounds_total").inc(protocol="epidemic")
         n = len(self.nodes)
         for i in range(n):
             peers = [j for j in range(n) if j != i and self._can_send(i, j)]

@@ -57,6 +57,7 @@ from repro.core.engine import (CacheInfo, EngineCache,  # noqa: F401
                                reset_cache_limits, set_cache_limit)
 from repro.core.merkle import merkle_root
 from repro.core.state import CRDTMergeState
+from repro.obs import layer1_timer, span
 from repro.strategies import get_strategy
 
 FetchHook = Callable[[Tuple[str, ...]], Dict[str, Any]]
@@ -91,7 +92,8 @@ def _fetch_into(store: Dict[str, Any], absent: List[str],
         raise KeyError(f"store lacks payloads for {list(absent)}; "
                        "sync blobs first or pass a fetch hook")
     store = dict(store)
-    store.update(fetch(tuple(absent)))
+    with span("engine.fetch", n=len(absent)):
+        store.update(fetch(tuple(absent)))
     still = [i for i in absent if i not in store]
     if still:
         raise KeyError(f"fetch hook could not obtain {still}")
@@ -244,19 +246,25 @@ def resolve_spec(state: CRDTMergeState, spec: MergeSpec, *,
                 raise SpecError(
                     f"base payload digest {got[:16]}… does not match "
                     f"the spec's base_ref {spec.base_ref[:16]}…")
-    if spec.trust_threshold is not None:
-        from repro.core.trust import TrustState, gated_visible
-        t = trust if trust is not None else TrustState()
-        ids = sorted(gated_visible(state, t, spec.trust_threshold))
-        if not ids:
-            raise ValueError("all contributions gated out")
-        root = merkle_root([bytes.fromhex(i) for i in ids])
-    else:
-        ids = canonical_order(state)
-        if not ids:
-            raise ValueError("resolve() requires a non-empty visible set")
-        root = state.merkle_root()
-    seed = seed_from_root(root)
+    # Layer-1 slice of the resolve — visibility gate, canonical order,
+    # Merkle root, seed derivation — timed into the overhead histogram
+    # backing the paper's <0.5 ms claim (no-op clockless path when obs
+    # is disabled).
+    with layer1_timer():
+        if spec.trust_threshold is not None:
+            from repro.core.trust import TrustState, gated_visible
+            t = trust if trust is not None else TrustState()
+            ids = sorted(gated_visible(state, t, spec.trust_threshold))
+            if not ids:
+                raise ValueError("all contributions gated out")
+            root = merkle_root([bytes.fromhex(i) for i in ids])
+        else:
+            ids = canonical_order(state)
+            if not ids:
+                raise ValueError(
+                    "resolve() requires a non-empty visible set")
+            root = state.merkle_root()
+        seed = seed_from_root(root)
     if spec.group_size is not None:
         return _grouped_resolve(state.store, ids, spec, seed, base=base,
                                 fetch=fetch, cache=cache,

@@ -338,8 +338,17 @@ def main() -> None:
     ap.add_argument("--trim-method", default="quantile",
                     choices=["quantile", "histogram"])
     ap.add_argument("--out", default="experiments/dryrun")
+    vb = ap.add_mutually_exclusive_group()
+    vb.add_argument("--quiet", action="store_true",
+                    help="no stdout output")
+    vb.add_argument("--verbose", action="store_true",
+                    help="print structured JSON events instead of text")
+    ap.add_argument("--events-out", default="",
+                    help="also write the event stream to this JSONL file")
     args = ap.parse_args()
 
+    from repro.obs import EventLog
+    log = EventLog.from_args(args)
     archs = list_archs() if args.arch == "all" else [args.arch]
     shapes = (list(SHAPES) if args.shape == "all" else [args.shape])
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
@@ -352,15 +361,22 @@ def main() -> None:
                     multi_pod=mp, out_dir=args.out,
                     trim_method=args.trim_method)
                 if r["status"] == "OK":
-                    print(f"[OK]   {arch:24s} {r['shape']:20s} "
-                          f"{r['variant']:10s} "
-                          f"bytes/dev={r['bytes_accessed_per_device']:.3e} "
-                          f"(bound {r['bytes_lower_bound_per_device']:.3e}) "
-                          f"coll={r['collective_bytes_per_device']/2**20:.1f}MiB",
-                          flush=True)
+                    log.emit(
+                        "cell_ok",
+                        f"[OK]   {arch:24s} {r['shape']:20s} "
+                        f"{r['variant']:10s} "
+                        f"bytes/dev={r['bytes_accessed_per_device']:.3e} "
+                        f"(bound {r['bytes_lower_bound_per_device']:.3e}) "
+                        f"coll={r['collective_bytes_per_device']/2**20:.1f}MiB",
+                        arch=arch, kind="merge", status="OK")
                 else:
                     n_fail += 1
-                    print(f"[FAIL] {arch:24s} merge {r['error']}", flush=True)
+                    log.emit("cell_fail",
+                             f"[FAIL] {arch:24s} merge {r['error']}",
+                             arch=arch, kind="merge", status="FAIL",
+                             error=r["error"])
+        if args.events_out:
+            log.dump(args.events_out)
         if n_fail:
             raise SystemExit(1)
         return
@@ -373,17 +389,27 @@ def main() -> None:
                 tag = f"{arch:24s} {shape_name:12s} {'2x16x16' if mp else '16x16':8s}"
                 if r["status"] == "OK":
                     n_ok += 1
-                    print(f"[OK]   {tag} flops/dev={r['flops_per_device']:.3e} "
-                          f"peak={r['peak_memory_per_device']/2**30:.2f}GiB "
-                          f"coll={r['collective_bytes_per_device']/2**20:.1f}MiB "
-                          f"compile={r['compile_s']:.1f}s", flush=True)
+                    log.emit(
+                        "cell_ok",
+                        f"[OK]   {tag} flops/dev={r['flops_per_device']:.3e} "
+                        f"peak={r['peak_memory_per_device']/2**30:.2f}GiB "
+                        f"coll={r['collective_bytes_per_device']/2**20:.1f}MiB "
+                        f"compile={r['compile_s']:.1f}s",
+                        arch=arch, shape=shape_name, status="OK")
                 elif r["status"] == "SKIP":
                     n_skip += 1
-                    print(f"[SKIP] {tag} {r['reason']}", flush=True)
+                    log.emit("cell_skip", f"[SKIP] {tag} {r['reason']}",
+                             arch=arch, shape=shape_name, status="SKIP",
+                             reason=r["reason"])
                 else:
                     n_fail += 1
-                    print(f"[FAIL] {tag} {r['error']}", flush=True)
-    print(f"done: {n_ok} ok, {n_skip} skip, {n_fail} fail")
+                    log.emit("cell_fail", f"[FAIL] {tag} {r['error']}",
+                             arch=arch, shape=shape_name, status="FAIL",
+                             error=r["error"])
+    log.emit("done", f"done: {n_ok} ok, {n_skip} skip, {n_fail} fail",
+             ok=n_ok, skip=n_skip, fail=n_fail)
+    if args.events_out:
+        log.dump(args.events_out)
     if n_fail:
         raise SystemExit(1)
 

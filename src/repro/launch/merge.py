@@ -8,6 +8,12 @@
 Every input checkpoint becomes one OR-Set contribution; the resolve is
 deterministic in the contribution SET (order/duplication of --inputs is
 irrelevant by construction — the point of the paper).
+
+Output goes through the `repro.obs` structured event log: the default
+verbosity prints exactly the legacy lines, `--verbose` prints the JSON
+events instead, `--quiet` prints nothing, and `--events-out FILE`
+additionally dumps the full event stream as JSONL regardless of
+verbosity.
 """
 from __future__ import annotations
 
@@ -20,6 +26,7 @@ from repro.configs import get_config, smoke_config
 from repro.api import MergeSpec, Replica
 from repro.core.resolve import seed_from_root
 from repro.models.model import Model
+from repro.obs import EventLog
 from repro.train.step import init_train_state
 
 
@@ -33,6 +40,13 @@ def main() -> None:
                     help="base checkpoint for task-vector strategies")
     ap.add_argument("--out", required=True)
     ap.add_argument("--node", default="merge-cli")
+    vb = ap.add_mutually_exclusive_group()
+    vb.add_argument("--quiet", action="store_true",
+                    help="no stdout output")
+    vb.add_argument("--verbose", action="store_true",
+                    help="print structured JSON events instead of text")
+    ap.add_argument("--events-out", default="",
+                    help="also write the event stream to this JSONL file")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -40,11 +54,16 @@ def main() -> None:
     like = init_train_state(model, jax.random.PRNGKey(0))
 
     replica = Replica(args.node)
+    log = EventLog.from_args(args, registry=replica.obs)
     for path in args.inputs:
         ckpt, meta = restore_checkpoint(path, like)
-        replica.contribute(ckpt["params"])
-        print(f"added {path} (data_step={meta.get('data_step')}) "
-              f"visible={len(replica.visible())}")
+        eid = replica.contribute(ckpt["params"])
+        log.emit("contribution_added",
+                 f"added {path} (data_step={meta.get('data_step')}) "
+                 f"visible={len(replica.visible())}",
+                 path=path, eid=eid,
+                 data_step=meta.get("data_step"),
+                 visible=len(replica.visible()))
 
     base = None
     if args.base:
@@ -52,19 +71,25 @@ def main() -> None:
         base = base_ckpt["params"]
 
     merged = replica.resolve(MergeSpec(args.strategy), base=base)
-    print(f"resolved {len(replica.visible())} contributions with "
-          f"{args.strategy} (root {replica.merkle_root().hex()[:16]}…, "
-          f"seed {seed_from_root(replica.merkle_root())})")
+    root = replica.merkle_root()
+    log.emit("resolved",
+             f"resolved {len(replica.visible())} contributions with "
+             f"{args.strategy} (root {root.hex()[:16]}…, "
+             f"seed {seed_from_root(root)})",
+             strategy=args.strategy, k=len(replica.visible()),
+             root=root.hex(), seed=seed_from_root(root))
 
     out_state = dict(like)
     out_state["params"] = merged
     path = save_checkpoint(args.out, out_state, 0,
                            metadata={"merged_from": args.inputs,
                                      "strategy": args.strategy,
-                                     "merkle_root":
-                                         replica.merkle_root().hex(),
+                                     "merkle_root": root.hex(),
                                      "data_step": 0})
-    print(f"wrote merged checkpoint to {path}")
+    log.emit("checkpoint_written",
+             f"wrote merged checkpoint to {path}", path=str(path))
+    if args.events_out:
+        log.dump(args.events_out)
 
 
 if __name__ == "__main__":

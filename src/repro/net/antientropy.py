@@ -58,6 +58,7 @@ sound when both sync paths are mixed.
 from __future__ import annotations
 
 import hashlib
+import time
 from collections import Counter, OrderedDict
 from typing import (Any, Callable, Dict, FrozenSet, Iterable, List, Optional,
                     Sequence, Set, Tuple)
@@ -70,6 +71,9 @@ from repro.core.resolve import resolve as _legacy_resolve
 from repro.core.resolve import resolve_spec as _resolve_spec
 from repro.core.state import AddEntry, CRDTMergeState
 from repro.core.version_vector import VersionVector
+from repro.obs import CounterView, MetricsRegistry
+from repro.obs import enabled as _obs_enabled
+from repro.obs import span as _span
 from repro.net.store import (BlobSource, Placement, bitmap_indices,
                              chunk_bitmap)
 from repro.net.wire import (CHUNK_ENVELOPE, DEFAULT_MAX_FRAME, BlobManifest,
@@ -202,7 +206,8 @@ class SyncNode:
                  chunk_window: int = 8,
                  placement: Optional[Placement] = None,
                  chunk_timeout: Optional[float] = None,
-                 max_fetch_timeouts: int = 8):
+                 max_fetch_timeouts: int = 8,
+                 obs: Optional[MetricsRegistry] = None):
         if max_frame_bytes <= CHUNK_ENVELOPE:
             raise ValueError(f"max_frame_bytes must exceed {CHUNK_ENVELOPE}")
         self.node_id = node_id
@@ -230,7 +235,11 @@ class SyncNode:
         self._chunk_payload = max_frame_bytes - CHUNK_ENVELOPE
         self.known: Dict[str, dict] = {}      # peer -> last-sent vv (deltas)
         self.merge_calls = 0
-        self.stats: Counter = Counter()
+        # per-node metrics registry (injectable; never shared between
+        # nodes by default — each node's counts are its own). stats is
+        # the Counter-shaped view over sync_events_total{event=...}.
+        self.obs = obs if obs is not None else MetricsRegistry()
+        self.stats = CounterView(self.obs, "sync_events_total")
         self._sid = 0
         # eids with a BlobResp/BlobManifest pending, per (peer, session):
         # a response only retires its own session's requests, never those
@@ -428,6 +437,23 @@ class SyncNode:
     # -- message handling --------------------------------------------------
 
     def handle(self, msg: Message) -> List[Reply]:
+        """Dispatch one wire message; instrumented with a `sync.handle`
+        span and a per-type handle-time histogram (skipped entirely
+        when obs is disabled), plus window/pool depth gauges."""
+        if not _obs_enabled():
+            return self._dispatch(msg)
+        mtype = type(msg).__name__
+        t0 = time.perf_counter()
+        with _span("sync.handle", node=self.node_id, type=mtype):
+            replies = self._dispatch(msg)
+        self.obs.histogram("sync_handle_seconds").observe(
+            time.perf_counter() - t0, type=mtype)
+        self.obs.gauge("sync_chunk_windows").set(len(self._chunk_pending))
+        self.obs.gauge("sync_source_pool").set(
+            sum(len(s) for s in self._sources.values()))
+        return replies
+
+    def _dispatch(self, msg: Message) -> List[Reply]:
         if isinstance(msg, StateMsg):
             self.state = self.state.merge(msg_to_state(msg))
             self.merge_calls += 1

@@ -32,6 +32,8 @@ from repro.net.antientropy import SyncNode
 from repro.net.store import Placement
 from repro.net.wire import (Message, decode_frame, delta_to_msg,
                             encode_message, state_to_msg)
+from repro.obs import ConvergenceProbe, MetricsRegistry, Tracer
+from repro.obs.probes import wire_phase
 
 Handler = Callable[["SimNetwork", str, str, Message], None]
 #          (net, dst, src, msg) -> None; may call net.send() to reply
@@ -53,7 +55,8 @@ class SimNetwork:
     """Discrete-event loop: heapq of (time, seq, dst, src, frame)."""
 
     def __init__(self, seed: int = 0,
-                 default_link: Optional[LinkSpec] = None):
+                 default_link: Optional[LinkSpec] = None,
+                 obs: Optional[MetricsRegistry] = None):
         self.rng = random.Random(seed)
         self.default_link = default_link or LinkSpec()
         self.links: Dict[Tuple[str, str], LinkSpec] = {}
@@ -64,7 +67,10 @@ class SimNetwork:
         self._callbacks: Dict[int, Callable[["SimNetwork"], None]] = {}
         self._link_busy_until: Dict[Tuple[str, str], float] = {}
         self.partitions: Optional[List[Set[str]]] = None
-        # accounting
+        # accounting (mirrored as labeled series on self.obs: frame and
+        # byte counters by type, per-peer bytes, wire-phase attribution,
+        # in-flight bytes and event-queue depth gauges)
+        self.obs = obs if obs is not None else MetricsRegistry()
         self.bytes_sent = 0
         self.msgs_sent = 0
         self.msgs_delivered = 0
@@ -118,6 +124,13 @@ class SimNetwork:
         self.msgs_sent += 1
         if n > self.max_frame_seen:
             self.max_frame_seen = n
+        mtype = type(msg).__name__
+        self.obs.counter("net_bytes_total").inc(n, type=mtype)
+        self.obs.counter("net_frames_total").inc(type=mtype)
+        self.obs.counter("net_peer_bytes_total").inc(n, src=src, dst=dst)
+        phase = wire_phase(mtype)
+        self.obs.counter("sync_wire_bytes_total").inc(n, phase=phase)
+        self.obs.counter("sync_wire_frames_total").inc(phase=phase)
         if not self._reachable(src, dst):
             self.msgs_dropped += 1
             return n
@@ -148,6 +161,8 @@ class SimNetwork:
             self.inflight_bytes += n
             if self.inflight_bytes > self.peak_inflight_bytes:
                 self.peak_inflight_bytes = self.inflight_bytes
+        self.obs.gauge("sim_inflight_bytes").set(self.inflight_bytes)
+        self.obs.gauge("net_queue_depth").set(len(self._events))
         return n
 
     # ---------------------------------------------------------- event loop
@@ -174,6 +189,8 @@ class SimNetwork:
             fn(self)
             return True
         self.inflight_bytes -= len(frame)
+        self.obs.gauge("sim_inflight_bytes").set(self.inflight_bytes)
+        self.obs.gauge("net_queue_depth").set(len(self._events))
         handler = self.handlers.get(dst)
         if handler is not None:
             msg, _ = decode_frame(frame)
@@ -366,6 +383,8 @@ class SimGossipNetwork:
 
     def all_pairs_round(self) -> None:
         self._start_round()
+        self.net.obs.counter("gossip_rounds_total").inc(
+            protocol="all_pairs")
         n = len(self.nodes)
         pairs = [(i, j) for i in range(n) for j in range(n) if i != j]
         self.rng.shuffle(pairs)
@@ -375,6 +394,8 @@ class SimGossipNetwork:
 
     def epidemic_round(self, fanout: int = 3) -> None:
         self._start_round()
+        self.net.obs.counter("gossip_rounds_total").inc(
+            protocol="epidemic")
         n = len(self.nodes)
         for i in range(n):
             peers = [j for j in range(n) if j != i]
@@ -407,6 +428,30 @@ class SimGossipNetwork:
         if require_blobs:
             return all(not x.missing_blobs() for x in self.nodes)
         return True
+
+    # ------------------------------------------------------- observability
+
+    def make_tracer(self, **meta) -> Tracer:
+        """A Tracer on the simulator's virtual clock: spans recorded
+        while the loop runs are deterministic for a fixed seed and
+        schedule (same run -> byte-identical JSONL trace)."""
+        return Tracer(clock=lambda: self.net.clock, **meta)
+
+    def make_probe(self,
+                   registry: Optional[MetricsRegistry] = None
+                   ) -> ConvergenceProbe:
+        """A ConvergenceProbe on the virtual clock; feed it with
+        `observe_convergence` after each round. Time-to-convergence is
+        then measured in simulated seconds — a property of the
+        schedule, not the host machine."""
+        return ConvergenceProbe(
+            registry=registry if registry is not None else self.net.obs,
+            clock=lambda: self.net.clock)
+
+    def observe_convergence(self, probe: ConvergenceProbe) -> bool:
+        """Record every node's current Merkle root into the probe."""
+        return probe.observe(
+            {x.node_id: x.root().hex() for x in self.nodes})
 
     def resolve_all(self, spec, base=None, *, use_cache: bool = True,
                     trust=None, **cfg):

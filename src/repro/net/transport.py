@@ -30,16 +30,27 @@ from typing import Callable, Deque, Dict, List, Mapping, Optional, Tuple
 
 from repro.net.wire import (FRAME_OVERHEAD, HEADER, Message, TRAILER,
                             decode_frame, encode_message)
+from repro.obs import MetricsRegistry
+from repro.obs.probes import wire_phase
 
 
 class Transport:
-    """Point-to-point frame delivery between named nodes."""
+    """Point-to-point frame delivery between named nodes.
 
-    def __init__(self):
+    Each transport owns a `repro.obs` registry (`self.obs`, injectable)
+    mirroring the legacy accounting fields as labeled series: frames
+    and bytes by message type, bytes per directed (src, dst) pair,
+    anti-entropy bytes/frames attributed to session phase, and a
+    queue-depth gauge (frames sent minus frames delivered).
+    """
+
+    def __init__(self, obs: Optional[MetricsRegistry] = None):
         self.bytes_sent = 0
         self.msgs_sent = 0
+        self.msgs_delivered = 0
         self.max_frame_seen = 0
         self.bytes_by_type: Counter = Counter()
+        self.obs = obs if obs is not None else MetricsRegistry()
 
     # -- interface ---------------------------------------------------------
 
@@ -68,12 +79,32 @@ class Transport:
 
     # -- shared accounting -------------------------------------------------
 
-    def _account(self, msg: Message, nbytes: int) -> None:
+    def _account(self, msg: Message, nbytes: int,
+                 src: Optional[str] = None,
+                 dst: Optional[str] = None) -> None:
         self.bytes_sent += nbytes
         self.msgs_sent += 1
         if nbytes > self.max_frame_seen:
             self.max_frame_seen = nbytes
-        self.bytes_by_type[type(msg).__name__] += nbytes
+        mtype = type(msg).__name__
+        self.bytes_by_type[mtype] += nbytes
+        obs = self.obs
+        obs.counter("net_bytes_total").inc(nbytes, type=mtype)
+        obs.counter("net_frames_total").inc(type=mtype)
+        if src is not None and dst is not None:
+            obs.counter("net_peer_bytes_total").inc(nbytes, src=src,
+                                                    dst=dst)
+        phase = wire_phase(mtype)
+        obs.counter("sync_wire_bytes_total").inc(nbytes, phase=phase)
+        obs.counter("sync_wire_frames_total").inc(phase=phase)
+        obs.gauge("net_queue_depth").set(
+            self.msgs_sent - self.msgs_delivered)
+
+    def _account_recv(self, n: int) -> None:
+        if n:
+            self.msgs_delivered += n
+            self.obs.gauge("net_queue_depth").set(
+                self.msgs_sent - self.msgs_delivered)
 
 
 class InMemoryTransport(Transport):
@@ -87,7 +118,7 @@ class InMemoryTransport(Transport):
     def send(self, src: str, dst: str, msg: Message) -> int:
         frame = encode_message(msg)
         self._queues.setdefault(dst, deque()).append((src, frame))
-        self._account(msg, len(frame))
+        self._account(msg, len(frame), src, dst)
         return len(frame)
 
     def recv_ready(self, node_id: str) -> List[Tuple[str, Message]]:
@@ -97,6 +128,7 @@ class InMemoryTransport(Transport):
             src, frame = q.popleft()
             msg, _ = decode_frame(frame)
             out.append((src, msg))
+        self._account_recv(len(out))
         return out
 
     def pending(self) -> int:
@@ -141,7 +173,7 @@ class LoopbackSocketTransport(Transport):
                                       timeout=5.0) as conn:
             conn.sendall(blob)
         self._in_flight += 1
-        self._account(msg, len(frame))
+        self._account(msg, len(frame), src, dst)
         return len(frame)
 
     def recv_ready(self, node_id: str) -> List[Tuple[str, Message]]:
@@ -168,6 +200,7 @@ class LoopbackSocketTransport(Transport):
         out, consumed = _parse_stream(buf)
         self._in_flight -= len(out)
         del buf[:consumed]
+        self._account_recv(len(out))
         return out
 
     def pending(self) -> int:
@@ -271,7 +304,7 @@ class PersistentLoopbackTransport(Transport):
         self._outq[key].append(len(src_b).to_bytes(2, "big") + src_b + frame)
         self._in_flight += 1
         self._flush_key(key)
-        self._account(msg, len(frame))
+        self._account(msg, len(frame), src, dst)
         return len(frame)
 
     def _drain(self, key: Tuple[str, str]) -> None:
@@ -370,6 +403,7 @@ class PersistentLoopbackTransport(Transport):
             else:
                 live.append(entry)
         self._accepted[node_id] = live
+        self._account_recv(len(out))
         return out
 
     def pending(self) -> int:

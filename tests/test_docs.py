@@ -39,6 +39,18 @@ def test_markdown_links_resolve():
     assert mod.check_links(ROOT) == []
 
 
+def test_observability_metric_table_matches_catalog():
+    """docs/OBSERVABILITY.md documents exactly the repro.obs CATALOG:
+    same names, kinds, label axes, deterministic flags."""
+    from repro.obs import CATALOG
+    mod = _check_docs()
+    documented = mod.doc_metrics_table(ROOT / "docs" / "OBSERVABILITY.md")
+    assert set(documented) == set(CATALOG), (
+        f"doc-only={set(documented) - set(CATALOG)}, "
+        f"code-only={set(CATALOG) - set(documented)}")
+    assert mod.check_metrics_table(ROOT) == []
+
+
 def test_readme_links_docs_tree():
     readme = (ROOT / "README.md").read_text(encoding="utf-8")
     assert "docs/PROTOCOL.md" in readme
@@ -49,7 +61,8 @@ def test_architecture_guide_names_real_modules():
     text = (ROOT / "docs" / "ARCHITECTURE.md").read_text(encoding="utf-8")
     for mod_path in ["core/state.py", "core/resolve.py", "net/wire.py",
                      "net/store.py", "net/antientropy.py",
-                     "net/transport.py", "net/simulator.py"]:
+                     "net/transport.py", "net/simulator.py",
+                     "obs/metrics.py", "obs/trace.py", "obs/probes.py"]:
         name = mod_path.rsplit("/", 1)[1]
         assert name in text, f"ARCHITECTURE.md no longer mentions {name}"
         assert (ROOT / "src" / "repro" / mod_path).exists()

@@ -7,6 +7,9 @@
 2. Frame-table check: the frame ids documented in docs/PROTOCOL.md
    must match repro.net.wire's codec registry exactly — same ids, same
    message class names.
+3. Metrics-table check: the catalog documented in
+   docs/OBSERVABILITY.md must match repro.obs CATALOG exactly — same
+   names, kinds, label axes, and deterministic flags.
 
 Usage: PYTHONPATH=src python tools/check_docs.py [repo_root]
 Exits non-zero listing every violation.
@@ -22,6 +25,10 @@ LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 # a frame-table row: | 0xNN | `Name` | ...
 FRAME_ROW_RE = re.compile(r"^\|\s*0x([0-9A-Fa-f]{2})\s*\|\s*`?(\w+)`?\s*\|",
                           re.MULTILINE)
+# a metric-catalog row: | `name` | kind | labels | yes/no | ...
+METRIC_ROW_RE = re.compile(
+    r"^\|\s*`(\w+)`\s*\|\s*(counter|gauge|histogram)\s*"
+    r"\|\s*([^|]*?)\s*\|\s*(yes|no)\s*\|", re.MULTILINE)
 
 
 def md_files(root: Path) -> List[Path]:
@@ -74,14 +81,51 @@ def check_frame_table(root: Path) -> List[str]:
     return errors
 
 
+def doc_metrics_table(obs_md: Path) -> Dict[str, Tuple[str, Tuple[str, ...],
+                                                       bool]]:
+    """{metric name: (kind, labels, deterministic)} from the doc."""
+    table: Dict[str, Tuple[str, Tuple[str, ...], bool]] = {}
+    for name, kind, labels, det in METRIC_ROW_RE.findall(
+            obs_md.read_text(encoding="utf-8")):
+        parsed = tuple(x.strip().strip("`") for x in labels.split(",")
+                       if x.strip() and x.strip() not in ("–", "-"))
+        table[name] = (kind, parsed, det == "yes")
+    return table
+
+
+def check_metrics_table(root: Path) -> List[str]:
+    from repro.obs import CATALOG
+    documented = doc_metrics_table(root / "docs" / "OBSERVABILITY.md")
+    declared = {name: (s.kind, tuple(sorted(s.labels)), s.deterministic)
+                for name, s in CATALOG.items()}
+    errors = []
+    for name in sorted(set(documented) | set(declared)):
+        doc, impl = documented.get(name), declared.get(name)
+        if doc is None:
+            errors.append(f"OBSERVABILITY.md: metric {name!r} declared "
+                          "in repro.obs CATALOG but undocumented")
+        elif impl is None:
+            errors.append(f"OBSERVABILITY.md: metric {name!r} documented "
+                          "but not declared in repro.obs CATALOG")
+        else:
+            kind, labels, det = doc
+            if (kind, tuple(sorted(labels)), det) != impl:
+                errors.append(
+                    f"OBSERVABILITY.md: metric {name!r} documented as "
+                    f"{(kind, labels, det)}, CATALOG declares {impl}")
+    return errors
+
+
 def main(argv: List[str]) -> int:
     root = Path(argv[1]) if len(argv) > 1 else Path(__file__).parent.parent
-    errors = check_links(root) + check_frame_table(root)
+    errors = (check_links(root) + check_frame_table(root)
+              + check_metrics_table(root))
     for e in errors:
         print(f"FAIL {e}", file=sys.stderr)
     if not errors:
         n = len(md_files(root))
-        print(f"docs OK: {n} markdown files, frame table in sync")
+        print(f"docs OK: {n} markdown files, frame + metric tables "
+              "in sync")
     return 1 if errors else 0
 
 
