@@ -26,7 +26,7 @@ anti-entropy-synced deployment.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Iterable, Optional
 
 from repro.api.spec import MergeSpec
 from repro.core.engine import CacheInfo, EngineCache
@@ -73,17 +73,36 @@ class Replica:
             self._state = value
 
     def contribute(self, contribution: Any,
-                   element_id: Optional[str] = None) -> str:
+                   element_id: Optional[str] = None, *,
+                   leaves: Optional[Iterable[str]] = None) -> str:
         """Publish a model contribution; returns its element id (the
         content hash that names it everywhere — ordering, Merkle roots,
-        blob fetch, retraction)."""
+        blob fetch, retraction).
+
+        `leaves` declares a SPARSE contribution: the pytree is partial,
+        carrying exactly the listed leaf paths (canonical `keystr`
+        form, e.g. `"['a']['kernel']"`). At resolve time each model
+        leaf merges over only the contributions covering it; a leaf
+        covered by no contribution inherits the base model verbatim
+        (Remark-16 reference semantics — the choice is part of every
+        cache key). Pass the pytree's own paths (`leaf_paths_of`) or
+        let validation catch a mismatch."""
         eid = element_id or pytree_digest(contribution).hex()
         if self._node is not None:
-            self._node.contribute(contribution, element_id=eid)
+            self._node.contribute(contribution, element_id=eid,
+                                  leaves=leaves)
         else:
             self._state = self._state.add(contribution, self.node_id,
-                                          element_id=eid)
+                                          element_id=eid,
+                                          leaf_paths=leaves)
         return eid
+
+    def add(self, contribution: Any, *,
+            leaves: Optional[Iterable[str]] = None,
+            element_id: Optional[str] = None) -> str:
+        """Alias of `contribute` with the sparse-first signature:
+        `replica.add(delta, leaves=leaf_paths_of(delta))`."""
+        return self.contribute(contribution, element_id, leaves=leaves)
 
     def retract(self, element_id: str) -> None:
         """OR-Set remove: tombstone every observed tag of the element."""

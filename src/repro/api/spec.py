@@ -59,7 +59,12 @@ _V_BYTES = 0x05
 _V_DIGEST = 0x06                # content hash of a non-scalar value;
 #                                 hashable/cacheable but NOT decodable
 
-_FRAG_DOMAIN = b"repro/api/spec-frag/v1"
+# v2: the fragment names the absent-leaf semantics (a leaf covered by
+# no contribution inherits the base — paper Remark 16 reference
+# semantics). Folding the choice into every sub-root/model key means a
+# future alternative semantics (e.g. absent = zeros) can never alias a
+# cache entry computed under this one.
+_FRAG_DOMAIN = b"repro/api/spec-frag/v2|absent-leaf:inherit-base"
 
 
 class SpecError(TypeError):

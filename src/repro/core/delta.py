@@ -12,6 +12,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Dict, FrozenSet, Optional
 
+import jax
 import numpy as np
 
 from repro.core.compression import CompressedTree, compress_tree, \
@@ -29,13 +30,20 @@ class Delta:
     compressed: bool = False
 
     def approx_bytes(self) -> int:
+        # 96B per entry approximates the fixed wire envelope (eid + tag
+        # + node length prefixes); a sparse entry additionally ships its
+        # coverage descriptor — the joined path strings plus the
+        # separator bytes.
         meta = 96 * (len(self.adds) + len(self.removes))
+        for e in self.adds:
+            if e.leaf_paths is not None:
+                meta += sum(len(p) for p in e.leaf_paths) \
+                    + len(e.leaf_paths)
         data = 0
         for v in self.payloads.values():
             if isinstance(v, CompressedTree):
                 data += v.nbytes()
             else:
-                import jax
                 data += sum(np.asarray(x).nbytes
                             for x in jax.tree_util.tree_leaves(v))
         return meta + data

@@ -28,6 +28,27 @@ Strategies flagged `whole_model=True` (population search and SVD-based
 factorizations, whose cost profile is not per-tensor) are routed through
 the legacy whole-tree path and cached as a single whole-model entry.
 
+Sparse contributions
+--------------------
+A contribution may cover only a subset of the model's leaves (its
+`leaf_paths` coverage descriptor, from `CRDTMergeState`). The planner
+then keys each leaf task on that leaf's *per-leaf ordered contribution
+subset*: a leaf untouched by a new sparse contribution derives the
+same sub-root as before and stays a warm cache hit, so re-resolve cost
+is O(changed leaves). A leaf covered by NO contribution inherits the
+base leaf verbatim (absent-leaf semantics: inherit-base — the choice
+is folded into `spec.cache_fragment()` so cache keys can never alias a
+different semantics). Whole-model strategies densify sparse payloads
+with base fill before the whole-tree path.
+
+Strategies that declare a `LeafFold` (`Strategy.incremental`)
+additionally support **prefix-fold resumption**: when a leaf's ordered
+subset grew append-only, the executor probes the cache for the longest
+previously-cached prefix, restores its float32 accumulator, and folds
+only the new contributions — bit-equal to the full recompute by the
+LeafFold contract (the fold IS the canonical math; see
+strategies/base.py).
+
 Sub-root derivation
 -------------------
 For leaf index i of a k-way merge described by a `repro.api.MergeSpec`:
@@ -79,7 +100,7 @@ from repro.api.spec import MergeSpec, coerce_spec
 from repro.core.hashing import pytree_digest, tensor_digest
 from repro.obs import CounterView, MetricsRegistry, span
 from repro.strategies import get_strategy
-from repro.strategies.base import Strategy
+from repro.strategies.base import Strategy, run_fold
 
 _DOMAIN_LEAF = b"repro/engine/leaf-subroot/v2"
 _DOMAIN_MODEL = b"repro/engine/model-subroot/v2"
@@ -117,10 +138,14 @@ class ContribMeta:
     Assumption 11 an element id fully determines the payload bytes, so
     metas memoized by eid stay valid forever (and let the planner run
     against contributions whose payloads are not locally resident)."""
-    treedef: Any
+    treedef: Any                  # None for manifest-derived metas
     digests: Tuple[bytes, ...]
     shapes: Tuple[Tuple[int, ...], ...]
     dtypes: Tuple[Any, ...]
+    # keystr path per leaf, parallel to digests (flatten order). Lets
+    # the planner map a sparse contribution's leaves onto the model's
+    # leaves by path rather than by position.
+    paths: Tuple[str, ...] = ()
 
     @property
     def leaf_count(self) -> int:
@@ -137,17 +162,40 @@ def contrib_meta(contribution: Any, *, eid: Optional[str] = None
     if eid is not None and eid in _META_MEMO:
         _META_MEMO.move_to_end(eid)
         return _META_MEMO[eid]
-    leaves, treedef = jax.tree_util.tree_flatten(contribution)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(contribution)
+    leaves = [l for _, l in flat]
     meta = ContribMeta(
         treedef=treedef,
         digests=tuple(tensor_digest(l) for l in leaves),
         shapes=tuple(tuple(jnp.shape(l)) for l in leaves),
         dtypes=tuple(jnp.asarray(l).dtype for l in leaves),
+        paths=tuple(jax.tree_util.keystr(p) for p, _ in flat),
     )
     if eid is not None:
         _META_MEMO[eid] = meta
         while len(_META_MEMO) > _META_MEMO_LIMIT:
             _META_MEMO.popitem(last=False)
+    return meta
+
+
+def note_meta(eid: str, paths: Sequence[str], digests: Sequence[bytes],
+              shapes: Sequence[Tuple[int, ...]],
+              dtypes: Sequence[Any]) -> ContribMeta:
+    """Memoize planner metadata announced over the wire (SparseManifest
+    leaf refs) WITHOUT the payload being resident: the planner can then
+    key per-leaf subsets — and fully-cached or fold-resumable plans can
+    execute — before (or without) fetching a single chunk. treedef stays
+    None: such metas are mapped onto the model by path."""
+    meta = ContribMeta(
+        treedef=None,
+        digests=tuple(digests),
+        shapes=tuple(tuple(s) for s in shapes),
+        dtypes=tuple(jnp.dtype(d) for d in dtypes),
+        paths=tuple(paths),
+    )
+    _META_MEMO[eid] = meta
+    while len(_META_MEMO) > _META_MEMO_LIMIT:
+        _META_MEMO.popitem(last=False)
     return meta
 
 
@@ -173,11 +221,21 @@ def clear_meta_memo() -> None:
 @dataclass(frozen=True)
 class LeafTask:
     index: int                    # global flatten index (key derivation)
-    path: str                     # keystr, diagnostics only
+    path: str                     # keystr; maps sparse payloads to leaves
     sub_root: bytes               # per-tensor content address of output
     shape: Tuple[int, ...]
     dtype: Any
-    stacked_nbytes: int           # k * leaf nbytes: live bytes to execute
+    stacked_nbytes: int           # k_i * leaf nbytes: live bytes to execute
+    # this leaf's ordered contribution subset: positions into the plan's
+    # canonical contribution list, and their leaf digests (canonical
+    # order preserved). Dense plans cover every position at every leaf.
+    contributors: Tuple[int, ...] = ()
+    digests: Tuple[bytes, ...] = ()
+    base_frag: bytes = b""
+
+    @property
+    def k(self) -> int:
+        return len(self.contributors)
 
 
 @dataclass(frozen=True)
@@ -190,20 +248,58 @@ class MergePlan:
     treedef: Any
     tasks: Tuple[LeafTask, ...]
     spec: Optional[MergeSpec] = None      # the spec this plan realizes
+    frag: bytes = b""                     # spec fragment (prefix probing)
+    # per-contribution coverage (None entry = dense); None = all dense
+    coverages: Optional[Tuple[Optional[Tuple[str, ...]], ...]] = None
+    # model leaf indices covered by NO contribution: inherit-base
+    base_only: Tuple[int, ...] = ()
 
     def cfg_dict(self) -> Dict[str, Any]:
         return dict(self.cfg)
+
+
+def _leaf_subroot(frag: bytes, base_frag: bytes,
+                  digests: Sequence[bytes], needs_key: bool,
+                  seed: int, index: int) -> bytes:
+    """Sub-root over ONE leaf's ordered contribution subset. Dense plans
+    pass every contribution's digest, reproducing the PR-4 derivation
+    byte-for-byte; sparse plans pass only the covering subset — so a
+    sparse leaf's key equals the key of a dense merge over exactly that
+    subset, which is the per-leaf semantics (and what makes warm entries
+    shareable between the two)."""
+    h = hashlib.sha256(_DOMAIN_LEAF)
+    h.update(frag)
+    h.update(base_frag)
+    h.update(len(digests).to_bytes(4, "big"))
+    for d in digests:
+        h.update(d)
+    if needs_key:
+        # key-consuming strategies: output depends on the Merkle-
+        # derived seed and the global leaf index (leafwise fold_in)
+        h.update(str(seed).encode())
+        h.update(index.to_bytes(4, "big"))
+    return h.digest()
 
 
 def plan_merge(metas: Sequence[ContribMeta],
                strategy_name: Optional[str] = None, *,
                base: Any = None, seed: int = 0,
                reduction: Optional[str] = None,
-               spec: Optional[MergeSpec] = None, **cfg) -> MergePlan:
+               spec: Optional[MergeSpec] = None,
+               coverages: Optional[Sequence[Optional[Tuple[str, ...]]]]
+               = None, **cfg) -> MergePlan:
     """Emit a per-leaf merge plan from contribution metadata (canonical
     order). Payloads are not needed to plan — only their digests. Takes
     either a MergeSpec (`spec=`) or the legacy strategy-name + kwargs
-    form (wrapped in a lenient spec)."""
+    form (wrapped in a lenient spec).
+
+    `coverages` (parallel to `metas`) marks sparse contributions: a
+    tuple of keystr leaf paths the contribution carries, or None for
+    dense. Each leaf task is keyed on the subset of contributions
+    covering that leaf; a leaf covered by none inherits the base leaf
+    (requires base=). The model structure comes from the first dense
+    contribution, falling back to the base when every contribution is
+    sparse."""
     if not metas:
         raise ValueError("plan_merge() requires at least one contribution")
     spec = _as_spec(spec, strategy_name, reduction, cfg)
@@ -211,45 +307,105 @@ def plan_merge(metas: Sequence[ContribMeta],
     if strat.whole_model or strat.leaf_fn is None:
         raise ValueError(
             f"strategy {spec.strategy!r} is whole-model; use merge()")
-    first = metas[0]
-    for m in metas[1:]:
-        if m.treedef != first.treedef or m.shapes != first.shapes \
-                or m.dtypes != first.dtypes:
-            raise ValueError("contributions disagree on tree structure")
     k = len(metas)
+    if coverages is None:
+        coverages = (None,) * k
+    if len(coverages) != k:
+        raise ValueError("coverages must parallel metas")
+    # dense metas carrying their own treedef define the model structure
+    dense = [j for j, cov in enumerate(coverages)
+             if cov is None and metas[j].treedef is not None]
     with span("engine.plan", strategy=spec.strategy, k=k,
-              leaves=first.leaf_count):
+              leaves=(metas[dense[0]].leaf_count if dense else 0)):
         frag = spec.cache_fragment(
             with_reduction=(strat.binary_only and k > 2))
-        if base is None:
-            base_frags: Sequence[bytes] = [_NO_BASE] * first.leaf_count
+        if dense:
+            first = metas[dense[0]]
+            for j in dense[1:]:
+                m = metas[j]
+                if m.treedef != first.treedef or m.shapes != first.shapes \
+                        or m.dtypes != first.dtypes:
+                    raise ValueError(
+                        "contributions disagree on tree structure")
+            treedef = first.treedef
+            paths = _leaf_paths(treedef)
+            shapes, dtypes = first.shapes, first.dtypes
         else:
-            base_leaves = first.treedef.flatten_up_to(base)
+            if base is None:
+                raise ValueError(
+                    "every contribution is sparse and no base was given; "
+                    "the model structure must come from a dense "
+                    "contribution or the base model")
+            bflat, treedef = jax.tree_util.tree_flatten(base)
+            paths = _leaf_paths(treedef)
+            shapes = tuple(tuple(jnp.shape(l)) for l in bflat)
+            dtypes = tuple(jnp.asarray(l).dtype for l in bflat)
+        n_leaves = len(paths)
+        path_index = {p: i for i, p in enumerate(paths)}
+        contributors: List[List[int]] = [[] for _ in range(n_leaves)]
+        leaf_digests: List[List[bytes]] = [[] for _ in range(n_leaves)]
+        for j, (m, cov) in enumerate(zip(metas, coverages)):
+            if cov is None and m.treedef is not None:
+                for i in range(n_leaves):
+                    contributors[i].append(j)
+                    leaf_digests[i].append(m.digests[i])
+                continue
+            # path-mapped: sparse, or dense-by-manifest (treedef unknown)
+            if cov is not None and set(m.paths) != set(cov):
+                raise ValueError(
+                    f"contribution {j}: coverage descriptor does not "
+                    "match its leaf paths")
+            for local, p in enumerate(m.paths):
+                i = path_index.get(p)
+                if i is None:
+                    raise ValueError(
+                        f"contribution {j} covers leaf {p!r} which the "
+                        "model structure does not have")
+                if m.shapes[local] != shapes[i] \
+                        or jnp.dtype(m.dtypes[local]) != jnp.dtype(dtypes[i]):
+                    raise ValueError(
+                        f"contribution {j}: leaf {p!r} shape/dtype "
+                        "disagrees with the model structure")
+                contributors[i].append(j)
+                leaf_digests[i].append(m.digests[local])
+        if base is None:
+            base_frags: Sequence[bytes] = [_NO_BASE] * n_leaves
+        else:
+            base_leaves = treedef.flatten_up_to(base)
             base_frags = [tensor_digest(bl) for bl in base_leaves]
-        paths = _leaf_paths(first.treedef)
         tasks: List[LeafTask] = []
-        for i in range(first.leaf_count):
-            h = hashlib.sha256(_DOMAIN_LEAF)
-            h.update(frag)
-            h.update(base_frags[i])
-            h.update(k.to_bytes(4, "big"))
-            for m in metas:
-                h.update(m.digests[i])
-            if strat.needs_key:
-                # key-consuming strategies: output depends on the Merkle-
-                # derived seed and the global leaf index (leafwise fold_in)
-                h.update(str(seed).encode())
-                h.update(i.to_bytes(4, "big"))
-            nbytes = jnp.dtype(first.dtypes[i]).itemsize
-            for d in first.shapes[i]:
+        base_only: List[int] = []
+        for i in range(n_leaves):
+            ki = len(contributors[i])
+            if ki == 0:
+                # absent-leaf semantics: inherit-base (Remark 16 ref.
+                # semantics — the spec fragment encodes this choice)
+                if base is None:
+                    raise ValueError(
+                        f"leaf {paths[i]!r} is covered by no contribution "
+                        "and no base model was given (absent leaves "
+                        "inherit the base)")
+                base_only.append(i)
+                continue
+            digs = tuple(leaf_digests[i])
+            nbytes = jnp.dtype(dtypes[i]).itemsize
+            for d in shapes[i]:
                 nbytes *= d
             tasks.append(
-                LeafTask(index=i, path=paths[i], sub_root=h.digest(),
-                         shape=first.shapes[i], dtype=first.dtypes[i],
-                         stacked_nbytes=k * nbytes))
+                LeafTask(index=i, path=paths[i],
+                         sub_root=_leaf_subroot(frag, base_frags[i], digs,
+                                                strat.needs_key, seed, i),
+                         shape=shapes[i], dtype=dtypes[i],
+                         stacked_nbytes=ki * nbytes,
+                         contributors=tuple(contributors[i]),
+                         digests=digs, base_frag=base_frags[i]))
+    any_sparse = any(c is not None for c in coverages)
     return MergePlan(strategy=spec.strategy, reduction=spec.reduction,
                      seed=seed, k=k, cfg=spec.cfg,
-                     treedef=first.treedef, tasks=tuple(tasks), spec=spec)
+                     treedef=treedef, tasks=tuple(tasks), spec=spec,
+                     frag=frag,
+                     coverages=tuple(coverages) if any_sparse else None,
+                     base_only=tuple(base_only))
 
 
 def plan_for(contribs: Sequence[Any],
@@ -257,12 +413,15 @@ def plan_for(contribs: Sequence[Any],
              contrib_ids: Optional[Sequence[str]] = None,
              base: Any = None, seed: int = 0,
              reduction: Optional[str] = None,
-             spec: Optional[MergeSpec] = None, **cfg) -> MergePlan:
+             spec: Optional[MergeSpec] = None,
+             coverages: Optional[Sequence[Optional[Tuple[str, ...]]]]
+             = None, **cfg) -> MergePlan:
     """Convenience planner over resident payloads (ids memoize digests)."""
     ids: Sequence[Optional[str]] = contrib_ids or [None] * len(contribs)
     metas = [contrib_meta(c, eid=e) for c, e in zip(contribs, ids)]
     return plan_merge(metas, strategy_name, base=base, seed=seed,
-                      reduction=reduction, spec=spec, **cfg)
+                      reduction=reduction, spec=spec,
+                      coverages=coverages, **cfg)
 
 
 def _leaf_paths(treedef) -> List[str]:
@@ -321,7 +480,10 @@ class EngineCache:
     def __init__(self, entries: int = _DEFAULT_ENTRY_LIMIT, *,
                  bytes: int = _DEFAULT_BYTE_LIMIT,  # noqa: A002
                  obs: Optional[MetricsRegistry] = None):
-        self._data: "OrderedDict[bytes, Tuple[Any, int]]" = OrderedDict()
+        # key -> (value, nbytes, aux); aux is an incremental strategy's
+        # float32 fold accumulator (None otherwise), counted in nbytes
+        self._data: "OrderedDict[bytes, Tuple[Any, int, Any]]" = \
+            OrderedDict()
         self._bytes = 0
         self.entry_limit = entries
         self.byte_limit = bytes
@@ -362,7 +524,7 @@ class EngineCache:
         evicted = 0
         while self._data and (len(self._data) > self.entry_limit
                               or self._bytes > self.byte_limit):
-            _, (_, nbytes) = self._data.popitem(last=False)
+            _, (_, nbytes, _) = self._data.popitem(last=False)
             self._bytes -= nbytes
             evicted += 1
         if evicted:
@@ -375,14 +537,21 @@ class EngineCache:
             return self._data[key][0]
         return None
 
-    def put(self, key: bytes, value: Any, nbytes: int) -> None:
+    def put(self, key: bytes, value: Any, nbytes: int,
+            aux: Any = None) -> None:
         if key in self._data:
             self._bytes -= self._data[key][1]
-        self._data[key] = (value, nbytes)
+        self._data[key] = (value, nbytes, aux)
         self._data.move_to_end(key)
         self._bytes += nbytes
         self.obs.gauge("engine_cache_resident_bytes").set(self._bytes)
         self._evict()
+
+    def aux(self, key: bytes) -> Optional[Any]:
+        """The fold accumulator cached alongside a value (no recency
+        bump, no hit/miss counting — this is a resumption probe)."""
+        ent = self._data.get(key)
+        return ent[2] if ent is not None else None
 
     def __contains__(self, key: bytes) -> bool:
         return key in self._data
@@ -531,65 +700,174 @@ def execute_plan(plan: MergePlan, contribs: Optional[Sequence[Any]], *,
     """
     cache = _cache_or_default(cache)
     strat = get_strategy(plan.strategy)
-    outputs: List[Optional[Any]] = [None] * len(plan.tasks)
+    n_out = len(plan.tasks) + len(plan.base_only)
+    outputs: List[Optional[Any]] = [None] * n_out
     cache.obs.gauge("engine_plan_leaves").set(len(plan.tasks))
+    cache.obs.gauge("engine_sparse_leaves_skipped").set(
+        sum(1 for t in plan.tasks if t.k < plan.k) + len(plan.base_only))
+    base_leaves = (plan.treedef.flatten_up_to(base)
+                   if base is not None else None)
+    if plan.base_only and base_leaves is None:
+        raise ValueError("plan has inherit-base leaves but no base was "
+                         "supplied to execute_plan()")
+    for i in plan.base_only:
+        outputs[i] = base_leaves[i]          # inherit-base
 
     misses: List[LeafTask] = []
+    resumes: List[Tuple[LeafTask, int, Any]] = []
     for t in plan.tasks:
         hit = cache.get(t.sub_root) if use_cache else None
         if hit is not None:
             outputs[t.index] = hit
             cache.stats["hits"] += 1
         else:
-            misses.append(t)
             if use_cache:
                 cache.stats["misses"] += 1
+                rp = _fold_resume_point(strat, plan, t, cache)
+                if rp is not None:
+                    resumes.append((t, rp[0], rp[1]))
+                    continue
+            misses.append(t)
     with span("engine.execute", strategy=plan.strategy, k=plan.k,
-              leaves=len(plan.tasks), misses=len(misses)):
-        if misses:
+              leaves=len(plan.tasks),
+              misses=len(misses) + len(resumes)):
+        if misses or resumes:
             if contribs is None:
                 raise KeyError(
-                    f"{len(misses)} leaf tasks miss the cache but no "
-                    "payloads were supplied; fetch the contribution "
-                    "blobs first")
+                    f"{len(misses) + len(resumes)} leaf tasks miss the "
+                    "cache but no payloads were supplied; fetch the "
+                    "contribution blobs first")
             if len(contribs) != plan.k:
                 raise ValueError(f"plan expects {plan.k} contributions, "
                                  f"got {len(contribs)}")
-            leaves = [plan.treedef.flatten_up_to(c) for c in contribs]
-            base_leaves = (plan.treedef.flatten_up_to(base)
-                           if base is not None else None)
-            if max_batch_bytes is None:
-                max_batch_bytes = max(t.stacked_nbytes for t in plan.tasks)
-            for group in _dispatch_groups(strat, misses, max_batch_bytes):
-                approximate = False
-                if len(group) == 1:
-                    out = [_execute_leaf(strat, plan, group[0], leaves,
-                                         base_leaves, cache)]
-                else:
-                    out, approximate = _execute_batch(
-                        strat, plan, group, leaves, base_leaves, cache,
-                        pallas=pallas)
-                    cache.stats["batched_leaves"] += len(group)
+            flat = _flatten_contribs(plan, contribs)
+
+            def leaf_of(j: int, t: LeafTask):
+                f = flat[j]
+                if f is None:
+                    raise KeyError(
+                        f"contribution {j} is needed by leaf {t.path!r} "
+                        "but its payload was not supplied")
+                return f[t.index] if isinstance(f, list) else f[t.path]
+
+            cfg = plan.cfg_dict()
+            for t, m, aux in resumes:
+                # prefix-fold resumption: the leaf's ordered subset grew
+                # append-only past a cached prefix — restore that
+                # prefix's accumulator and fold only the new tail
+                new = [leaf_of(j, t) for j in t.contributors[m:]]
+                b = _base_leaf(base_leaves, t.index, new[0])
+                cache.note_stacked(t.stacked_nbytes)
+                kw = dict(strat.defaults)
+                kw.update(cfg)
+                val, acc = run_fold(strat.fold, new, b, acc=aux, k=t.k,
+                                    **kw)
+                outputs[t.index] = val
+                cache.stats["leaf_tasks"] += 1
                 cache.stats["dispatches"] += 1
-                cache.stats["leaf_tasks"] += len(group)
-                for t, o in zip(group, out):
-                    outputs[t.index] = o
-                    if use_cache and not approximate:
-                        cache.put(t.sub_root, o, int(o.nbytes))
+                cache.stats["fold_resumes"] += 1
+                cache.obs.counter("resolve_fold_updates_total").inc(
+                    t.k - m)
+                cache.put(t.sub_root, val,
+                          int(val.nbytes) + int(acc.nbytes), aux=acc)
+            if misses:
+                if max_batch_bytes is None:
+                    max_batch_bytes = max(t.stacked_nbytes
+                                          for t in plan.tasks)
+                for group in _dispatch_groups(strat, misses,
+                                              max_batch_bytes):
+                    approximate = False
+                    if len(group) == 1:
+                        o, a = _execute_leaf(strat, plan, group[0],
+                                             leaf_of, base_leaves, cache)
+                        out, auxs = [o], [a]
+                    else:
+                        out, auxs, approximate = _execute_batch(
+                            strat, plan, group, leaf_of, base_leaves,
+                            cache, pallas=pallas)
+                        cache.stats["batched_leaves"] += len(group)
+                    cache.stats["dispatches"] += 1
+                    cache.stats["leaf_tasks"] += len(group)
+                    for t, o, a in zip(group, out, auxs):
+                        outputs[t.index] = o
+                        if use_cache and not approximate:
+                            nb = int(o.nbytes) + (int(a.nbytes)
+                                                  if a is not None else 0)
+                            cache.put(t.sub_root, o, nb, aux=a)
     return jax.tree_util.tree_unflatten(plan.treedef, outputs)
+
+
+def _flatten_contribs(plan: MergePlan, contribs: Sequence[Any]
+                      ) -> List[Any]:
+    """Per-contribution leaf accessors: a flatten-order list for dense
+    contributions, a path-keyed dict for sparse ones, None for payloads
+    the executor was told it will not need."""
+    covs = plan.coverages or (None,) * plan.k
+    out: List[Any] = []
+    for c, cov in zip(contribs, covs):
+        if c is None:
+            out.append(None)
+        elif cov is None:
+            out.append(plan.treedef.flatten_up_to(c))
+        else:
+            pairs = jax.tree_util.tree_flatten_with_path(c)[0]
+            out.append({jax.tree_util.keystr(p): l for p, l in pairs})
+    return out
+
+
+def _fold_resume_point(strat: Strategy, plan: MergePlan, task: LeafTask,
+                       cache: "EngineCache"
+                       ) -> Optional[Tuple[int, Any]]:
+    """Longest cached proper prefix of a missed fold-capable task:
+    (m, accumulator) where contributions [0, m) are already folded, or
+    None. Probes longest-first — the append-only common case hits at
+    m = k-1 immediately."""
+    fold = strat.fold
+    if fold is None or task.k < 2 or task.k < fold.min_k:
+        return None
+    for m in range(task.k - 1, fold.min_k - 1, -1):
+        key = _leaf_subroot(plan.frag, task.base_frag,
+                            task.digests[:m], strat.needs_key,
+                            plan.seed, task.index)
+        aux = cache.aux(key)
+        if aux is not None:
+            return m, aux
+    return None
+
+
+def plan_needed_ids(plan: MergePlan,
+                    cache: Optional["EngineCache"] = None, *,
+                    use_cache: bool = True) -> Tuple[int, ...]:
+    """Contribution positions whose payloads execution will need under
+    the current cache state: contributors of cache-missed tasks, minus
+    the already-folded prefix of fold-resumable tasks. Lets resolve
+    narrow its fetch to O(changed) payloads."""
+    cache = _cache_or_default(cache)
+    strat = get_strategy(plan.strategy)
+    needed: set = set()
+    for t in plan.tasks:
+        if use_cache and t.sub_root in cache:
+            continue
+        rp = _fold_resume_point(strat, plan, t, cache) if use_cache \
+            else None
+        lo = rp[0] if rp is not None else 0
+        needed.update(t.contributors[lo:])
+    return tuple(sorted(needed))
 
 
 def _dispatch_groups(strat: Strategy, misses: List[LeafTask],
                      max_batch_bytes: int) -> List[List[LeafTask]]:
     """Partition missed tasks into dispatches. Elementwise strategies
     fuse same-dtype leaves (flattened + concatenated) up to the batch
-    byte cap; everything else runs one leaf per dispatch."""
+    byte cap; everything else runs one leaf per dispatch. Under sparse
+    contributions only leaves with the SAME ordered contributor subset
+    fuse — a [k_i, N] batch has one k_i."""
     if not strat.batchable:
         return [[t] for t in misses]
     groups: List[List[LeafTask]] = []
     by_dtype: Dict[Any, List[LeafTask]] = {}
     for t in misses:
-        by_dtype.setdefault(t.dtype, []).append(t)
+        by_dtype.setdefault((t.dtype, t.contributors), []).append(t)
     for tasks in by_dtype.values():
         # largest-first packing: the big leaves that fill a batch alone
         # go first, so the many small leaves behind them still fuse
@@ -617,22 +895,35 @@ def _base_leaf(base_leaves, idx: int, like) -> Any:
 
 
 def _execute_leaf(strat: Strategy, plan: MergePlan, task: LeafTask,
-                  leaves, base_leaves, cache: EngineCache) -> Any:
-    """One leaf, exactly the legacy arithmetic: stack the k slices and
-    apply the strategy's leaf function (folding per-leaf for binary-only
-    strategies at k > 2, with the legacy per-step seeds)."""
+                  leaf_of, base_leaves, cache: EngineCache
+                  ) -> Tuple[Any, Any]:
+    """One leaf over its ordered contributor subset: stack the k_i
+    slices and apply the strategy's leaf function (folding per-leaf for
+    binary-only strategies at k_i > 2, with the legacy per-step seeds).
+    Returns (value, aux): aux is the float32 fold accumulator for
+    incremental strategies (cached for resumption), else None."""
     i = task.index
-    slices = [l[i] for l in leaves]
+    slices = [leaf_of(j, task) for j in task.contributors]
+    ki = len(slices)
     cfg = plan.cfg_dict()
     cache.note_stacked(task.stacked_nbytes)
-    if strat.binary_only and plan.k > 2:
+    if strat.binary_only and ki > 2:
         if plan.reduction == "tree":
             return _leaf_tree_fold(strat, slices, base_leaves, i,
-                                   plan.seed, cfg)
-        return _leaf_seq_fold(strat, slices, base_leaves, i, plan.seed, cfg)
-    stacked = jnp.stack(slices)
+                                   plan.seed, cfg), None
+        return _leaf_seq_fold(strat, slices, base_leaves, i, plan.seed,
+                              cfg), None
     b = _base_leaf(base_leaves, i, slices[0])
-    return strat.apply_leaf(stacked, b, leaf_index=i, seed=plan.seed, **cfg)
+    if strat.fold is not None and ki >= strat.fold.min_k:
+        # drive the canonical fold directly (identical math to leaf_fn,
+        # which is run_fold over the same inputs) to retain the
+        # accumulator for later resumption
+        kw = dict(strat.defaults)
+        kw.update(cfg)
+        return run_fold(strat.fold, slices, b, **kw)
+    stacked = jnp.stack(slices)
+    return strat.apply_leaf(stacked, b, leaf_index=i, seed=plan.seed,
+                            **cfg), None
 
 
 def _leaf_seq_fold(strat, slices, base_leaves, i, seed, cfg):
@@ -663,47 +954,60 @@ def _leaf_tree_fold(strat, slices, base_leaves, i, seed, cfg):
 
 
 def _execute_batch(strat: Strategy, plan: MergePlan, group: List[LeafTask],
-                   leaves, base_leaves, cache: EngineCache, *,
-                   pallas: bool) -> Tuple[List[Any], bool]:
-    """Fused dispatch over same-dtype elementwise leaves: flatten each
-    leaf's k slices, concatenate along the element axis, apply the leaf
-    function ONCE on [k, N], slice the outputs back. Elementwise leaf
-    functions reduce only over the k axis, so per-element arithmetic —
-    and therefore output bytes — is identical to leaf-at-a-time
-    execution. Returns (outputs, approximate): approximate=True means
-    the fused Pallas route produced them (fp32-accumulated, tolerance
-    only) and the caller must not cache them."""
-    k = plan.k
+                   leaf_of, base_leaves, cache: EngineCache, *,
+                   pallas: bool) -> Tuple[List[Any], List[Any], bool]:
+    """Fused dispatch over same-dtype, same-contributor-subset
+    elementwise leaves: flatten each leaf's k_i slices, concatenate
+    along the element axis, apply the leaf function ONCE on [k_i, N],
+    slice the outputs back. Elementwise leaf functions reduce only over
+    the k axis, so per-element arithmetic — and therefore output bytes —
+    is identical to leaf-at-a-time execution. Returns (outputs, auxs,
+    approximate): auxs are per-leaf fold accumulator slices for
+    incremental strategies (sliced from the batch accumulator —
+    elementwise, so bitwise equal to per-leaf folds); approximate=True
+    means the fused Pallas route produced the outputs (fp32-accumulated,
+    tolerance only) and the caller must not cache them."""
+    contributors = group[0].contributors
+    ki = len(contributors)
     cfg = plan.cfg_dict()
-    idxs = [t.index for t in group]
     stacked = jnp.concatenate(
-        [jnp.stack([l[i].reshape(-1) for l in leaves]) for i in idxs],
-        axis=1)
+        [jnp.stack([leaf_of(j, t).reshape(-1) for j in contributors])
+         for t in group], axis=1)
     # the per-leaf stacks and the concatenated copy are both live while
     # concatenate runs: account 2x, not just the output
     cache.note_stacked(2 * int(stacked.nbytes))
     if base_leaves is None:
         b = jnp.zeros(stacked.shape[1:], stacked.dtype)
     else:
-        b = jnp.concatenate([jnp.asarray(base_leaves[i]).reshape(-1)
-                             for i in idxs])
+        b = jnp.concatenate([jnp.asarray(base_leaves[t.index]).reshape(-1)
+                             for t in group])
     approximate = False
     merged = None
+    acc = None
     if pallas:
-        merged = _nary_pallas_batch(strat, stacked, b, k, cfg, cache)
+        merged = _nary_pallas_batch(strat, stacked, b, ki, cfg, cache)
         approximate = merged is not None
     if merged is None:
-        merged = strat.apply_leaf(stacked, b, leaf_index=group[0].index,
-                                  seed=plan.seed, **cfg)
+        if strat.fold is not None and ki >= strat.fold.min_k:
+            kw = dict(strat.defaults)
+            kw.update(cfg)
+            merged, acc = run_fold(strat.fold, stacked, b, **kw)
+        else:
+            merged = strat.apply_leaf(stacked, b,
+                                      leaf_index=group[0].index,
+                                      seed=plan.seed, **cfg)
     outs: List[Any] = []
+    auxs: List[Any] = []
     off = 0
     for t in group:
         n = 1
         for d in t.shape:
             n *= d
         outs.append(merged[off:off + n].reshape(t.shape))
+        auxs.append(acc[off:off + n].reshape(t.shape)
+                    if acc is not None else None)
         off += n
-    return outs, approximate
+    return outs, auxs, approximate
 
 
 def _nary_weights(name: str, k: int, cfg: Dict[str, Any]
@@ -765,20 +1069,52 @@ def model_key(strategy_name: Optional[str],
     return h.digest()
 
 
+def densify_contributions(contribs: Sequence[Any],
+                          coverages: Sequence[Optional[Tuple[str, ...]]],
+                          base: Any) -> List[Any]:
+    """Dense view of a mixed dense/sparse contribution list: each sparse
+    contribution's absent leaves are filled from the base (inherit-base
+    semantics). Whole-model strategies consume this — their search/
+    factorization has no per-leaf structure to exploit."""
+    out: List[Any] = []
+    bflat = btd = None
+    for c, cov in zip(contribs, coverages):
+        if cov is None:
+            out.append(c)
+            continue
+        if base is None:
+            raise ValueError(
+                "a sparse contribution requires a base model here: its "
+                "absent leaves inherit the base (whole-model strategies "
+                "operate on densified contributions)")
+        if bflat is None:
+            bflat = jax.tree_util.tree_flatten_with_path(base)[0]
+            btd = jax.tree_util.tree_structure(base)
+        pairs = jax.tree_util.tree_flatten_with_path(c)[0]
+        have = {jax.tree_util.keystr(p): l for p, l in pairs}
+        dense = [have.get(jax.tree_util.keystr(p), l) for p, l in bflat]
+        out.append(jax.tree_util.tree_unflatten(btd, dense))
+    return out
+
+
 def merge(contribs: Sequence[Any], strategy_name: Optional[str] = None, *,
           contrib_ids: Optional[Sequence[str]] = None, base: Any = None,
           seed: int = 0, reduction: Optional[str] = None,
           use_cache: bool = True,
           max_batch_bytes: Optional[int] = None, pallas: bool = False,
           spec: Optional[MergeSpec] = None,
-          cache: Optional[EngineCache] = None, **cfg) -> Any:
+          cache: Optional[EngineCache] = None,
+          coverages: Optional[Sequence[Optional[Tuple[str, ...]]]]
+          = None, **cfg) -> Any:
     """Merge an ORDERED contribution list through the engine.
 
     Byte-identical to the whole-tree reference path
     (`core.resolve.reference_apply`) on the same inputs (verified for
     all 26 registry strategies); `whole_model` strategies route through
     that path with a single whole-model cache entry. Takes a MergeSpec
-    (`spec=`) or the legacy strategy-name + kwargs form.
+    (`spec=`) or the legacy strategy-name + kwargs form. `coverages`
+    marks sparse contributions (see plan_merge); whole-model strategies
+    densify them with base fill first.
     """
     if not contribs:
         raise ValueError("merge() requires at least one contribution")
@@ -787,6 +1123,9 @@ def merge(contribs: Sequence[Any], strategy_name: Optional[str] = None, *,
     strat = get_strategy(spec.strategy)
     if strat.whole_model or strat.leaf_fn is None:
         cache.stats["whole_model_dispatches"] += 1
+        if coverages is not None and any(c is not None
+                                         for c in coverages):
+            contribs = densify_contributions(contribs, coverages, base)
         if contrib_ids is not None:
             digests = [bytes.fromhex(e) if _is_hex(e) else e.encode()
                        for e in contrib_ids]
@@ -812,7 +1151,8 @@ def merge(contribs: Sequence[Any], strategy_name: Optional[str] = None, *,
         return out
     cache.stats["planned_merges"] += 1
     plan = plan_for(contribs, contrib_ids=contrib_ids,
-                    base=base, seed=seed, spec=spec)
+                    base=base, seed=seed, spec=spec,
+                    coverages=coverages)
     return execute_plan(plan, contribs, base=base, use_cache=use_cache,
                         max_batch_bytes=max_batch_bytes, pallas=pallas,
                         cache=cache)

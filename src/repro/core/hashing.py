@@ -51,6 +51,13 @@ def hexdigest(tree) -> str:
     return pytree_digest(tree).hex()
 
 
+def leaf_paths_of(tree) -> Tuple[str, ...]:
+    """Canonical sorted `keystr` paths of a pytree's leaves — the leaf
+    coverage descriptor of a (possibly partial) contribution."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return tuple(sorted(jax.tree_util.keystr(p) for p, _ in flat))
+
+
 # ---------------------------------------------------------------------------
 # Jittable order-independent fingerprint
 # ---------------------------------------------------------------------------

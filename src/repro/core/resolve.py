@@ -107,19 +107,29 @@ def _fetch_into(store: Dict[str, Any], absent: List[str],
 
 def _merge_ids(store: Dict[str, Any], ids: List[str], spec: MergeSpec,
                seed: int, *, base: Any, fetch: Optional[FetchHook],
-               cache: Optional[EngineCache], use_cache: bool
-               ) -> Tuple[Any, Dict[str, Any]]:
+               cache: Optional[EngineCache], use_cache: bool,
+               coverages: Optional[Dict[str, Optional[Tuple[str, ...]]]]
+               = None) -> Tuple[Any, Dict[str, Any]]:
     """Merge the ordered id list through the planner/executor engine
     (whole-model strategies route through the legacy whole-tree path
     with a single cache entry). Returns (merged, store) — the store may
-    have grown by fetched payloads, which grouped resolves reuse."""
+    have grown by fetched payloads, which grouped resolves reuse.
+
+    `coverages` maps sparse element ids to their leaf coverage
+    descriptors (from `CRDTMergeState.coverage()`); ids absent from the
+    map (or mapped to None) are dense."""
     strat = get_strategy(spec.strategy)
+    covs: Optional[List[Optional[Tuple[str, ...]]]] = None
+    if coverages and any(coverages.get(i) is not None for i in ids):
+        covs = [coverages.get(i) for i in ids]
 
     if strat.whole_model or strat.leaf_fn is None:
         # whole-tree route. The whole-model cache key is derivable from
-        # the eids alone, so probe it BEFORE fetching: a warm re-resolve
-        # on a blob-shedding replica must not re-ship k full models for
-        # a result it already has.
+        # the eids alone (a sparse payload's content hash determines its
+        # densified form given the base, which the key also covers), so
+        # probe it BEFORE fetching: a warm re-resolve on a blob-shedding
+        # replica must not re-ship k full models for a result it
+        # already has.
         if use_cache:
             key = engine.model_key(
                 None, [bytes.fromhex(i) for i in ids],
@@ -132,7 +142,7 @@ def _merge_ids(store: Dict[str, Any], ids: List[str], spec: MergeSpec,
             store = _fetch_into(store, absent, fetch)
         out = engine.merge([store[i] for i in ids], contrib_ids=tuple(ids),
                            base=base, seed=seed, use_cache=use_cache,
-                           spec=spec, cache=cache)
+                           spec=spec, cache=cache, coverages=covs)
         return out, store
 
     # engine route: plan from resident payloads + memoized digests
@@ -160,37 +170,45 @@ def _merge_ids(store: Dict[str, Any], ids: List[str], spec: MergeSpec,
         for i in unknown:
             metas[i] = engine.contrib_meta(store[i], eid=i)
     plan = engine.plan_merge([metas[i] for i in ids], base=base,
-                             seed=seed, spec=spec)
+                             seed=seed, spec=spec, coverages=covs)
     absent = [i for i in ids if i not in store]
     if absent:
-        _, misses = engine.plan_cached_split(plan, cache)
-        if misses or not use_cache:
-            store = _fetch_into(store, absent, fetch)
+        if use_cache:
+            # leaf-granular AND fold-aware: pull only the payloads some
+            # cache-missed task actually consumes, minus already-folded
+            # prefixes — O(changed) fetch; an all-cached plan pulls
+            # nothing at all.
+            needed = engine.plan_needed_ids(plan, cache)
+            pull = [ids[j] for j in needed if ids[j] not in store]
         else:
-            # leaf-granular: every task is cached — no payloads needed
-            return engine.execute_plan(plan, None, base=base,
-                                       cache=cache), store
-    out = engine.execute_plan(plan, [store[i] for i in ids], base=base,
-                              use_cache=use_cache, cache=cache)
+            pull = absent
+        if pull:
+            store = _fetch_into(store, pull, fetch)
+    out = engine.execute_plan(plan, [store.get(i) for i in ids],
+                              base=base, use_cache=use_cache, cache=cache)
     return out, store
 
 
 def _grouped_resolve(store: Dict[str, Any], ids: List[str],
                      spec: MergeSpec, seed: int, *, base: Any,
                      fetch: Optional[FetchHook],
-                     cache: Optional[EngineCache], use_cache: bool) -> Any:
+                     cache: Optional[EngineCache], use_cache: bool,
+                     coverages: Optional[Dict[str, Optional[Tuple[str, ...]]]]
+                     = None) -> Any:
     """Two-level resolve (paper §7.2 L3 mitigation 2): sub-groups of
     `spec.group_size` over the canonical order resolve first; a second
     pass merges the sub-group outputs with seed+1. Both passes run
     through the engine, so group outputs cache by sub-root and missing
-    payloads fetch leaf-granularly per group."""
+    payloads fetch leaf-granularly per group. Sub-group outputs are
+    dense whatever their inputs' coverage (absent leaves inherited the
+    base), so the second pass never sees sparsity."""
     groups = [ids[i:i + spec.group_size]
               for i in range(0, len(ids), spec.group_size)]
     firsts = []
     for g in groups:
         out, store = _merge_ids(store, g, spec, seed, base=base,
                                 fetch=fetch, cache=cache,
-                                use_cache=use_cache)
+                                use_cache=use_cache, coverages=coverages)
         firsts.append(out)
     return engine.merge(firsts, base=base, seed=seed + 1,
                         use_cache=use_cache, spec=spec, cache=cache)
@@ -265,12 +283,14 @@ def resolve_spec(state: CRDTMergeState, spec: MergeSpec, *,
                     "resolve() requires a non-empty visible set")
             root = state.merkle_root()
         seed = seed_from_root(root)
+        coverages = state.coverage()
     if spec.group_size is not None:
         return _grouped_resolve(state.store, ids, spec, seed, base=base,
                                 fetch=fetch, cache=cache,
-                                use_cache=use_cache)
+                                use_cache=use_cache, coverages=coverages)
     out, _ = _merge_ids(state.store, ids, spec, seed, base=base,
-                        fetch=fetch, cache=cache, use_cache=use_cache)
+                        fetch=fetch, cache=cache, use_cache=use_cache,
+                        coverages=coverages)
     return out
 
 
@@ -320,6 +340,51 @@ def reference_apply(strategy_name: str, contribs: List[Any], *, base=None,
             return _tree_fold(strat, contribs, base, seed, cfg)
         return _seq_fold(strat, contribs, base, seed, cfg)
     return strat(contribs, base=base, seed=seed, **cfg)
+
+
+def sparse_reference_apply(strategy_name: str, contribs: List[Any],
+                           coverages: List[Optional[Tuple[str, ...]]], *,
+                           base: Any, seed: int = 0,
+                           reduction: str = "fold", **cfg) -> Any:
+    """Reference semantics for mixed dense/sparse contribution lists,
+    built ONLY from the whole-tree path: each model leaf is merged over
+    exactly its covering contribution subset, at its global flatten
+    index; zero-coverage leaves inherit the base.
+
+    Implementation: group leaves by covering subset; for each distinct
+    subset, densify its contributions (base fill) and run the dense
+    `reference_apply` over the FULL model structure, then keep only the
+    leaves whose covering subset it is. Leafwise strategies act
+    per-leaf with the global flatten index, so those kept leaves are
+    byte-exactly the per-leaf merge of that subset — an engine-free
+    definition the sparse engine path is verified against."""
+    strat = get_strategy(strategy_name)
+    if strat.whole_model or strat.leaf_fn is None:
+        dense = engine.densify_contributions(contribs, coverages, base)
+        return reference_apply(strategy_name, dense, base=base, seed=seed,
+                               reduction=reduction, **cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(base)
+    paths = [jax.tree_util.keystr(p) for p, _ in flat]
+    subset_of: Dict[str, Tuple[int, ...]] = {
+        p: tuple(j for j, cov in enumerate(coverages)
+                 if cov is None or p in cov) for p in paths}
+    out = [None] * len(paths)
+    for subset in set(subset_of.values()):
+        if not subset:
+            for i, p in enumerate(paths):
+                if subset_of[p] == subset:
+                    out[i] = flat[i][1]
+            continue
+        dense = engine.densify_contributions(
+            [contribs[j] for j in subset],
+            [coverages[j] for j in subset], base)
+        ref = jax.tree_util.tree_leaves(reference_apply(
+            strategy_name, dense, base=base, seed=seed,
+            reduction=reduction, **cfg))
+        for i, p in enumerate(paths):
+            if subset_of[p] == subset:
+                out[i] = ref[i]
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def apply_strategy(strategy_name: str, contribs: List[Any], *, base=None,

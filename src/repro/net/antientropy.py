@@ -80,9 +80,11 @@ from repro.net.wire import (CHUNK_ENVELOPE, DEFAULT_MAX_FRAME, BlobManifest,
                             BlobReq, BlobResp, BucketItemsMsg, BucketsMsg,
                             ChunkData, ChunkReq, DeltaMsg, HaveEntry,
                             HaveMap, HaveReq, ManifestEntry, Message,
-                            ResolveSpecMsg, StateMsg, SyncDone, SyncReq,
-                            WireError, decode_blob, encode_blob,
-                            manifest_entry, msg_to_delta, msg_to_state)
+                            ResolveSpecMsg, SparseManifest,
+                            SparseManifestEntry, StateMsg, SyncDone,
+                            SyncReq, WireError, decode_blob, encode_blob,
+                            leaf_refs, manifest_entry, msg_to_delta,
+                            msg_to_state)
 
 Reply = Tuple[str, Message]
 
@@ -289,9 +291,11 @@ class SyncNode:
     # -- local updates -----------------------------------------------------
 
     def contribute(self, contribution: Any,
-                   element_id: Optional[str] = None) -> None:
+                   element_id: Optional[str] = None, *,
+                   leaves: Optional[Iterable[str]] = None) -> None:
         self.state = self.state.add(contribution, self.node_id,
-                                    element_id=element_id)
+                                    element_id=element_id,
+                                    leaf_paths=leaves)
         self._gc_partials()
 
     def retract(self, element_id: str) -> None:
@@ -476,6 +480,8 @@ class SyncNode:
             return self._on_blob_resp(msg)
         if isinstance(msg, BlobManifest):
             return self._on_blob_manifest(msg)
+        if isinstance(msg, SparseManifest):
+            return self._on_sparse_manifest(msg)
         if isinstance(msg, ChunkReq):
             return self._on_chunk_req(msg)
         if isinstance(msg, ChunkData):
@@ -596,6 +602,8 @@ class SyncNode:
         small: Dict[str, Any] = {}
         small_bytes = 0
         entries: List[ManifestEntry] = []
+        sparse_entries: List[SparseManifestEntry] = []
+        coverages = self.state.coverage()
 
         def flush_small() -> None:
             nonlocal small, small_bytes
@@ -615,8 +623,25 @@ class SyncNode:
             enc = self._enc_cache.get(eid) or encode_blob(payload)
             if len(enc) > self._chunk_payload:
                 self._cache_encoding(eid, enc)      # chunk source
-                entries.append(manifest_entry(eid, enc, self._chunk_payload))
+                me = manifest_entry(eid, enc, self._chunk_payload)
                 self.stats["blobs_announced"] += 1
+                if coverages.get(eid) is not None:
+                    # sparse blobs announce at leaf granularity: the
+                    # SparseManifest embeds the same chunking manifest
+                    # (transfer can start from it) plus per-leaf refs so
+                    # the requester's planner can key per-leaf subsets —
+                    # and skip the fetch entirely — before any chunk
+                    # arrives. Leaf refs describe the wire-format
+                    # payload, i.e. what the receiver's store will hold.
+                    wp = payload
+                    if self.compress_blobs:
+                        from repro.core.compression import decompress_tree
+                        wp = decompress_tree(wp)
+                    sparse_entries.append(
+                        SparseManifestEntry(me, leaf_refs(wp)))
+                    self.stats["sparse_manifests_sent"] += 1
+                else:
+                    entries.append(me)
                 continue
             # +128 approximates the per-entry envelope (eid + lengths)
             if small and small_bytes + len(enc) + 128 > self._chunk_payload:
@@ -628,6 +653,10 @@ class SyncNode:
             replies.append((msg.sender,
                             BlobManifest(self.node_id, msg.sid,
                                          tuple(entries))))
+        if sparse_entries:
+            replies.append((msg.sender,
+                            SparseManifest(self.node_id, msg.sid,
+                                           tuple(sparse_entries))))
         return replies
 
     def _on_blob_resp(self, msg: BlobResp) -> List[Reply]:
@@ -657,6 +686,25 @@ class SyncNode:
                 del self._blob_inflight[key]
                 self._req_stamp.pop(key, None)
         return []
+
+    def _on_sparse_manifest(self, msg: SparseManifest) -> List[Reply]:
+        """Leaf-granular announcement: feed every entry's per-leaf refs
+        into the planner's digest memo (`engine.note_meta`) — resolve
+        can then plan per-leaf contribution subsets, and complete warm
+        or fold-resumable plans, with the payload still on the wire —
+        then adopt the embedded chunk manifests exactly as a
+        BlobManifest (the announcer joins each blob's source pool)."""
+        from repro.core import engine
+        for e in msg.entries:
+            engine.note_meta(e.eid,
+                             [l.path for l in e.leaves],
+                             [l.digest for l in e.leaves],
+                             [l.shape for l in e.leaves],
+                             [l.dtype for l in e.leaves])
+        self.stats["sparse_manifests_received"] += len(msg.entries)
+        return self._on_blob_manifest(
+            BlobManifest(msg.sender, msg.sid,
+                         tuple(e.manifest for e in msg.entries)))
 
     def _on_blob_manifest(self, msg: BlobManifest) -> List[Reply]:
         self._gc_stale_requests()

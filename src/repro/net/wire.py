@@ -63,7 +63,8 @@ ACCEPTED_VERSIONS = frozenset({1, 2})   # decoded without complaint
 # Interop is two-directional: frames whose type already existed in v1
 # keep the v1 stamp, so an un-upgraded peer (which rejects version != 1)
 # still reads everything it can parse; only the v2-introduced frames
-# (HaveReq/HaveMap discovery, ResolveSpecMsg) carry the v2 stamp.
+# (HaveReq/HaveMap discovery, ResolveSpecMsg, SparseManifest) carry the
+# v2 stamp.
 # Decoding is Postel-lenient about the version/type pairing — the type
 # tag alone selects the decoder.
 HEADER = struct.Struct(">2sBBI")        # magic, version, type, payload len
@@ -85,6 +86,7 @@ MSG_CHUNK_DATA = 0x18
 MSG_HAVE_REQ = 0x19
 MSG_HAVE_MAP = 0x1A
 MSG_RESOLVE_SPEC = 0x1B
+MSG_SPARSE_MANIFEST = 0x1C
 
 # Streaming transfer sizing. A multi-GB pytree must never become one
 # giant frame: blobs whose canonical encoding exceeds the per-frame data
@@ -302,6 +304,52 @@ class HaveMap:
 
 
 @dataclass(frozen=True)
+class LeafRef:
+    """Per-leaf planner metadata of one contribution: canonical keystr
+    path, `tensor_digest`, dtype name, shape. A SparseManifest full of
+    these lets the receiver plan per-leaf contribution subsets — and
+    complete warm or fold-resumable resolves — before (or without)
+    fetching a single payload chunk."""
+    path: str
+    digest: bytes                  # 32B tensor_digest
+    dtype: str
+    shape: Tuple[int, ...]
+
+
+@dataclass(frozen=True)
+class SparseManifestEntry:
+    """One contribution's leaf-level announcement: the chunking manifest
+    of its canonical blob encoding (so chunk transfer can start from the
+    same frame) plus one LeafRef per carried leaf, sorted by path. The
+    leaf list IS the coverage descriptor; a dense contribution is the
+    trivially-full case (every model leaf listed)."""
+    manifest: ManifestEntry
+    leaves: Tuple[LeafRef, ...]
+
+    @property
+    def eid(self) -> str:
+        return self.manifest.eid
+
+    @property
+    def coverage(self) -> Tuple[str, ...]:
+        return tuple(l.path for l in self.leaves)
+
+
+@dataclass(frozen=True)
+class SparseManifest:
+    """Announces contributions at leaf granularity (wire v2): per-leaf
+    blob refs feed the planner's digest memo (`engine.note_meta`), and
+    the embedded chunk manifests register the sender as a chunk source
+    — so a receiver fetches only the payloads some cache-missed leaf
+    actually needs (O(changed) fetch)."""
+    sender: str
+    sid: int
+    entries: Tuple[SparseManifestEntry, ...]
+
+    type = MSG_SPARSE_MANIFEST
+
+
+@dataclass(frozen=True)
 class ResolveSpecMsg:
     """Gossip *what to resolve*: a `repro.api.MergeSpec` in its
     canonical encoding. Contributions already converge via the OR-Set;
@@ -504,17 +552,43 @@ def decode_value(r: _Reader) -> Any:
 # ---------------------------------------------------------------------------
 
 
+# High bit of the adds count word marks the 4-string entry form that
+# carries leaf coverage descriptors. A set with no sparse entries keeps
+# the legacy 3-string encoding byte-for-byte (un-upgraded peers parse
+# it); sparse entries append a 4th string — the \x1f-joined coverage
+# paths, empty for dense entries riding in the same set.
+_SPARSE_ADDS_FLAG = 0x80000000
+_COVER_SEP = "\x1f"
+
+
 def _enc_adds(buf: bytearray, adds: FrozenSet[AddEntry]) -> None:
-    _p_u32(buf, len(adds))
-    for e in sorted(adds):
+    entries = sorted(adds)
+    if len(entries) >= _SPARSE_ADDS_FLAG:
+        raise WireError("too many add entries for one frame")
+    sparse = any(e.leaf_paths is not None for e in entries)
+    _p_u32(buf, len(entries) | (_SPARSE_ADDS_FLAG if sparse else 0))
+    for e in entries:
         _p_str(buf, e.element_id)
         _p_str(buf, e.tag)
         _p_str(buf, e.node)
+        if sparse:
+            _p_str(buf, _COVER_SEP.join(e.leaf_paths)
+                   if e.leaf_paths is not None else "")
 
 
 def _dec_adds(r: _Reader) -> FrozenSet[AddEntry]:
-    return frozenset(AddEntry(r.str_(), r.str_(), r.str_())
-                     for _ in range(r.u32()))
+    word = r.u32()
+    n, sparse = word & ~_SPARSE_ADDS_FLAG, bool(word & _SPARSE_ADDS_FLAG)
+    out = []
+    for _ in range(n):
+        eid, tag, node = r.str_(), r.str_(), r.str_()
+        cover = None
+        if sparse:
+            raw = r.str_()
+            if raw:
+                cover = tuple(raw.split(_COVER_SEP))
+        out.append(AddEntry(eid, tag, node, cover))
+    return frozenset(out)
 
 
 def _enc_removes(buf: bytearray, removes: FrozenSet[str]) -> None:
@@ -762,6 +836,46 @@ def _dec_have_map(r: _Reader) -> HaveMap:
     return HaveMap(sender, sid, tuple(entries))
 
 
+def _enc_sparse_manifest(buf: bytearray, m: SparseManifest) -> None:
+    _p_str(buf, m.sender)
+    _p_u64(buf, m.sid)
+    _p_u32(buf, len(m.entries))
+    for e in sorted(m.entries, key=lambda x: x.eid):
+        me = e.manifest
+        _p_str(buf, me.eid)
+        _p_u64(buf, me.total_size)
+        _p_u32(buf, me.chunk_size)
+        _p_u32(buf, len(me.digests))
+        for d in me.digests:
+            if len(d) != DIGEST_LEN:
+                raise WireError(f"chunk digest must be {DIGEST_LEN}B")
+            buf += d
+        _p_u32(buf, len(e.leaves))
+        for l in e.leaves:
+            if len(l.digest) != DIGEST_LEN:
+                raise WireError(f"leaf digest must be {DIGEST_LEN}B")
+            _p_str(buf, l.path)
+            buf += l.digest
+            _enc_tensor_header(buf, l.dtype, tuple(l.shape))
+
+
+def _dec_sparse_manifest(r: _Reader) -> SparseManifest:
+    sender, sid = r.str_(), r.u64()
+    entries = []
+    for _ in range(r.u32()):
+        eid, total, csize = r.str_(), r.u64(), r.u32()
+        digests = tuple(r.take(DIGEST_LEN) for _ in range(r.u32()))
+        leaves = []
+        for _ in range(r.u32()):
+            path = r.str_()
+            digest = r.take(DIGEST_LEN)
+            dtype, shape = _dec_tensor_header(r)
+            leaves.append(LeafRef(path, digest, dtype, shape))
+        entries.append(SparseManifestEntry(
+            ManifestEntry(eid, csize, total, digests), tuple(leaves)))
+    return SparseManifest(sender, sid, tuple(entries))
+
+
 def _enc_resolve_spec(buf: bytearray, m: ResolveSpecMsg) -> None:
     from repro.api.spec import MergeSpec, SpecError
     if not isinstance(m.spec, MergeSpec):
@@ -807,6 +921,7 @@ _ENCODERS = {
     MSG_BLOB_MANIFEST: _enc_blob_manifest, MSG_CHUNK_REQ: _enc_chunk_req,
     MSG_CHUNK_DATA: _enc_chunk_data, MSG_HAVE_REQ: _enc_have_req,
     MSG_HAVE_MAP: _enc_have_map, MSG_RESOLVE_SPEC: _enc_resolve_spec,
+    MSG_SPARSE_MANIFEST: _enc_sparse_manifest,
 }
 _DECODERS = {
     MSG_STATE: _dec_state, MSG_DELTA: _dec_delta,
@@ -816,6 +931,7 @@ _DECODERS = {
     MSG_BLOB_MANIFEST: _dec_blob_manifest, MSG_CHUNK_REQ: _dec_chunk_req,
     MSG_CHUNK_DATA: _dec_chunk_data, MSG_HAVE_REQ: _dec_have_req,
     MSG_HAVE_MAP: _dec_have_map, MSG_RESOLVE_SPEC: _dec_resolve_spec,
+    MSG_SPARSE_MANIFEST: _dec_sparse_manifest,
 }
 
 # Public registry: every frame tag the codec accepts, with its message
@@ -829,6 +945,7 @@ MESSAGE_TYPES: Dict[int, type] = {
     MSG_CHUNK_REQ: ChunkReq, MSG_CHUNK_DATA: ChunkData,
     MSG_HAVE_REQ: HaveReq, MSG_HAVE_MAP: HaveMap,
     MSG_RESOLVE_SPEC: ResolveSpecMsg,
+    MSG_SPARSE_MANIFEST: SparseManifest,
 }
 
 
@@ -837,7 +954,8 @@ MESSAGE_TYPES: Dict[int, type] = {
 # ---------------------------------------------------------------------------
 
 
-_V2_TYPES = frozenset({MSG_HAVE_REQ, MSG_HAVE_MAP, MSG_RESOLVE_SPEC})
+_V2_TYPES = frozenset({MSG_HAVE_REQ, MSG_HAVE_MAP, MSG_RESOLVE_SPEC,
+                       MSG_SPARSE_MANIFEST})
 
 
 def frame_version(mtype: int) -> int:
@@ -932,6 +1050,27 @@ def chunk_digests(blob: bytes, chunk_size: int) -> Tuple[bytes, ...]:
 def manifest_entry(eid: str, blob: bytes, chunk_size: int) -> ManifestEntry:
     return ManifestEntry(eid, chunk_size, len(blob),
                          chunk_digests(blob, chunk_size))
+
+
+def leaf_refs(payload: Any) -> Tuple[LeafRef, ...]:
+    """Per-leaf planner refs of a payload pytree, sorted by path (the
+    canonical coverage order)."""
+    import jax
+    from repro.core.hashing import tensor_digest
+    flat, _ = jax.tree_util.tree_flatten_with_path(payload)
+    refs = [LeafRef(jax.tree_util.keystr(p), tensor_digest(leaf),
+                    str(np.asarray(leaf).dtype),
+                    tuple(np.asarray(leaf).shape))
+            for p, leaf in flat]
+    return tuple(sorted(refs, key=lambda r: r.path))
+
+
+def sparse_manifest_entry(eid: str, payload: Any, blob: bytes,
+                          chunk_size: int) -> SparseManifestEntry:
+    """Leaf-level announcement of one contribution: chunking manifest of
+    its canonical blob encoding + one LeafRef per carried leaf."""
+    return SparseManifestEntry(manifest_entry(eid, blob, chunk_size),
+                               leaf_refs(payload))
 
 
 # ---------------------------------------------------------------------------

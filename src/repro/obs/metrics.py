@@ -112,6 +112,13 @@ declare("engine_cache_resident_bytes", "gauge",
         "Bytes of merge outputs resident in the sub-root cache")
 declare("engine_plan_leaves", "gauge",
         "Leaf tasks in the most recent merge plan", deterministic=True)
+declare("engine_sparse_leaves_skipped", "gauge",
+        "Leaves of the most recent plan not touched by every "
+        "contribution: partial-subset tasks plus inherit-base leaves",
+        deterministic=True)
+declare("resolve_fold_updates_total", "counter",
+        "Contributions folded into cached accumulators by prefix-fold "
+        "resumption (per EngineCache)", deterministic=True)
 declare("resolve_layer1_overhead_ms", "histogram",
         "CRDT-side resolve overhead: gate + canonical order + Merkle "
         "root + seed derivation, per resolve (the paper's <0.5 ms claim)",

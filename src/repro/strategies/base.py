@@ -28,6 +28,16 @@ unknown or ill-typed kwargs at construction (the legacy ``**cfg``
 surface silently dropped them at merge time). The audit suite asserts
 each catalog strategy's schema matches its leaf function's signature
 exactly, names and defaults both.
+
+Algebraically incremental strategies additionally declare a `LeafFold`:
+an explicit left fold (init / step / finalize) over the ordered
+contribution list of ONE leaf. The fold IS the canonical computation —
+`run_fold` drives both the full recompute inside `leaf_fn` and the
+engine's `fold_update` resumption, so "fold result bit-equal to full
+recompute" holds by construction rather than by relying on XLA
+reduction order (jnp.sum/jnp.mean reassociate; a resumed fold would
+not). The audit suite enforces the contract for every strategy that
+claims `incremental`.
 """
 from __future__ import annotations
 
@@ -36,6 +46,58 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class LeafFold:
+    """Sequential left fold defining an incremental strategy's per-leaf
+    math: acc = init(x_0); acc = step(acc, x_j) for j = 1..k-1;
+    out = finalize(acc, k). The accumulator is float32 (promoted from
+    the input dtype) and strictly sequential in canonical contribution
+    order, so a cached accumulator extends with new contributions to a
+    bit-identical result (`run_fold(..., acc=cached, start=m)`).
+
+    `min_k` guards regime switches: a fold is only valid when the full
+    recompute at every prefix length >= min_k takes the fold path (e.g.
+    `linear` interpolates at k == 2 — a different formula — so its fold
+    declares min_k=3 and the engine will not resume from a k == 2
+    cache entry).
+    """
+    init: Callable      # init(x0, base, **cfg) -> acc (float32)
+    step: Callable      # step(acc, x, base, **cfg) -> acc
+    finalize: Callable  # finalize(acc, k, base, dtype, **cfg) -> leaf
+    min_k: int = 1
+
+
+def run_fold(fold: LeafFold, stacked, base, *, acc=None, start: int = 0,
+             finalize: bool = True, k: Optional[int] = None, **cfg):
+    """Drive a LeafFold over stacked[start:k]. This single driver is the
+    one place incremental math executes — the catalog's `leaf_fn`s call
+    it for the full recompute and the engine calls it to resume from a
+    cached accumulator, which is what makes the two bit-equal.
+
+    `stacked` is whatever slice of the ordered contribution list is at
+    hand ([k, ...] array or list of leaves): a full recompute passes all
+    k leaves and no `acc`; a resumption passes only the NEW leaves plus
+    the cached `acc` and the TOTAL count via `k=` (finalize needs the
+    true k, e.g. the mean divisor).
+
+    Returns (value_or_None, acc): `acc` is the raw accumulator (reusable
+    for resumption); `value` is finalize(acc, k) when requested.
+    """
+    i = start
+    if acc is None:
+        acc = fold.init(jnp.asarray(stacked[i], jnp.float32), base, **cfg)
+        i += 1
+    while i < len(stacked):
+        acc = fold.step(acc, jnp.asarray(stacked[i], jnp.float32),
+                        base, **cfg)
+        i += 1
+    if not finalize:
+        return None, acc
+    total = (len(stacked) - start) if k is None else k
+    dtype = jnp.asarray(stacked[0]).dtype
+    return fold.finalize(acc, total, base, dtype, **cfg), acc
 
 
 @dataclass(frozen=True)
@@ -53,6 +115,10 @@ class Strategy:
     # declared cfg knobs: {name: (type, default)}. None = undeclared
     # (strict MergeSpec construction then rejects any cfg at all).
     cfg_schema: Optional[Dict[str, Tuple[type, Any]]] = None
+    # algebraic incremental fold; None = full per-leaf recompute only.
+    # The audit suite proves every declared fold bit-equal to the full
+    # recompute at all prefix lengths >= fold.min_k.
+    fold: Optional[LeafFold] = None
 
     def __call__(self, contribs: List[Any], *, base: Any = None,
                  seed: int = 0, **cfg) -> Any:
@@ -95,6 +161,14 @@ class Strategy:
         per-leaf key, no per-leaf fold structure."""
         return (self.elementwise and not self.needs_key
                 and not self.binary_only and self.leaf_fn is not None)
+
+    @property
+    def incremental(self) -> bool:
+        """True when the strategy declares an audited algebraic fold:
+        the engine may extend a cached per-leaf accumulator with new
+        contributions instead of recomputing over all k, bit-equal to
+        the full recompute by the LeafFold contract."""
+        return self.fold is not None
 
 
 REGISTRY: Dict[str, Strategy] = {}

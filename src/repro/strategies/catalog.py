@@ -40,7 +40,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.strategies.base import Strategy, leafwise, register
+from repro.strategies.base import (LeafFold, Strategy, leafwise, register,
+                                   run_fold)
 
 EPS = 1e-12
 
@@ -61,24 +62,75 @@ def _as2d(x):
 
 
 # ---------------------------------------------------------------- linear ---
+# The linear family is *algebraically incremental*: each strategy's
+# canonical per-leaf math is an explicit sequential float32 LeafFold
+# (init/step/finalize) rather than jnp.mean/jnp.sum, because XLA
+# reductions reassociate — sum(s, axis=0) is NOT bitwise equal to a
+# left fold on this platform, and the engine's fold_update resumption
+# must be bit-equal to the full recompute. leaf_fn and fold_update both
+# drive the same fold via `run_fold`, so equality holds by construction
+# (audited for every prefix length in tests/test_strategies_audit.py).
+
+
+def _cast(out, dtype):
+    """Accumulation is float32; cast back for floating inputs (integer
+    inputs keep the float32 result, matching jnp.mean semantics)."""
+    return out.astype(dtype) if jnp.issubdtype(dtype, jnp.floating) else out
+
+
+def _sum_init(x0, b, **kw):
+    return x0
+
+
+def _sum_step(acc, x, b, **kw):
+    return acc + x
+
+
+def _mean_fin(acc, k, b, dtype, **kw):
+    return _cast(acc / k, dtype)
+
+
+def _tau_init(x0, b, **kw):
+    return x0 - jnp.asarray(b, jnp.float32)
+
+
+def _tau_step(acc, x, b, **kw):
+    return acc + (x - jnp.asarray(b, jnp.float32))
+
+
+def _ta_fin(acc, k, b, dtype, lam=1.0, **kw):
+    return _cast(jnp.asarray(b, jnp.float32) + lam * acc, dtype)
+
+
+def _neg_fin(acc, k, b, dtype, lam=0.5, **kw):
+    return _cast(jnp.asarray(b, jnp.float32) - lam * (acc / k), dtype)
+
+
+MEAN_FOLD = LeafFold(_sum_init, _sum_step, _mean_fin)
+# linear interpolates at k == 2 (a different formula), so its fold is
+# only the canonical computation from k == 3 up — the engine must not
+# resume from (or finalize at) any shorter prefix.
+LINEAR_FOLD = LeafFold(_sum_init, _sum_step, _mean_fin, min_k=3)
+TASK_ARITH_FOLD = LeafFold(_tau_init, _tau_step, _ta_fin)
+NEGATIVE_FOLD = LeafFold(_tau_init, _tau_step, _neg_fin)
 
 
 def _weight_average(s, b, **kw):
-    return jnp.mean(s, axis=0)
+    return run_fold(MEAN_FOLD, s, b, **kw)[0]
 
 
 def _linear(s, b, t=0.5, **kw):
     if s.shape[0] == 2:
         return (1.0 - t) * s[0] + t * s[1]
-    return jnp.mean(s, axis=0)
+    return run_fold(LINEAR_FOLD, s, b, t=t, **kw)[0]
 
 
 def _task_arithmetic(s, b, lam=1.0, **kw):
-    return b + lam * jnp.sum(s - b, axis=0)
+    return run_fold(TASK_ARITH_FOLD, s, b, lam=lam, **kw)[0]
 
 
 def _negative_merge(s, b, lam=0.5, **kw):
-    return b - lam * jnp.mean(s - b, axis=0)
+    return run_fold(NEGATIVE_FOLD, s, b, lam=lam, **kw)[0]
 
 
 def _fisher_merge(s, b, eps=1e-8, **kw):
@@ -421,13 +473,13 @@ def _genetic_merge(s, b, grid=11, gens=3, reg=0.05, **kw):
 
 def _reg(name, leaf_fn, *, schema, needs_key=False, stochastic=False,
          binary_only=False, category="linear", whole_model=False,
-         elementwise=False, **defaults):
+         elementwise=False, fold=None, **defaults):
     register(Strategy(name=name, fn=leafwise(leaf_fn, needs_key=needs_key),
                       stochastic=stochastic, binary_only=binary_only,
                       category=category, defaults=defaults,
                       leaf_fn=leaf_fn, needs_key=needs_key,
                       whole_model=whole_model, elementwise=elementwise,
-                      cfg_schema=dict(schema)))
+                      cfg_schema=dict(schema), fold=fold))
 
 
 # `elementwise`: the leaf function reduces only over the leading k axis
@@ -446,13 +498,14 @@ def _reg(name, leaf_fn, *, schema, needs_key=False, stochastic=False,
 # defaults into the cache key; tests/test_strategies_audit.py diffs
 # every schema against inspect.signature so the two cannot drift.
 
-_reg("weight_average", _weight_average, elementwise=True, schema={})
+_reg("weight_average", _weight_average, elementwise=True, schema={},
+     fold=MEAN_FOLD)
 _reg("linear", _linear, elementwise=True,
-     schema={"t": (float, 0.5)})
+     schema={"t": (float, 0.5)}, fold=LINEAR_FOLD)
 _reg("task_arithmetic", _task_arithmetic, elementwise=True,
-     schema={"lam": (float, 1.0)})
+     schema={"lam": (float, 1.0)}, fold=TASK_ARITH_FOLD)
 _reg("negative_merge", _negative_merge, elementwise=True,
-     schema={"lam": (float, 0.5)})
+     schema={"lam": (float, 0.5)}, fold=NEGATIVE_FOLD)
 _reg("fisher_merge", _fisher_merge, elementwise=True,
      schema={"eps": (float, 1e-8)})
 _reg("dam", _dam, schema={})

@@ -188,7 +188,9 @@ def test_stochastic_strategies_do_not_reuse_stale_leaves():
 def test_cache_byte_budget_eviction():
     """Size-aware eviction: resident bytes never exceed the budget, the
     LRU tensor goes first, and an evicted leaf recomputes to identical
-    bytes."""
+    bytes. Uses a non-incremental strategy so each entry costs exactly
+    one leaf's bytes (incremental strategies cache their fp32 fold
+    accumulator alongside the value — covered below)."""
     clear_cache()
     leaf_bytes = 8 * 8 * 4
     set_cache_limit(bytes=5 * leaf_bytes)     # room for 5 of 12 leaves
@@ -196,12 +198,34 @@ def test_cache_byte_budget_eviction():
         s = CRDTMergeState()
         for j in range(3):
             s = s.add(_leafy_model(j), node=f"n{j}")
-        out1 = resolve(s, MergeSpec("weight_average"))
+        out1 = resolve(s, MergeSpec("ties"))
         info = cache_info()
         assert info.entries == 5
         assert info.bytes == 5 * leaf_bytes
         assert info.bytes <= info.byte_limit
-        out2 = resolve(s, MergeSpec("weight_average"))   # 5 hits + 7 recomputes
+        out2 = resolve(s, MergeSpec("ties"))   # 5 hits + 7 recomputes
+        assert _bytes_equal(out1, out2)
+    finally:
+        reset_cache_limits()
+        clear_cache()
+
+
+def test_cache_budget_counts_fold_accumulators():
+    """Incremental strategies cache (value, fp32 accumulator) per leaf;
+    the byte budget accounts both, so fewer entries fit."""
+    clear_cache()
+    leaf_bytes = 8 * 8 * 4
+    entry_bytes = 2 * leaf_bytes              # fp32 value + fp32 acc
+    set_cache_limit(bytes=5 * leaf_bytes)
+    try:
+        s = CRDTMergeState()
+        for j in range(3):
+            s = s.add(_leafy_model(j), node=f"n{j}")
+        out1 = resolve(s, MergeSpec("weight_average"))
+        info = cache_info()
+        assert info.entries == 2              # 2 * 512B <= 1280B < 3 * 512B
+        assert info.bytes == 2 * entry_bytes
+        out2 = resolve(s, MergeSpec("weight_average"))
         assert _bytes_equal(out1, out2)
     finally:
         reset_cache_limits()

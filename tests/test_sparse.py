@@ -1,0 +1,654 @@
+"""Sparse contributions end to end: per-leaf visible-set lattice laws,
+Remark-16 per-leaf merge semantics against an engine-free reference for
+all 26 strategies, O(changed) re-resolve accounting with prefix-fold
+resumption, tag-collision regression after tombstone GC, wire/manifest
+round-trips (dense bytes unchanged), and simulator convergence with
+mixed dense/sparse traffic across partitions."""
+import hashlib
+import random
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.api import MergeSpec, Replica
+from repro.core import engine
+from repro.core.engine import EngineCache
+from repro.core.hashing import leaf_paths_of, pytree_digest
+from repro.core.resolve import (canonical_order, resolve_spec,
+                                seed_from_root, sparse_reference_apply)
+from repro.core.state import AddEntry, CRDTMergeState
+from repro.strategies import list_strategies
+from repro.net import wire
+from repro.net.antientropy import SyncNode
+from repro.net.transport import InMemoryTransport, pump
+from repro.net.wire import (SparseManifest, StateMsg, decode_message,
+                            encode_blob, encode_message,
+                            sparse_manifest_entry)
+
+
+def _bytes_equal(a, b) -> bool:
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.asarray(x).tobytes() == np.asarray(y).tobytes()
+        for x, y in zip(la, lb))
+
+
+def _ctrl_eid(prefix: str) -> str:
+    """Hex eid with a controlled sort prefix (pins canonical order)."""
+    return prefix + hashlib.sha256(prefix.encode()).hexdigest()[:62]
+
+
+# Model structure shared by every test: three leaves, one nested.
+P_W, P_EMB, P_LN = "['blk']['w']", "['emb']", "['ln']"
+ALL_PATHS = (P_W, P_EMB, P_LN)
+
+
+def _full(seed=0, dim=4):
+    rng = np.random.default_rng(seed)
+    return {"blk": {"w": jnp.asarray(rng.standard_normal((dim, dim)),
+                                     jnp.float32)},
+            "emb": jnp.asarray(rng.standard_normal((dim + 2, dim)),
+                               jnp.float32),
+            "ln": jnp.asarray(rng.standard_normal((dim,)), jnp.float32)}
+
+
+def _sub(tree, *names):
+    """Sub-pytree carrying exactly the named leaves (w | emb | ln)."""
+    out = {}
+    for n in names:
+        if n == "w":
+            out.setdefault("blk", {})["w"] = tree["blk"]["w"]
+        else:
+            out[n] = tree[n]
+    return out
+
+
+_NAME_PATH = {"w": P_W, "emb": P_EMB, "ln": P_LN}
+
+
+def _sparse_add(state, seed, node, *names, eid=None):
+    sub = _sub(_full(seed), *names)
+    return state.add(sub, node, element_id=eid,
+                     leaf_paths=[_NAME_PATH[n] for n in names])
+
+
+# ---------------------------------------------------------------------------
+# PerLeafVisible lattice laws (hypothesis sweeps)
+# ---------------------------------------------------------------------------
+
+
+def _build(ops):
+    """ops: ('add', node, val, mask) | ('rm', node, idx-of-prior-add).
+    mask 0 = dense; bits 1/2/4 select w/emb/ln for a sparse add."""
+    s = CRDTMergeState()
+    eids = []
+    for op in ops:
+        if op[0] == "add":
+            _, node, val, mask = op
+            mask %= 8
+            if mask == 0:
+                payload = _full(val, dim=2)
+                s = s.add(payload, f"n{node}")
+            else:
+                names = [n for b, n in ((1, "w"), (2, "emb"), (4, "ln"))
+                         if mask & b]
+                payload = _sub(_full(val, dim=2), *names)
+                s = s.add(payload, f"n{node}",
+                          leaf_paths=[_NAME_PATH[n] for n in names])
+            eids.append(pytree_digest(payload).hex())
+        elif eids:
+            eid = eids[op[2] % len(eids)]
+            s = s.remove(eid, f"n{op[1]}")
+    return s
+
+
+op_strategy = st.lists(
+    st.one_of(
+        st.tuples(st.just("add"), st.integers(0, 2), st.integers(0, 4),
+                  st.integers(0, 7)),
+        st.tuples(st.just("rm"), st.integers(0, 2), st.integers(0, 4)),
+    ), min_size=0, max_size=6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(op_strategy, op_strategy)
+def test_per_leaf_projection_is_merge_homomorphism(ops1, ops2):
+    """visible_per_leaf(s1 ⊔ s2) == visible_per_leaf(s1) | ... (s2):
+    the projection commutes with the CRDT join, so it inherits SEC."""
+    s1, s2 = _build(ops1), _build(ops2)
+    assert s1.merge(s2).visible_per_leaf() == \
+        s1.visible_per_leaf() | s2.visible_per_leaf()
+
+
+@settings(max_examples=30, deadline=None)
+@given(op_strategy, op_strategy)
+def test_per_leaf_union_commutative(ops1, ops2):
+    v1, v2 = _build(ops1).visible_per_leaf(), _build(ops2).visible_per_leaf()
+    assert v1 | v2 == v2 | v1
+
+
+@settings(max_examples=20, deadline=None)
+@given(op_strategy, op_strategy, op_strategy)
+def test_per_leaf_union_associative(ops1, ops2, ops3):
+    v1, v2, v3 = (_build(o).visible_per_leaf()
+                  for o in (ops1, ops2, ops3))
+    assert (v1 | v2) | v3 == v1 | (v2 | v3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(op_strategy)
+def test_per_leaf_union_idempotent(ops):
+    v = _build(ops).visible_per_leaf()
+    assert v | v == v
+
+
+@settings(max_examples=30, deadline=None)
+@given(op_strategy)
+def test_per_leaf_at_agrees_with_entry_scan(ops):
+    """at(p) is exactly the visible entries whose coverage includes p."""
+    s = _build(ops)
+    v = s.visible_per_leaf()
+    for p in ALL_PATHS:
+        want = sorted({e.element_id for e in s.adds
+                       if e.tag not in s.removes
+                       and (e.leaf_paths is None or p in e.leaf_paths)})
+        assert list(v.at(p)) == want
+
+
+def test_per_leaf_dense_only_state_has_empty_sparse_map():
+    s = CRDTMergeState().add(_full(0), "a").add(_full(1), "b")
+    v = s.visible_per_leaf()
+    assert v.sparse == ()
+    assert set(v.dense) == s.visible()
+    assert v.at(P_EMB) == tuple(sorted(s.visible()))
+
+
+# ---------------------------------------------------------------------------
+# Tag hash: sparse re-add cannot collide with a GC'd dense tombstone
+# ---------------------------------------------------------------------------
+
+
+def test_sparse_readd_escapes_dense_tombstone_collision():
+    """Regression: tags are sha256(eid|node|clock[|coverage]). Without
+    the coverage component, a re-add at a colliding (eid, node, clock)
+    — e.g. after tombstone GC plus a vv reset — would reproduce the
+    tombstoned tag exactly and stay invisible forever on any replica
+    still holding the tombstone."""
+    full = _full(3)
+    s = CRDTMergeState().add(full, "n")
+    eid = next(iter(s.visible()))
+    dense_tag = next(iter(s.adds)).tag
+    s = s.remove(eid, "n")
+    gone = s.gc_tombstones(s.removes)
+    assert not gone.adds and not gone.removes and not gone.visible()
+
+    # the hazard is real for dense re-adds: same (eid, node, clock)
+    # deterministically reproduces the SAME tag, so a replica that kept
+    # the tombstone suppresses the resurrection
+    fresh_dense = CRDTMergeState().add(full, "n")
+    assert next(iter(fresh_dense.adds)).tag == dense_tag
+    holdout = CRDTMergeState(frozenset(), frozenset({dense_tag}))
+    assert eid not in holdout.merge(fresh_dense).visible()
+
+    # a sparse add of the SAME bytes at the same (eid, node, clock)
+    # hashes its coverage into the tag and escapes the collision
+    fresh_sparse = CRDTMergeState().add(full, "n",
+                                        leaf_paths=leaf_paths_of(full))
+    assert next(iter(fresh_sparse.adds)).tag != dense_tag
+    assert eid in holdout.merge(fresh_sparse).visible()
+
+
+def test_sparse_add_validates_descriptor():
+    t = _full(0)
+    with pytest.raises(ValueError, match="empty leaf_paths"):
+        CRDTMergeState().add(_sub(t, "emb"), "n", leaf_paths=[])
+    with pytest.raises(ValueError, match="does not match"):
+        CRDTMergeState().add(_sub(t, "emb"), "n", leaf_paths=[P_LN])
+    with pytest.raises(ValueError, match="does not match"):
+        CRDTMergeState().add(_sub(t, "emb", "ln"), "n", leaf_paths=[P_EMB])
+
+
+def test_coverage_dense_wins_and_sparse_unions():
+    t = _full(5)
+    sub = _sub(t, "emb")
+    eid = pytree_digest(sub).hex()
+    s = CRDTMergeState().add(sub, "a", leaf_paths=[P_EMB])
+    s = s.add(sub, "b", leaf_paths=[P_EMB])
+    assert s.coverage()[eid] == (P_EMB,)
+    # an independent dense add of the same element covers everything
+    s2 = s.add(sub, "c")
+    assert s2.coverage()[eid] is None
+
+
+# ---------------------------------------------------------------------------
+# Remark-16 semantics: engine output == engine-free sparse reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def mixed_state():
+    s = CRDTMergeState()
+    s = s.add(_full(0), "n0")
+    s = _sparse_add(s, 1, "n1", "emb")
+    s = _sparse_add(s, 2, "n2", "ln", "w")
+    s = s.add(_full(3), "n3")
+    return s, _full(9)
+
+
+@pytest.mark.parametrize("name", sorted(list_strategies()))
+@pytest.mark.parametrize("reduction", ["fold", "tree"])
+def test_sparse_resolve_matches_reference_all_strategies(
+        name, reduction, mixed_state):
+    """Every registry strategy, both reductions: resolving a mixed
+    dense/sparse state is byte-identical to the whole-tree-only sparse
+    reference (each leaf merged over exactly its covering subset,
+    Remark 16)."""
+    state, base = mixed_state
+    ids = canonical_order(state)
+    cov = state.coverage()
+    ref = sparse_reference_apply(
+        name, [state.store[i] for i in ids], [cov[i] for i in ids],
+        base=base, seed=seed_from_root(state.merkle_root()),
+        reduction=reduction)
+    out = resolve_spec(state, MergeSpec(name, reduction=reduction),
+                       base=base, use_cache=False)
+    assert _bytes_equal(ref, out), name
+
+
+def test_untouched_leaf_equals_dense_merge_of_its_subset():
+    """A leaf only dense contributions cover merges exactly as if the
+    sparse contributions did not exist (the sparse sub-root aliases the
+    dense merge over that subset)."""
+    s = CRDTMergeState().add(_full(0), "n0").add(_full(1), "n1")
+    dense_only = resolve_spec(s, MergeSpec("weight_average"),
+                              base=_full(9), use_cache=False)
+    s2 = _sparse_add(s, 2, "n2", "emb")
+    mixed = resolve_spec(s2, MergeSpec("weight_average"),
+                         base=_full(9), use_cache=False)
+    assert _bytes_equal(dense_only["ln"], mixed["ln"])
+    assert _bytes_equal(dense_only["blk"]["w"], mixed["blk"]["w"])
+    assert not _bytes_equal(dense_only["emb"], mixed["emb"])
+
+
+def test_uncovered_leaf_inherits_base_bytes():
+    base = _full(9)
+    s = CRDTMergeState()
+    s = _sparse_add(s, 0, "a", "emb")
+    s = _sparse_add(s, 1, "b", "emb")
+    out = resolve_spec(s, MergeSpec("ties"), base=base, use_cache=False)
+    assert _bytes_equal(out["ln"], base["ln"])
+    assert _bytes_equal(out["blk"]["w"], base["blk"]["w"])
+    assert not _bytes_equal(out["emb"], base["emb"])
+
+
+def test_all_sparse_resolve_requires_base():
+    s = _sparse_add(CRDTMergeState(), 0, "a", "emb")
+    with pytest.raises(ValueError, match="base"):
+        resolve_spec(s, MergeSpec("weight_average"), use_cache=False)
+    with pytest.raises(ValueError, match="base"):
+        # whole-model route densifies, which also needs the base
+        resolve_spec(s, MergeSpec("star"), use_cache=False)
+
+
+def test_hierarchical_resolve_accepts_sparse(mixed_state):
+    state, base = mixed_state
+    spec = MergeSpec("weight_average", group_size=2)
+    out = resolve_spec(state, spec, base=base, use_cache=False)
+    assert jax.tree_util.tree_structure(out) == \
+        jax.tree_util.tree_structure(base)
+    again = resolve_spec(state, spec, base=base, use_cache=False)
+    assert _bytes_equal(out, again)
+
+
+# ---------------------------------------------------------------------------
+# O(changed) re-resolve: warm hits, fold resumption, narrowed fetch
+# ---------------------------------------------------------------------------
+
+
+def _warm_sparse_setup(strategy="weight_average"):
+    """3 dense contributions resolved warm, then one sparse contribution
+    (emb only) whose controlled eid appends to the canonical order."""
+    base = _full(9)
+    cache = EngineCache()
+    s = CRDTMergeState()
+    for i, pfx in enumerate(("aa", "bb", "cc")):
+        s = s.add(_full(i), f"n{i}", element_id=_ctrl_eid(pfx))
+    spec = MergeSpec(strategy)
+    warm = resolve_spec(s, spec, base=base, cache=cache)
+    s2 = s.add(_sub(_full(7), "emb"), "n3", element_id=_ctrl_eid("ff"),
+               leaf_paths=[P_EMB])
+    return s, s2, spec, base, cache, warm
+
+
+def test_sparse_append_re_resolves_o_changed():
+    s, s2, spec, base, cache, _ = _warm_sparse_setup()
+    cache.reset_exec_stats()
+    out = resolve_spec(s2, spec, base=base, cache=cache)
+    stats = cache.exec_stats()
+    # ln and blk.w are untouched by the sparse append: warm hits. emb's
+    # ordered subset grew append-only past the cached prefix: one fold
+    # resumption folding exactly the one new contribution.
+    assert stats["hits"] == 2
+    assert stats["misses"] == 1
+    assert stats["fold_resumes"] == 1
+    assert cache.obs.counter("resolve_fold_updates_total").value() == 1.0
+    assert cache.obs.gauge("engine_sparse_leaves_skipped").value() == 2.0
+    ids = canonical_order(s2)
+    cov = s2.coverage()
+    ref = sparse_reference_apply(
+        "weight_average", [s2.store[i] for i in ids],
+        [cov[i] for i in ids], base=base,
+        seed=seed_from_root(s2.merkle_root()))
+    assert _bytes_equal(out, ref)
+
+
+def test_plan_needed_ids_narrows_to_the_new_tail():
+    s, s2, spec, base, cache, _ = _warm_sparse_setup()
+    ids = canonical_order(s2)
+    cov = s2.coverage()
+    plan = engine.plan_merge(
+        [engine.contrib_meta(s2.store[i], eid=i) for i in ids],
+        base=base, seed=seed_from_root(s2.merkle_root()), spec=spec,
+        coverages=[cov[i] for i in ids])
+    # only the appended contribution's payload is needed: cached leaves
+    # need nothing; emb resumes from the folded 3-prefix
+    assert engine.plan_needed_ids(plan, cache) == (3,)
+    assert engine.plan_needed_ids(plan, cache, use_cache=False) == \
+        (0, 1, 2, 3)
+
+
+def test_fetch_pulls_only_changed_payloads():
+    s, s2, spec, base, cache, _ = _warm_sparse_setup()
+    pulled = []
+
+    def fetch(eids):
+        pulled.extend(eids)
+        return {e: s2.store[e] for e in eids}
+
+    bare = CRDTMergeState(s2.adds, s2.removes, s2.vv, {})  # shed blobs
+    out = resolve_spec(bare, spec, base=base, cache=cache, fetch=fetch)
+    assert pulled == [_ctrl_eid("ff")]
+    ids = canonical_order(s2)
+    cov = s2.coverage()
+    assert _bytes_equal(out, sparse_reference_apply(
+        "weight_average", [s2.store[i] for i in ids],
+        [cov[i] for i in ids], base=base,
+        seed=seed_from_root(s2.merkle_root())))
+
+
+def test_non_incremental_strategy_recomputes_but_stays_exact():
+    """A strategy without a fold cannot resume — the changed leaf
+    recomputes over its full subset — but untouched leaves still hit."""
+    s, s2, spec, base, cache, _ = _warm_sparse_setup(strategy="ties")
+    cache.reset_exec_stats()
+    out = resolve_spec(s2, spec, base=base, cache=cache)
+    stats = cache.exec_stats()
+    assert stats["hits"] == 2 and stats["misses"] == 1
+    assert stats.get("fold_resumes", 0) == 0
+    ids = canonical_order(s2)
+    cov = s2.coverage()
+    assert _bytes_equal(out, sparse_reference_apply(
+        "ties", [s2.store[i] for i in ids], [cov[i] for i in ids],
+        base=base, seed=seed_from_root(s2.merkle_root())))
+
+
+# ---------------------------------------------------------------------------
+# 20-ordering convergence over mixed dense/sparse op sets
+# ---------------------------------------------------------------------------
+
+
+def test_convergence_20_orderings_mixed_dense_sparse():
+    """Single-op deltas merged in 20 shuffled orders: identical roots,
+    identical per-leaf projections, byte-identical resolves."""
+    base = _full(9)
+    d_add = CRDTMergeState().add(_full(0), "n0")
+    removed_eid = next(iter(d_add.visible()))
+    d_rm = d_add.remove(removed_eid, "n0")
+    deltas = [
+        d_rm,
+        CRDTMergeState().add(_full(1), "n1"),
+        _sparse_add(CRDTMergeState(), 2, "n2", "emb"),
+        _sparse_add(CRDTMergeState(), 3, "n3", "ln", "w"),
+        _sparse_add(CRDTMergeState(), 4, "n4", "emb"),
+    ]
+    rng = random.Random(42)
+    ref_state = ref_out = None
+    for _ in range(20):
+        order = rng.sample(range(len(deltas)), len(deltas))
+        acc = CRDTMergeState()
+        for i in order:
+            acc = acc.merge(deltas[i])
+        out = resolve_spec(acc, MergeSpec("ties"), base=base,
+                           use_cache=False)
+        if ref_state is None:
+            ref_state, ref_out = acc, out
+            assert removed_eid not in acc.visible()
+        assert acc.merkle_root() == ref_state.merkle_root()
+        assert acc.visible_per_leaf() == ref_state.visible_per_leaf()
+        assert acc.coverage() == ref_state.coverage()
+        assert _bytes_equal(out, ref_out)
+
+
+# ---------------------------------------------------------------------------
+# Replica facade: add(leaves=) / contribute(leaves=)
+# ---------------------------------------------------------------------------
+
+
+def test_replica_add_leaves_and_resolve():
+    rep = Replica("a")
+    base = _full(9)
+    ref = rep.register_base(base)
+    rep.contribute(_full(0))
+    sub = _sub(_full(1), "emb")
+    eid = rep.add(sub, leaves=[P_EMB])
+    assert eid == pytree_digest(sub).hex()
+    assert rep.state.coverage()[eid] == (P_EMB,)
+    out = rep.resolve(MergeSpec("weight_average", base_ref=ref))
+    ids = canonical_order(rep.state)
+    cov = rep.state.coverage()
+    assert _bytes_equal(out, sparse_reference_apply(
+        "weight_average", [rep.state.store[i] for i in ids],
+        [cov[i] for i in ids], base=base,
+        seed=seed_from_root(rep.state.merkle_root())))
+
+
+def test_replica_contribute_leaves_merges_across_replicas():
+    a, b = Replica("a"), Replica("b")
+    base = _full(9)
+    a.contribute(_full(0))
+    b.contribute(_sub(_full(1), "ln", "w"), leaves=[P_LN, P_W])
+    a.merge(b)
+    out_a = a.resolve(MergeSpec("weight_average"), base=base)
+    b.merge(a)
+    out_b = b.resolve(MergeSpec("weight_average"), base=base)
+    assert _bytes_equal(out_a, out_b)
+    # ln/w merged over both, emb over the dense contribution only
+    assert not _bytes_equal(out_a["ln"], base["ln"])
+
+
+def test_spec_fragment_encodes_absent_leaf_semantics():
+    """The inherit-base rule is part of every cache key: the fragment
+    domain string names it, so a future semantic change cannot silently
+    reuse old cache entries."""
+    from repro.api.spec import _FRAG_DOMAIN
+    assert b"absent-leaf:inherit-base" in _FRAG_DOMAIN
+
+
+# ---------------------------------------------------------------------------
+# Wire: sparse adds codec + SparseManifest frame
+# ---------------------------------------------------------------------------
+
+
+def test_dense_adds_encoding_byte_identical_to_legacy():
+    """Dense-only traffic must be byte-for-byte the pre-sparse 3-string
+    form: no flag bit, no 4th string."""
+    adds = frozenset({AddEntry("aa" * 32, "t1", "n1"),
+                      AddEntry("bb" * 32, "t2", "n2")})
+    buf = bytearray()
+    wire._enc_adds(buf, adds)
+    legacy = bytearray()
+    legacy += struct.pack(">I", len(adds))
+    for e in sorted(adds):
+        for field in (e.element_id, e.tag, e.node):
+            raw = field.encode()
+            legacy += struct.pack(">I", len(raw)) + raw
+    assert bytes(buf) == bytes(legacy)
+
+
+def test_sparse_adds_round_trip_preserves_coverage():
+    adds = frozenset({
+        AddEntry("aa" * 32, "t1", "n1"),
+        AddEntry("bb" * 32, "t2", "n2", (P_EMB,)),
+        AddEntry("cc" * 32, "t3", "n3", (P_W, P_LN)),
+    })
+    from repro.core.version_vector import VersionVector
+    msg = StateMsg("s", adds, frozenset({"t0"}), VersionVector(), {})
+    frame = encode_message(msg)
+    got = decode_message(frame)
+    assert got.adds == adds
+    by_eid = {e.element_id: e for e in got.adds}
+    assert by_eid["bb" * 32].leaf_paths == (P_EMB,)
+    assert by_eid["cc" * 32].leaf_paths == (P_W, P_LN)
+    assert by_eid["aa" * 32].leaf_paths is None
+    assert encode_message(got) == frame
+
+
+def test_sparse_manifest_round_trip():
+    payload = _sub(_full(4), "emb")
+    blob = encode_blob(payload)
+    entry = sparse_manifest_entry("ee" * 32, payload, blob, 64)
+    assert entry.eid == "ee" * 32
+    assert entry.coverage == (P_EMB,)
+    assert entry.leaves[0].shape == tuple(payload["emb"].shape)
+    msg = SparseManifest("a", 7, (entry,))
+    frame = encode_message(msg)
+    assert frame[2] == 2                       # v2-stamped frame type
+    assert frame[3] == wire.MSG_SPARSE_MANIFEST
+    got = decode_message(frame)
+    assert got == msg
+    assert encode_message(got) == frame
+
+
+# ---------------------------------------------------------------------------
+# SyncNode: sparse blobs announce per leaf; receiver plans before bytes
+# ---------------------------------------------------------------------------
+
+
+def _sync(a: SyncNode, b: SyncNode) -> None:
+    t = InMemoryTransport()
+    t.register(a.node_id)
+    t.register(b.node_id)
+    t.send(a.node_id, b.node_id, a.begin_sync(b.node_id))
+    pump({a.node_id: a, b.node_id: b}, t)
+
+
+def test_sync_announces_sparse_blob_per_leaf():
+    a = SyncNode("a", max_frame_bytes=2048)
+    b = SyncNode("b", max_frame_bytes=2048)
+    big = {"emb": jnp.asarray(
+        np.random.default_rng(0).standard_normal((64, 64)), jnp.float32)}
+    eid = pytree_digest(big).hex()
+    a.contribute(big, leaves=["['emb']"])
+    a.contribute(_full(1))                     # dense small blob rides along
+    engine.clear_meta_memo()
+    _sync(b, a)
+    assert a.stats["sparse_manifests_sent"] == 1
+    assert b.stats["sparse_manifests_received"] == 1
+    assert b.state.coverage()[eid] == ("['emb']",)
+    assert _bytes_equal(b.state.store[eid], big)
+    # the manifest fed the planner's digest memo (payload-independent)
+    meta = engine.memoized_meta(eid)
+    assert meta is not None
+    assert meta.paths == ("['emb']",)
+    assert meta.shapes == ((64, 64),)
+
+
+def test_sync_dense_large_blob_still_uses_blob_manifest():
+    a = SyncNode("a", max_frame_bytes=2048)
+    b = SyncNode("b", max_frame_bytes=2048)
+    big = {"emb": jnp.asarray(
+        np.random.default_rng(1).standard_normal((64, 64)), jnp.float32)}
+    a.contribute(big)
+    _sync(b, a)
+    assert a.stats["sparse_manifests_sent"] == 0
+    assert b.stats["sparse_manifests_received"] == 0
+    assert set(b.state.store) == set(a.state.store)
+
+
+# ---------------------------------------------------------------------------
+# Simulator: sparse add + retraction + partition heal
+# ---------------------------------------------------------------------------
+
+
+def test_simulator_sparse_add_remove_partition_heal():
+    from repro.net.simulator import SimGossipNetwork
+    base = _full(9)
+    spec = MergeSpec("weight_average")
+    g = SimGossipNetwork(6, seed=13, mode="antientropy")
+    pl = [_full(i) for i in range(6)]
+    g.contribute_all(lambda i: pl[i])
+    g.run_epidemic(fanout=3, require_blobs=True)
+    assert g.converged(require_blobs=True)
+
+    sparse_payload = _sub(_full(7), "emb")
+    sparse_eid = pytree_digest(sparse_payload).hex()
+    g.nodes[0].contribute(sparse_payload, leaves=[P_EMB])
+    g.run_epidemic(fanout=3, require_blobs=True)
+    assert g.converged(require_blobs=True)
+    outs = [resolve_spec(x.state, spec, base=base, use_cache=False)
+            for x in g.nodes]
+    assert all(x.state.coverage()[sparse_eid] == (P_EMB,)
+               for x in g.nodes)
+    assert all(_bytes_equal(outs[0], o) for o in outs[1:])
+
+    # partition: one side retracts the sparse element, the other adds a
+    # second sparse contribution — neither is seen across the cut
+    ids = [x.node_id for x in g.nodes]
+    g.net.partition([set(ids[:3]), set(ids[3:])])
+    g.nodes[0].retract(sparse_eid)
+    late = _sub(_full(8), "ln", "w")
+    late_eid = pytree_digest(late).hex()
+    g.nodes[5].contribute(late, leaves=[P_LN, P_W])
+    for _ in range(3):
+        g.epidemic_round(fanout=2)
+    assert not g.converged()
+    assert sparse_eid in g.nodes[5].state.visible()
+    assert late_eid not in g.nodes[0].state.visible()
+
+    g.net.heal()
+    g.run_epidemic(fanout=3, require_blobs=True)
+    assert g.converged(require_blobs=True)
+    for x in g.nodes:
+        assert sparse_eid not in x.state.visible()
+        assert x.state.coverage()[late_eid] == (P_W, P_LN)
+    outs = [resolve_spec(x.state, spec, base=base, use_cache=False)
+            for x in g.nodes]
+    assert all(_bytes_equal(outs[0], o) for o in outs[1:])
+
+
+# ---------------------------------------------------------------------------
+# Delta accounting: coverage bytes are costed
+# ---------------------------------------------------------------------------
+
+
+def test_delta_approx_bytes_counts_coverage():
+    from repro.core.delta import delta_since
+    from repro.core.version_vector import VersionVector
+    dense = CRDTMergeState().add(_full(0), "n")
+    sparse = _sparse_add(CRDTMergeState(), 0, "n", "emb")
+    d_dense = delta_since(dense, VersionVector())
+    d_sparse = delta_since(sparse, VersionVector())
+    e = next(iter(d_sparse.adds))
+    overhead = sum(len(p) for p in e.leaf_paths) + len(e.leaf_paths)
+    meta_dense = d_dense.approx_bytes() - sum(
+        np.asarray(x).nbytes
+        for x in jax.tree_util.tree_leaves(list(d_dense.payloads.values())))
+    meta_sparse = d_sparse.approx_bytes() - sum(
+        np.asarray(x).nbytes
+        for x in jax.tree_util.tree_leaves(list(d_sparse.payloads.values())))
+    assert meta_sparse == meta_dense + overhead

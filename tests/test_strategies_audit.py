@@ -105,6 +105,76 @@ def test_phase2_is_104_of_104(tensors):
 
 
 # ---------------------------------------------------------------------------
+# Incremental-fold audit: a claimed fold must be bit-equal to the full
+# per-leaf recompute, from every valid resumption point
+# ---------------------------------------------------------------------------
+
+
+INCREMENTAL_EXPECTED = {"linear", "negative_merge", "task_arithmetic",
+                        "weight_average"}
+
+
+def test_incremental_capability_set_is_exact():
+    """Exactly the strategies whose canonical per-leaf math is a
+    sequential fold declare the capability — no silent additions (every
+    claim must be proven below) and no silent removals (the engine's
+    O(changed) resumption depends on these)."""
+    claimed = {n for n in list_strategies() if get_strategy(n).incremental}
+    assert claimed == INCREMENTAL_EXPECTED
+
+
+@pytest.mark.parametrize("name", sorted(TABLE3_EXPECTED))
+def test_incremental_claim_proven_bitwise(name):
+    """Every strategy claiming `incremental` must prove its fold:
+    (a) the fold-driven recompute is bit-equal to the strategy's own
+    leaf function at every prefix length k >= fold.min_k, and
+    (b) resuming from the cached accumulator of every valid prefix
+    m in [min_k, k) over the new tail is bit-equal to the full
+    recompute at k. A strategy without the claim must declare no fold.
+    This is the audit bench_sparse and the engine's prefix-fold
+    resumption rely on — an unproven claim fails here, not in prod."""
+    from repro.strategies.base import run_fold
+    strat = get_strategy(name)
+    if not strat.incremental:
+        assert strat.fold is None
+        return
+    fold = strat.fold
+    rng = np.random.default_rng(17)
+    stacked = jnp.asarray(rng.standard_normal((6, 4, 4)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((4, 4)), jnp.float32)
+    cfg = dict(strat.defaults)
+    for k in range(fold.min_k, 7):
+        full = strat.apply_leaf(stacked[:k], b)
+        direct, _ = run_fold(fold, stacked[:k], b, **cfg)
+        assert full.dtype == direct.dtype, name
+        assert np.asarray(full).tobytes() == np.asarray(direct).tobytes(), \
+            f"{name}: fold != leaf_fn at k={k}"
+        for m in range(fold.min_k, k):
+            _, acc = run_fold(fold, stacked[:m], b, finalize=False, **cfg)
+            resumed, _ = run_fold(fold, stacked[m:k], b, acc=acc, k=k,
+                                  **cfg)
+            assert np.asarray(full).tobytes() == \
+                np.asarray(resumed).tobytes(), \
+                f"{name}: resume from m={m} at k={k} not bit-equal"
+
+
+def test_linear_min_k_guards_the_interpolation_regime():
+    """`linear` interpolates at k == 2 (a different formula), so its
+    fold declares min_k=3: the k == 2 output must NOT be the fold's
+    output, or the guard is vacuous. (At t=0.5 the two happen to agree
+    bitwise — halving is exact — so probe at t=0.3.)"""
+    from repro.strategies.base import run_fold
+    strat = get_strategy("linear")
+    assert strat.fold.min_k == 3
+    rng = np.random.default_rng(23)
+    stacked = jnp.asarray(rng.standard_normal((2, 4, 4)), jnp.float32)
+    b = jnp.zeros((4, 4), jnp.float32)
+    via_leaf = strat.apply_leaf(stacked, b, t=0.3)
+    via_fold, _ = run_fold(strat.fold, stacked, b, t=0.3)
+    assert np.asarray(via_leaf).tobytes() != np.asarray(via_fold).tobytes()
+
+
+# ---------------------------------------------------------------------------
 # Proposition 4 concrete counterexamples (paper §3.2)
 # ---------------------------------------------------------------------------
 
