@@ -23,6 +23,13 @@ contributions/retractions flow through the node (so its partial-blob
 bookkeeping stays coherent), and resolves pull non-resident payloads
 through the node's fetch hook — the facade over a sharded,
 anti-entropy-synced deployment.
+
+`Replica(path=...)` makes the replica durable (repro.core.journal):
+the directory's blob log + Layer-1 WAL replay on open — restart
+recovers the exact pre-crash Merkle root and every locally-held blob
+with zero network bytes — and every subsequent operation is recorded
+before it is acknowledged. `close()` flushes and releases the storage
+(idempotent); `with Replica(path=...) as rep:` scopes it.
 """
 from __future__ import annotations
 
@@ -45,7 +52,8 @@ class Replica:
                  state: Optional[CRDTMergeState] = None,
                  trust: Optional[TrustState] = None,
                  cache: Optional[EngineCache] = None,
-                 obs: Optional[MetricsRegistry] = None):
+                 obs: Optional[MetricsRegistry] = None,
+                 path: Optional[str] = None):
         self.node_id = node_id
         self._state = state if state is not None else CRDTMergeState()
         self.trust = trust
@@ -58,6 +66,17 @@ class Replica:
             obs=self.obs)
         self._bases: Dict[str, Any] = {}
         self._node = None                  # attached repro.net.SyncNode
+        self._storage = None               # repro.core.journal.DurableStore
+        self._closed = False
+        if path is not None:
+            from repro.core.journal import DurableStore
+            self._storage = DurableStore(path, obs=self.obs)
+            recovered = self._storage.load()
+            merged = recovered.merge(self._state)
+            if merged != recovered \
+                    or merged.store.keys() != recovered.store.keys():
+                self._storage.record_transition(recovered, merged)
+            self._state = merged
 
     # ----------------------------------------------------------- state
 
@@ -70,7 +89,14 @@ class Replica:
         if self._node is not None:
             self._node.state = value
         else:
-            self._state = value
+            self._set_state(value)
+
+    def _set_state(self, value: CRDTMergeState) -> None:
+        """Unattached write path: durable write-through when a storage
+        directory is open (attached, the node's own setter records)."""
+        if self._storage is not None and value is not self._state:
+            self._storage.record_transition(self._state, value)
+        self._state = value
 
     def contribute(self, contribution: Any,
                    element_id: Optional[str] = None, *,
@@ -92,9 +118,9 @@ class Replica:
             self._node.contribute(contribution, element_id=eid,
                                   leaves=leaves)
         else:
-            self._state = self._state.add(contribution, self.node_id,
-                                          element_id=eid,
-                                          leaf_paths=leaves)
+            self._set_state(self._state.add(contribution, self.node_id,
+                                            element_id=eid,
+                                            leaf_paths=leaves))
         return eid
 
     def add(self, contribution: Any, *,
@@ -109,7 +135,7 @@ class Replica:
         if self._node is not None:
             self._node.retract(element_id)
         else:
-            self._state = self._state.remove(element_id, self.node_id)
+            self._set_state(self._state.remove(element_id, self.node_id))
 
     def merge(self, other: Any) -> "Replica":
         """CRDT join with another Replica, a raw CRDTMergeState, or an
@@ -124,7 +150,7 @@ class Replica:
         if self._node is not None:
             self._node.join(state)
         else:
-            self._state = self._state.merge(state)
+            self._set_state(self._state.merge(state))
         if trust is not None:
             self.trust = trust if self.trust is None \
                 else self.trust.merge(trust)
@@ -205,21 +231,61 @@ class Replica:
         bookkeeping, placement filtering, fetch-on-resolve)."""
         if self._node is not None:
             raise RuntimeError("already attached; detach() first")
+        if self._storage is not None and hasattr(node, "attach_storage"):
+            # storage follows the state: the node's write-through takes
+            # over recording (attach_storage joins the recovered state,
+            # so node.join(self._state) below is a no-op on disk)
+            storage, self._storage = self._storage, None
+            node.attach_storage(storage)
         node.join(self._state)
         self._node = node
         return self
 
     def detach(self) -> "Replica":
-        """Take the state back from the attached node."""
+        """Take the state (and any durable storage handed over by
+        attach) back from the attached node."""
         if self._node is None:
             raise RuntimeError("not attached")
         self._state = self._node.state
+        if self._storage is None and getattr(self._node, "storage", None) \
+                is not None:
+            self._storage = self._node.release_storage()
         self._node = None
         return self
 
     @property
     def node(self):
         return self._node
+
+    # ------------------------------------------------------- lifecycle
+
+    def close(self) -> None:
+        """Flush and release every owned resource — the durable storage
+        (directly held or handed to an attached node) and the attached
+        node's transfer bookkeeping. Idempotent; the replica stays
+        readable (state/merkle_root) but must not be written again when
+        durable. Reopen with `Replica(path=...)` to resume."""
+        if self._closed:
+            return
+        if self._node is not None:
+            if hasattr(self._node, "close"):
+                self._node.close()
+            self._state = self._node.state
+            self._node = None
+        if self._storage is not None:
+            self._storage.close()
+            self._storage = None
+        self._closed = True
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def __enter__(self) -> "Replica":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ----------------------------------------------------------- cache
 

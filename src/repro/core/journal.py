@@ -1,0 +1,741 @@
+"""Durable storage tier: crash-safe blob log + Layer-1 write-ahead journal.
+
+Everything above this module is in-memory; this is the layer that makes
+a replica survive its own death. Three on-disk structures live in one
+storage directory (the normative record table is in docs/PROTOCOL.md,
+CI-diffed against `RECORD_TYPES` by tools/check_docs.py):
+
+  * `blobs.log`    — append-only content-addressed blob log. One
+    `BlobRecord` per store payload: the eid, a SHA-256 over the blob's
+    canonical wire encoding (`repro.net.wire.encode_blob`), and the
+    bytes themselves. The in-memory index (eid -> file offset) is
+    rebuilt by scanning on open, so the log needs no side files.
+  * `journal.log`  — the Layer-1 WAL. One `JournalDelta` per
+    acknowledged metadata transition: the *new* add entries (including
+    sparse `leaf_paths` coverage), the new tombstones, and the merged
+    version vector, in the canonical wire encoding
+    (`repro.net.wire.encode_layer1`). Replay is a CRDT join, so a
+    duplicated or re-applied record is harmless.
+  * `snapshot.bin` — periodic compaction: one `Snapshot` record holding
+    the full (A, R, V). Written to a temp file, fsynced, atomically
+    renamed; the journal is truncated only after the rename lands.
+    Recovery = snapshot ⊔ journal replay — correct whichever side of
+    the rename/truncate a crash fell on.
+
+Every record rides the same envelope — `length u32 | type u8 | payload
+| crc32 u32` — and recovery accepts exactly the longest clean prefix of
+each log: the scan stops at the first truncated or checksum-failing
+record and truncates the file there, so a torn tail write (the only
+corruption an append-only discipline can produce) costs at most the
+final, never-acknowledged record. An operation is *acknowledged* when
+`DurableStore.record_transition` returns; the crash-injection suite
+(tests/test_durability.py) proves recovery always yields a clean prefix
+of acknowledged operations, never a partial or corrupt state.
+
+Crash-point injection
+---------------------
+`CrashPoint.maybe_crash(name)` is threaded through every durability
+write path, between every pair of steps whose ordering matters (before
+an append, mid-record for torn writes, before fsync, before the
+in-memory index/ack, and around the snapshot write/rename/truncate
+sequence). In production every call is a dict lookup that misses; the
+test harness arms one point (`CrashPoint.arm(name)`) and the next hit
+raises `SimulatedCrash` with the file system in exactly the state a
+power cut at that instant would leave. The registry is enumerable
+(`CrashPoint.registered()`), so the test suite can prove recovery at
+*every* point rather than a hand-picked few.
+"""
+from __future__ import annotations
+
+import os
+import struct
+import zlib
+from typing import Any, Dict, FrozenSet, Iterator, List, Optional, Tuple
+
+from repro.core.state import AddEntry, CRDTMergeState
+from repro.core.version_vector import VersionVector
+from repro.obs import MetricsRegistry
+
+__all__ = [
+    "CrashPoint", "SimulatedCrash", "BlobLog", "StateJournal",
+    "DurableStore", "RECORD_TYPES", "REC_BLOB", "REC_DELTA",
+    "REC_SNAPSHOT", "JournalError",
+]
+
+
+class JournalError(ValueError):
+    """Malformed durable-store record or misused log handle."""
+
+
+# ---------------------------------------------------------------------------
+# Crash-point injection
+# ---------------------------------------------------------------------------
+
+
+class SimulatedCrash(BaseException):
+    """Raised by an armed crash point. Derives from BaseException so no
+    internal `except Exception` recovery path can accidentally swallow
+    the simulated power cut."""
+
+    def __init__(self, point: str):
+        super().__init__(f"simulated crash at {point}")
+        self.point = point
+
+
+class CrashPoint:
+    """Deterministic crash-injection registry (process-global).
+
+    Points are declared once at module import (`_declare`), so the set
+    of crash sites is a static, enumerable property of the code — the
+    test suite iterates `registered()` and kills the process state at
+    every one. `arm(name, at=k)` makes the k-th subsequent hit of
+    `maybe_crash(name)` raise `SimulatedCrash`; unarmed points cost one
+    dict lookup.
+    """
+
+    _declared: Dict[str, str] = {}
+    _armed: Dict[str, int] = {}
+    hits: Dict[str, int] = {}
+
+    @classmethod
+    def _declare(cls, name: str, help: str) -> str:  # noqa: A002
+        cls._declared[name] = help
+        return name
+
+    @classmethod
+    def registered(cls) -> Tuple[str, ...]:
+        return tuple(sorted(cls._declared))
+
+    @classmethod
+    def describe(cls, name: str) -> str:
+        return cls._declared[name]
+
+    @classmethod
+    def arm(cls, name: str, at: int = 1) -> None:
+        if name not in cls._declared:
+            raise KeyError(f"unknown crash point {name!r}")
+        if at < 1:
+            raise ValueError("at must be >= 1")
+        cls._armed[name] = at
+
+    @classmethod
+    def disarm_all(cls) -> None:
+        cls._armed.clear()
+        cls.hits.clear()
+
+    @classmethod
+    def maybe_crash(cls, name: str) -> None:
+        if not cls._armed:          # production fast path
+            return
+        left = cls._armed.get(name)
+        if left is None:
+            return
+        cls.hits[name] = cls.hits.get(name, 0) + 1
+        if left <= 1:
+            del cls._armed[name]
+            raise SimulatedCrash(name)
+        cls._armed[name] = left - 1
+
+
+CP_BLOB_PRE_APPEND = CrashPoint._declare(
+    "blob.pre_append", "before any byte of a blob record is written")
+CP_BLOB_TORN_WRITE = CrashPoint._declare(
+    "blob.torn_write", "half a blob record written and flushed")
+CP_BLOB_PRE_SYNC = CrashPoint._declare(
+    "blob.pre_sync", "blob record written, before fsync")
+CP_BLOB_PRE_INDEX = CrashPoint._declare(
+    "blob.pre_index", "blob record durable, before the in-memory index")
+CP_JOURNAL_PRE_APPEND = CrashPoint._declare(
+    "journal.pre_append", "before any byte of a journal record")
+CP_JOURNAL_TORN_WRITE = CrashPoint._declare(
+    "journal.torn_write", "half a journal record written and flushed")
+CP_JOURNAL_PRE_SYNC = CrashPoint._declare(
+    "journal.pre_sync", "journal record written, before fsync")
+CP_JOURNAL_PRE_ACK = CrashPoint._declare(
+    "journal.pre_ack", "journal record durable, before acknowledgement")
+CP_SNAP_PRE_WRITE = CrashPoint._declare(
+    "snapshot.pre_write", "before the snapshot temp file is written")
+CP_SNAP_PRE_RENAME = CrashPoint._declare(
+    "snapshot.pre_rename", "snapshot temp fsynced, before atomic rename")
+CP_SNAP_PRE_TRUNCATE = CrashPoint._declare(
+    "snapshot.pre_truncate", "snapshot renamed, before journal truncate")
+CP_BLOB_PRE_COMPACT_RENAME = CrashPoint._declare(
+    "blob.pre_compact_rename",
+    "compacted blob log fsynced, before atomic rename")
+
+
+# ---------------------------------------------------------------------------
+# Record framing
+# ---------------------------------------------------------------------------
+
+
+REC_BLOB = 0x01
+REC_DELTA = 0x02
+REC_SNAPSHOT = 0x03
+
+# Normative registry: docs/PROTOCOL.md's on-disk record table is diffed
+# against this by tools/check_docs.py, exactly like the frame table.
+RECORD_TYPES: Dict[int, str] = {
+    REC_BLOB: "BlobRecord",
+    REC_DELTA: "JournalDelta",
+    REC_SNAPSHOT: "Snapshot",
+}
+
+_LEN = struct.Struct(">I")          # length of (type + payload)
+_CRC = struct.Struct(">I")          # zlib.crc32 over (type + payload)
+_ENVELOPE = _LEN.size + _CRC.size   # bytes beyond type + payload
+
+
+def _pack_record(rtype: int, payload: bytes) -> bytes:
+    if rtype not in RECORD_TYPES:
+        raise JournalError(f"unknown record type 0x{rtype:02x}")
+    body = bytes([rtype]) + payload
+    return _LEN.pack(len(body)) + body + _CRC.pack(
+        zlib.crc32(body) & 0xFFFFFFFF)
+
+
+def scan_records(raw: bytes) -> Tuple[List[Tuple[int, int, bytes]], int]:
+    """Parse the longest clean prefix of an append-only log.
+
+    Returns `([(offset, rtype, payload), ...], clean_end)`: every record
+    whose length, type, and CRC-32 check out, in file order, plus the
+    byte offset where the clean prefix ends. Anything after `clean_end`
+    — a torn tail, flipped bytes, a half-written length word — is
+    unrecoverable garbage by construction and the caller truncates it.
+    """
+    out: List[Tuple[int, int, bytes]] = []
+    pos = 0
+    n = len(raw)
+    while pos + _LEN.size <= n:
+        (blen,) = _LEN.unpack_from(raw, pos)
+        body_end = pos + _LEN.size + blen
+        if blen < 1 or body_end + _CRC.size > n:
+            break
+        body = raw[pos + _LEN.size:body_end]
+        (crc,) = _CRC.unpack_from(raw, body_end)
+        if crc != (zlib.crc32(body) & 0xFFFFFFFF):
+            break
+        if body[0] not in RECORD_TYPES:
+            break
+        out.append((pos, body[0], body[1:]))
+        pos = body_end + _CRC.size
+    return out, pos
+
+
+def _fsync_dir(path: str) -> None:
+    """Make a rename/creation in `path` durable (best-effort on
+    platforms whose directories cannot be fsynced)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+class _RecordLog:
+    """One append-only record file with torn-tail repair on open.
+
+    `crash_tag` prefixes the crash points threaded through `append`
+    ("blob" or "journal"), so the injection harness can distinguish the
+    two logs' write paths. Appends are written in two halves with a
+    crash point between them — the torn-write site — and flushed before
+    each point so the bytes on disk at crash time are exactly what a
+    power cut there would leave.
+    """
+
+    def __init__(self, path: str, crash_tag: str, *, sync: bool = True,
+                 obs: Optional[MetricsRegistry] = None):
+        self.path = path
+        self.crash_tag = crash_tag
+        self.sync = sync
+        self.obs = obs if obs is not None else MetricsRegistry()
+        records, clean_end = scan_records(self._read_all())
+        self._repair(clean_end)
+        self.records = records          # scan result from open
+        self.size = clean_end
+        self._f = open(self.path, "ab")
+
+    def _read_all(self) -> bytes:
+        try:
+            with open(self.path, "rb") as f:
+                return f.read()
+        except FileNotFoundError:
+            return b""
+
+    def _repair(self, clean_end: int) -> None:
+        try:
+            actual = os.path.getsize(self.path)
+        except OSError:
+            actual = 0
+        if actual > clean_end:
+            self.obs.counter("journal_events_total").inc(
+                event=f"{self.crash_tag}_torn_tail")
+            with open(self.path, "r+b") as f:
+                f.truncate(clean_end)
+                f.flush()
+                os.fsync(f.fileno())
+
+    def append(self, rtype: int, payload: bytes) -> int:
+        """Append one record; returns its starting offset. The record is
+        durable (flushed + fsynced under the default policy) when this
+        returns."""
+        rec = _pack_record(rtype, payload)
+        offset = self.size
+        CrashPoint.maybe_crash(f"{self.crash_tag}.pre_append")
+        half = len(rec) // 2
+        self._f.write(rec[:half])
+        self._f.flush()
+        CrashPoint.maybe_crash(f"{self.crash_tag}.torn_write")
+        self._f.write(rec[half:])
+        self._f.flush()
+        CrashPoint.maybe_crash(f"{self.crash_tag}.pre_sync")
+        if self.sync:
+            os.fsync(self._f.fileno())
+            self.obs.counter("journal_events_total").inc(event="fsync")
+        self.size += len(rec)
+        self.obs.counter("journal_events_total").inc(
+            event=f"{self.crash_tag}_append")
+        return offset
+
+    def read_at(self, offset: int) -> Tuple[int, bytes]:
+        """Re-read and re-verify one record at `offset` (blob fetch)."""
+        with open(self.path, "rb") as f:
+            f.seek(offset)
+            head = f.read(_LEN.size)
+            if len(head) < _LEN.size:
+                raise JournalError(f"truncated record at {offset}")
+            (blen,) = _LEN.unpack_from(head)
+            body = f.read(blen)
+            tail = f.read(_CRC.size)
+        if len(body) < blen or len(tail) < _CRC.size:
+            raise JournalError(f"truncated record at {offset}")
+        (crc,) = _CRC.unpack_from(tail)
+        if crc != (zlib.crc32(body) & 0xFFFFFFFF):
+            raise JournalError(f"checksum mismatch at {offset}")
+        return body[0], body[1:]
+
+    def flush(self) -> None:
+        if not self._f.closed:
+            self._f.flush()
+            if self.sync:
+                os.fsync(self._f.fileno())
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self.flush()
+            self._f.close()
+
+
+# ---------------------------------------------------------------------------
+# Blob log
+# ---------------------------------------------------------------------------
+
+
+_DIGEST_LEN = 32
+
+
+class BlobLog:
+    """Persistent append-only content-addressed blob log.
+
+    A `BlobRecord` payload is `eid str | sha256 32B | blob bytes` where
+    the digest covers the blob bytes (the canonical wire encoding from
+    `repro.net.wire.encode_blob`) — every record verifies on its own,
+    independent of the eid's provenance. The in-memory index maps eid to
+    the record's file offset and is rebuilt by scanning on open; `get`
+    re-reads from disk and re-verifies CRC + SHA-256, so a latent disk
+    corruption surfaces as an error, never as wrong bytes.
+
+    Content-addressed means idempotent: `put` of an already-indexed eid
+    is a no-op, so replayed or re-synced blobs never grow the log.
+    """
+
+    def __init__(self, path: str, *, sync: bool = True,
+                 obs: Optional[MetricsRegistry] = None):
+        self.obs = obs if obs is not None else MetricsRegistry()
+        self._log = _RecordLog(path, "blob", sync=sync, obs=self.obs)
+        self._index: Dict[str, int] = {}        # eid -> record offset
+        for offset, rtype, payload in self._log.records:
+            if rtype != REC_BLOB:
+                continue
+            eid, _sha, _blob = self._parse(payload)
+            self._index[eid] = offset
+            self.obs.counter("journal_events_total").inc(
+                event="blob_replayed")
+        self._log.records = []                  # scan buffers released
+
+    @staticmethod
+    def _parse(payload: bytes) -> Tuple[str, bytes, bytes]:
+        if len(payload) < 4:
+            raise JournalError("short blob record")
+        (elen,) = struct.unpack_from(">I", payload)
+        need = 4 + elen + _DIGEST_LEN
+        if len(payload) < need:
+            raise JournalError("short blob record")
+        eid = payload[4:4 + elen].decode("utf-8")
+        sha = payload[4 + elen:need]
+        return eid, sha, payload[need:]
+
+    def put(self, eid: str, blob: bytes) -> None:
+        """Append one blob; durable (and indexed) on return."""
+        if eid in self._index:
+            self.obs.counter("journal_events_total").inc(
+                event="blob_dedup")
+            return
+        import hashlib
+        payload = (struct.pack(">I", len(eid.encode())) + eid.encode()
+                   + hashlib.sha256(blob).digest() + blob)
+        offset = self._log.append(REC_BLOB, payload)
+        CrashPoint.maybe_crash(CP_BLOB_PRE_INDEX)
+        self._index[eid] = offset
+
+    def get(self, eid: str) -> bytes:
+        """Blob bytes for `eid`, CRC- and SHA-256-verified from disk."""
+        import hashlib
+        rtype, payload = self._log.read_at(self._index[eid])
+        if rtype != REC_BLOB:
+            raise JournalError(f"offset for {eid[:16]} is not a blob")
+        got_eid, sha, blob = self._parse(payload)
+        if got_eid != eid:
+            raise JournalError(f"blob record eid mismatch for {eid[:16]}")
+        if hashlib.sha256(blob).digest() != sha:
+            raise JournalError(f"blob bytes corrupt for {eid[:16]}")
+        return blob
+
+    def eids(self) -> FrozenSet[str]:
+        return frozenset(self._index)
+
+    def __contains__(self, eid: str) -> bool:
+        return eid in self._index
+
+    def __len__(self) -> int:
+        return len(self._index)
+
+    @property
+    def size(self) -> int:
+        return self._log.size
+
+    def compact(self, live: FrozenSet[str]) -> int:
+        """Rewrite the log keeping only `live` eids (atomic: new log is
+        written aside, fsynced, renamed over the old). Returns bytes
+        reclaimed. Called under the snapshot cadence with the currently
+        resident eids, so retracted/GC'd/shed payloads stop occupying
+        disk at the next compaction."""
+        drop = [e for e in self._index if e not in live]
+        if not drop:
+            return 0
+        before = self._log.size
+        tmp = self.path + ".tmp"
+        new_index: Dict[str, int] = {}
+        with open(tmp, "wb") as f:
+            for eid in sorted(self._index):
+                if eid not in live:
+                    continue
+                rtype, payload = self._log.read_at(self._index[eid])
+                new_index[eid] = f.tell()
+                f.write(_pack_record(rtype, payload))
+            f.flush()
+            os.fsync(f.fileno())
+            new_size = f.tell()
+        CrashPoint.maybe_crash(CP_BLOB_PRE_COMPACT_RENAME)
+        self._log.close()
+        os.replace(tmp, self.path)
+        _fsync_dir(os.path.dirname(self.path) or ".")
+        self._log = _RecordLog(self.path, "blob", sync=self._log.sync,
+                               obs=self.obs)
+        self._log.records = []
+        self._index = new_index
+        self._log.size = new_size
+        self.obs.counter("journal_events_total").inc(event="blob_compact")
+        return before - new_size
+
+    @property
+    def path(self) -> str:
+        return self._log.path
+
+    def flush(self) -> None:
+        self._log.flush()
+
+    def close(self) -> None:
+        self._log.close()
+
+
+# ---------------------------------------------------------------------------
+# Layer-1 WAL + snapshots
+# ---------------------------------------------------------------------------
+
+
+def _enc_layer1(adds: FrozenSet[AddEntry], removes: FrozenSet[str],
+                vv: VersionVector) -> bytes:
+    from repro.net.wire import encode_layer1
+    return encode_layer1(adds, removes, vv)
+
+
+def _dec_layer1(raw: bytes) -> Tuple[FrozenSet[AddEntry], FrozenSet[str],
+                                     VersionVector]:
+    from repro.net.wire import decode_layer1
+    return decode_layer1(raw)
+
+
+def _split_epoch(payload: bytes):
+    """(epoch, adds, removes, vv) from an epoch-stamped record payload."""
+    if len(payload) < 8:
+        raise JournalError("short journal record")
+    (epoch,) = struct.unpack_from(">Q", payload)
+    adds, removes, vv = _dec_layer1(payload[8:])
+    return epoch, adds, removes, vv
+
+
+_EPOCH = struct.Struct(">Q")
+
+
+class StateJournal:
+    """Write-ahead log of Layer-1 (A, R, V) transitions with periodic
+    compacted snapshots.
+
+    `append_delta` records the *new* entries of one acknowledged
+    transition; `load()` = snapshot (if any) joined with every journal
+    record of the snapshot's epoch, each a CRDT join, so replay is
+    idempotent and insensitive to the crash landing between any two
+    steps of `snapshot()`'s write → rename → truncate sequence.
+
+    Every record carries a u64 *snapshot epoch*, bumped at each
+    snapshot. Recovery skips deltas older than the snapshot's epoch:
+    they are redundant joins for monotone history, but after a
+    NON-monotone snapshot (tombstone GC shrank A/R) a crash between the
+    snapshot rename and the journal truncate would otherwise replay
+    them and resurrect GC'd entries. The epoch stamp makes the stale
+    journal suffix inert either way.
+    """
+
+    def __init__(self, dirname: str, *, sync: bool = True,
+                 obs: Optional[MetricsRegistry] = None):
+        self.dirname = dirname
+        self.obs = obs if obs is not None else MetricsRegistry()
+        self.snap_path = os.path.join(dirname, "snapshot.bin")
+        # a leftover temp file is a snapshot that never renamed — dead
+        tmp = self.snap_path + ".tmp"
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        self._log = _RecordLog(os.path.join(dirname, "journal.log"),
+                               "journal", sync=sync, obs=self.obs)
+        self.records_since_snapshot = len(self._log.records)
+        snap = self._read_snapshot()
+        self.epoch = snap[0] if snap is not None else 0
+
+    def _read_snapshot(self):
+        try:
+            with open(self.snap_path, "rb") as f:
+                raw = f.read()
+        except FileNotFoundError:
+            return None
+        records, _ = scan_records(raw)
+        if len(records) != 1 or records[0][1] != REC_SNAPSHOT:
+            # an unparseable snapshot can only be pre-durable garbage
+            # (the rename is atomic and follows the fsync): ignore it —
+            # the journal still holds everything since the last GOOD
+            # snapshot, because truncation happens only after a rename
+            return None
+        epoch, adds, removes, vv = _split_epoch(records[0][2])
+        return epoch, adds, removes, vv
+
+    def load(self) -> Tuple[FrozenSet[AddEntry], FrozenSet[str],
+                            VersionVector]:
+        """Recovered Layer-1 metadata: snapshot ⊔ same-epoch clean
+        journal prefix."""
+        adds: FrozenSet[AddEntry] = frozenset()
+        removes: FrozenSet[str] = frozenset()
+        vv = VersionVector()
+        snap = self._read_snapshot()
+        if snap is not None:
+            self.epoch, adds, removes, vv = snap
+            self.obs.counter("journal_events_total").inc(
+                event="snapshot_loaded")
+        for _off, rtype, payload in self._log.records:
+            if rtype != REC_DELTA:
+                continue
+            d_epoch, d_adds, d_removes, d_vv = _split_epoch(payload)
+            if d_epoch < self.epoch:    # pre-snapshot leftovers (the
+                continue                # truncate never landed): inert
+            adds |= d_adds
+            removes |= d_removes
+            vv = vv.merge(d_vv)
+            self.obs.counter("journal_events_total").inc(
+                event="delta_replayed")
+        self._log.records = []
+        return adds, removes, vv
+
+    def append_delta(self, adds: FrozenSet[AddEntry],
+                     removes: FrozenSet[str], vv: VersionVector) -> None:
+        self._log.append(REC_DELTA, _EPOCH.pack(self.epoch)
+                         + _enc_layer1(adds, removes, vv))
+        self.records_since_snapshot += 1
+
+    def snapshot(self, adds: FrozenSet[AddEntry], removes: FrozenSet[str],
+                 vv: VersionVector) -> None:
+        """Compact: durable full-state snapshot, then truncate the WAL.
+
+        Sequence (each step durable before the next): write
+        snapshot.tmp at epoch+1, fsync, atomic-rename over
+        snapshot.bin, fsync the directory, truncate journal.log. A
+        crash anywhere leaves a recoverable pair: before the rename the
+        old snapshot + full journal still cover everything; after it
+        the journal's records are a stale epoch and recovery skips
+        them."""
+        CrashPoint.maybe_crash(CP_SNAP_PRE_WRITE)
+        tmp = self.snap_path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(_pack_record(REC_SNAPSHOT,
+                                 _EPOCH.pack(self.epoch + 1)
+                                 + _enc_layer1(adds, removes, vv)))
+            f.flush()
+            os.fsync(f.fileno())
+        CrashPoint.maybe_crash(CP_SNAP_PRE_RENAME)
+        os.replace(tmp, self.snap_path)
+        _fsync_dir(self.dirname)
+        self.epoch += 1
+        CrashPoint.maybe_crash(CP_SNAP_PRE_TRUNCATE)
+        self._log.close()
+        with open(self._log.path, "r+b") as f:
+            f.truncate(0)
+            f.flush()
+            os.fsync(f.fileno())
+        self._log = _RecordLog(self._log.path, "journal",
+                               sync=self._log.sync, obs=self.obs)
+        self.records_since_snapshot = 0
+        self.obs.counter("journal_events_total").inc(event="snapshot")
+
+    @property
+    def size(self) -> int:
+        return self._log.size
+
+    def flush(self) -> None:
+        self._log.flush()
+
+    def close(self) -> None:
+        self._log.close()
+
+
+# ---------------------------------------------------------------------------
+# DurableStore — the replica-facing facade
+# ---------------------------------------------------------------------------
+
+
+class DurableStore:
+    """One directory holding a replica's durable state: blob log +
+    Layer-1 WAL + snapshot, with write-through transition recording.
+
+    Wiring (see `repro.api.Replica(path=...)` / `SyncNode.storage`):
+    every state replacement funnels through `record_transition(old,
+    new)`, which appends newly resident blobs to the blob log, then
+    journals the metadata delta — an operation is acknowledged exactly
+    when it returns. `load()` rebuilds the pre-crash state: metadata
+    from snapshot + WAL, payloads decoded from the blob log for every
+    still-referenced eid — a warm restart re-serves all locally-held
+    blobs with zero network bytes.
+
+    Non-monotone transitions (tombstone GC shrinking A/R) cannot be a
+    delta record; they force an immediate snapshot. Blob *residency*
+    shrink (shedding) is durable at the next compaction — until then a
+    restart may recover a superset of payloads, which placement-aware
+    recovery re-sheds (`SyncNode.shed_blobs`); Layer-1 metadata, and
+    therefore the Merkle root, is always exact.
+    """
+
+    def __init__(self, dirname: str, *, sync: bool = True,
+                 compact_every: int = 256,
+                 obs: Optional[MetricsRegistry] = None):
+        os.makedirs(dirname, exist_ok=True)
+        self.dirname = dirname
+        self.compact_every = max(1, compact_every)
+        self.obs = obs if obs is not None else MetricsRegistry()
+        self.blobs = BlobLog(os.path.join(dirname, "blobs.log"),
+                             sync=sync, obs=self.obs)
+        self.journal = StateJournal(dirname, sync=sync, obs=self.obs)
+        self.closed = False
+        self._update_size_gauge()
+
+    def _update_size_gauge(self) -> None:
+        self.obs.gauge("store_log_bytes").set(
+            float(self.blobs.size + self.journal.size))
+
+    # ------------------------------------------------------------ recovery
+
+    def load(self) -> CRDTMergeState:
+        """Replay to the recovered `CRDTMergeState`: Layer-1 metadata
+        exactly as last acknowledged, store payloads decoded from the
+        blob log for every eid some add entry still references."""
+        from repro.net.wire import decode_blob
+        adds, removes, vv = self.journal.load()
+        live = {e.element_id for e in adds}
+        store: Dict[str, Any] = {}
+        for eid in self.blobs.eids():
+            if eid in live:
+                store[eid] = decode_blob(self.blobs.get(eid))
+        return CRDTMergeState(adds, removes, vv, store)
+
+    # ------------------------------------------------------- write-through
+
+    def record_transition(self, old: CRDTMergeState,
+                          new: CRDTMergeState) -> None:
+        """Make one state replacement durable; the operation it carries
+        is acknowledged when this returns. Blobs land before the
+        metadata that references them, so a crash between the two loses
+        an unreferenced blob record (harmless), never a dangling one."""
+        if self.closed:
+            raise JournalError("durable store is closed")
+        from repro.net.wire import encode_blob
+        for eid in new.store:
+            if eid not in old.store and eid not in self.blobs:
+                self.blobs.put(eid, encode_blob(new.store[eid]))
+        monotone = (old.adds <= new.adds and old.removes <= new.removes)
+        if not monotone:
+            # tombstone GC (or any shrink) is not expressible as a
+            # delta record: snapshot the exact new state instead
+            self.journal.snapshot(new.adds, new.removes, new.vv)
+            self.blobs.compact(frozenset(new.store))
+            self._update_size_gauge()
+            return
+        d_adds = new.adds - old.adds
+        d_removes = new.removes - old.removes
+        if d_adds or d_removes or new.vv != old.vv:
+            self.journal.append_delta(d_adds, d_removes, new.vv)
+            CrashPoint.maybe_crash(CP_JOURNAL_PRE_ACK)
+        if self.journal.records_since_snapshot >= self.compact_every:
+            self.journal.snapshot(new.adds, new.removes, new.vv)
+            self.blobs.compact(frozenset(new.store))
+        self._update_size_gauge()
+
+    # ----------------------------------------------------------- lifecycle
+
+    def compact(self, state: CRDTMergeState) -> None:
+        """Force a snapshot + blob-log compaction against `state`."""
+        self.journal.snapshot(state.adds, state.removes, state.vv)
+        self.blobs.compact(frozenset(state.store))
+        self._update_size_gauge()
+
+    def flush(self) -> None:
+        if not self.closed:
+            self.blobs.flush()
+            self.journal.flush()
+
+    def close(self) -> None:
+        if self.closed:
+            return
+        self.blobs.close()
+        self.journal.close()
+        self.closed = True
+
+    def __enter__(self) -> "DurableStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __repr__(self) -> str:
+        return (f"DurableStore({self.dirname!r}, blobs={len(self.blobs)}, "
+                f"wal={self.journal.size}B)")

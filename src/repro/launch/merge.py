@@ -40,6 +40,10 @@ def main() -> None:
                     help="base checkpoint for task-vector strategies")
     ap.add_argument("--out", required=True)
     ap.add_argument("--node", default="merge-cli")
+    ap.add_argument("--state-dir", default="",
+                    help="durable replica directory: contributions are "
+                    "journaled (crash-safe) and a re-run resumes from "
+                    "the recovered OR-Set instead of starting empty")
     vb = ap.add_mutually_exclusive_group()
     vb.add_argument("--quiet", action="store_true",
                     help="no stdout output")
@@ -53,8 +57,16 @@ def main() -> None:
     model = Model(cfg)
     like = init_train_state(model, jax.random.PRNGKey(0))
 
-    replica = Replica(args.node)
+    replica = Replica(args.node, path=args.state_dir or None)
     log = EventLog.from_args(args, registry=replica.obs)
+    if args.state_dir and replica.visible():
+        log.emit("state_recovered",
+                 f"recovered {len(replica.visible())} contributions from "
+                 f"{args.state_dir} "
+                 f"(root {replica.merkle_root().hex()[:16]}…)",
+                 state_dir=args.state_dir,
+                 visible=len(replica.visible()),
+                 root=replica.merkle_root().hex())
     for path in args.inputs:
         ckpt, meta = restore_checkpoint(path, like)
         eid = replica.contribute(ckpt["params"])
@@ -88,6 +100,7 @@ def main() -> None:
                                      "data_step": 0})
     log.emit("checkpoint_written",
              f"wrote merged checkpoint to {path}", path=str(path))
+    replica.close()
     if args.events_out:
         log.dump(args.events_out)
 

@@ -75,7 +75,7 @@ from repro.obs import CounterView, MetricsRegistry
 from repro.obs import enabled as _obs_enabled
 from repro.obs import span as _span
 from repro.net.store import (BlobSource, Placement, bitmap_indices,
-                             chunk_bitmap)
+                             chunk_bitmap, payload_nbytes)
 from repro.net.wire import (CHUNK_ENVELOPE, DEFAULT_MAX_FRAME, BlobManifest,
                             BlobReq, BlobResp, BucketItemsMsg, BucketsMsg,
                             ChunkData, ChunkReq, DeltaMsg, HaveEntry,
@@ -213,7 +213,12 @@ class SyncNode:
         if max_frame_bytes <= CHUNK_ENVELOPE:
             raise ValueError(f"max_frame_bytes must exceed {CHUNK_ENVELOPE}")
         self.node_id = node_id
-        self.state = state or CRDTMergeState()
+        # durable write-through (repro.core.journal.DurableStore): when
+        # set, every replacement of self.state records its transition to
+        # disk before the assignment is visible. None = in-memory node.
+        # Set before _state so the property setter can consult it.
+        self.storage = None
+        self._state = state or CRDTMergeState()
         self.compress_blobs = compress_blobs
         self.max_frame_bytes = max_frame_bytes
         self.chunk_window = max(1, chunk_window)
@@ -287,6 +292,55 @@ class SyncNode:
         # keeps the id stable.
         self._items_for: Optional[CRDTMergeState] = None
         self._items: Dict[bytes, Tuple[str, Any]] = {}
+
+    # -- durable state: write-through + lifecycle --------------------------
+
+    @property
+    def state(self) -> CRDTMergeState:
+        return self._state
+
+    @state.setter
+    def state(self, new: CRDTMergeState) -> None:
+        """Every state replacement funnels here. With storage attached,
+        the transition is durable *before* the in-memory assignment —
+        an operation the node acknowledges is one recovery replays."""
+        old = self._state
+        if self.storage is not None and new is not old:
+            self.storage.record_transition(old, new)
+        self._state = new
+
+    def attach_storage(self, storage) -> None:
+        """Adopt a `DurableStore`: replay its recovered state into this
+        node (CRDT join — safe whether the node is fresh or mid-flight),
+        persist anything the node already held that the store did not,
+        then turn on write-through. After this call the node serves every
+        recovered blob locally; a warm restart fetches zero bytes."""
+        recovered = storage.load()
+        merged = recovered.merge(self._state)
+        if merged != recovered or merged.store.keys() != recovered.store.keys():
+            storage.record_transition(recovered, merged)
+        self._state = merged
+        self.storage = storage
+
+    def release_storage(self):
+        """Detach and return the durable store (flushed, still open);
+        subsequent state replacements are in-memory only."""
+        storage, self.storage = self.storage, None
+        if storage is not None:
+            storage.flush()
+        return storage
+
+    def close(self) -> None:
+        """Idempotent shutdown: flush + close the durable store (if any)
+        and drop transfer bookkeeping. The node object stays queryable
+        (state/root) but must not be driven further."""
+        storage, self.storage = self.storage, None
+        if storage is not None:
+            storage.close()
+        self._partials.clear()
+        self._sources.clear()
+        self._chunk_pending.clear()
+        self._blob_inflight.clear()
 
     # -- local updates -----------------------------------------------------
 
@@ -374,8 +428,18 @@ class SyncNode:
         self._wanted.difference_update(eids)
         self._gc_partials()
 
-    def shed_blobs(self) -> Tuple[str, ...]:
+    def shed_blobs(self,
+                   budget_bytes: Optional[int] = None) -> Tuple[str, ...]:
         """Drop store payloads placed on other nodes (and not pinned).
+
+        With `budget_bytes`, additionally sheds size-aware down to the
+        budget: while resident payload bytes exceed it, the largest
+        non-pinned blob whose placement names this node as a *backup*
+        holder (not the primary — `placement.holders(eid)[0]`) is
+        dropped, largest-first so one oversized checkpoint frees budget
+        before a pile of adapters is touched. Primary copies and pinned
+        eids are never shed under budget pressure — the budget is a
+        target, not a guarantee, when primaries alone exceed it.
 
         Returns the dropped eids. Call only once the payload is resident
         at its holders (e.g. after a converged sync round) — shedding
@@ -383,10 +447,28 @@ class SyncNode:
         reappears."""
         if self.placement is None:
             return ()
-        drop = tuple(sorted(
+        drop = sorted(
             eid for eid in self.state.store
             if eid not in self._wanted
-            and not self.placement.is_holder(self.node_id, eid)))
+            and not self.placement.is_holder(self.node_id, eid))
+        if budget_bytes is not None:
+            dead = set(drop)
+            sizes = {eid: payload_nbytes(p)
+                     for eid, p in self.state.store.items()
+                     if eid not in dead}
+            resident = sum(sizes.values())
+            shedable = sorted(
+                (eid for eid in sizes
+                 if eid not in self._wanted
+                 and self.placement.holders(eid)[0] != self.node_id),
+                key=lambda e: (-sizes[e], e))
+            for eid in shedable:
+                if resident <= budget_bytes:
+                    break
+                drop.append(eid)
+                resident -= sizes[eid]
+                self.obs.counter("repair_events_total").inc(
+                    event="budget_shed")
         if drop:
             dead = set(drop)
             store = {e: p for e, p in self.state.store.items()
@@ -394,7 +476,46 @@ class SyncNode:
             self.state = CRDTMergeState(self.state.adds, self.state.removes,
                                         self.state.vv, store)
             self.stats["blobs_shed"] += len(drop)
-        return drop
+        return tuple(sorted(drop))
+
+    def repair_membership(self, departed: str) -> List[Reply]:
+        """Re-place blobs after a storage node leaves the membership.
+
+        Shrinks the placement with `Placement.without(departed)` (HRW:
+        only the departed node's blobs re-place), purges the departed
+        peer from every source pool and session record, and returns the
+        HaveReq discovery frames for blobs this node just became
+        responsible for but does not hold — send them and pump the
+        transport to restore the replication factor. No-op (empty list)
+        without a placement or if `departed` is not a member."""
+        if self.placement is None or departed not in self.placement.nodes:
+            return []
+        before = self.placement
+        self.placement = before.without(departed)
+        # the departed peer can serve nothing: drop its sources, pending
+        # windows, and delta bookkeeping so the scheduler re-aims
+        for eid, pool in list(self._sources.items()):
+            if pool.pop(departed, None) is not None and not pool:
+                del self._sources[eid]
+        for key in [k for k in self._chunk_pending if k[0] == departed]:
+            self._drop_window(key)
+        for key in [k for k in self._blob_inflight if k[0] == departed]:
+            del self._blob_inflight[key]
+        self.known.pop(departed, None)
+        for peers in self._slow.values():
+            peers.discard(departed)
+        # newly-responsible misses: held nowhere locally, placed here now
+        # but not before the membership change
+        gained = tuple(sorted(
+            eid for eid in self.state.visible() - self.state.store.keys()
+            if self.placement.is_holder(self.node_id, eid)
+            and not before.is_holder(self.node_id, eid)))
+        for _ in gained:
+            self.obs.counter("repair_events_total").inc(event="replaced_eid")
+        if not gained:
+            return []
+        self.obs.counter("repair_events_total").inc(event="repair_round")
+        return self.query_holders(gained)
 
     def items(self) -> Dict[bytes, Tuple[str, Any]]:
         """Reconciliation items of the current state (memoized)."""

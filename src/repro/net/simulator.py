@@ -260,10 +260,12 @@ class SimGossipNetwork:
                        chunk_timeout=chunk_timeout)
         if max_frame_bytes is not None:
             node_kw["max_frame_bytes"] = max_frame_bytes
+        self._node_kw = node_kw            # crash/restart rebuilds
         self.nodes: List[SyncNode] = [
             SyncNode(nid, **node_kw) for nid in ids]
         self.by_id: Dict[str, SyncNode] = {x.node_id: x for x in self.nodes}
         self._tick_armed: Set[str] = set()
+        self._storage_dir: Optional[str] = None
         for node in self.nodes:
             self.net.register(node.node_id, self._make_handler(node))
 
@@ -286,6 +288,8 @@ class SimGossipNetwork:
         self._tick_armed.add(node.node_id)
 
         def fire(net: SimNetwork) -> None:
+            if self.by_id.get(node.node_id) is not node:
+                return          # node crashed (or was replaced) meanwhile
             self._tick_armed.discard(node.node_id)
             node.clock = net.clock
             for peer, reply in node.tick(net.clock):
@@ -330,6 +334,64 @@ class SimGossipNetwork:
         application-level call, not a message handler)."""
         for node in self.nodes:
             node.fetch_hook = self._fetch_hook
+
+    # -------------------------------------------- durability: crash/restart
+
+    def attach_storage(self, dirname: str) -> None:
+        """Make every node durable: one `DurableStore` directory per
+        node under `dirname`, write-through from here on. Prerequisite
+        for crash_node/restart_node round trips."""
+        import os
+        from repro.core.journal import DurableStore
+        self._storage_dir = dirname
+        for node in self.nodes:
+            node.attach_storage(
+                DurableStore(os.path.join(dirname, node.node_id)))
+
+    def crash_node(self, node_id: str) -> None:
+        """Kill a node with no shutdown courtesy — a process death, not
+        a clean stop. Its handler is deregistered (frames addressed to
+        it silently vanish, exactly like a dead host), pending timers
+        are orphaned, and nothing is flushed or detached: whatever its
+        durable directory holds at this instant is what a restart gets.
+        (Write paths flush eagerly, so dropping the handles loses no
+        acknowledged bytes — the file close below is byte-neutral and
+        only returns descriptors to the OS.)"""
+        node = self.by_id.pop(node_id)
+        self.nodes.remove(node)
+        self.net.handlers.pop(node_id, None)
+        self._tick_armed.discard(node_id)
+        storage = getattr(node, "storage", None)
+        if storage is not None:
+            for log in (storage.blobs._log, storage.journal._log):
+                try:
+                    log._f.close()
+                except OSError:
+                    pass
+            storage.closed = True
+
+    def restart_node(self, node_id: str) -> SyncNode:
+        """Bring a crashed node back as a fresh process: a brand-new
+        SyncNode whose only knowledge is what `attach_storage`'s durable
+        directory replays — recovered Layer-1 metadata at the exact
+        pre-crash Merkle root, every locally-held blob served with zero
+        network bytes. Re-registers the handler and re-installs the
+        fetch hook if the fleet uses one."""
+        import os
+        from repro.core.journal import DurableStore
+        if node_id in self.by_id:
+            raise ValueError(f"{node_id} is still alive")
+        node = SyncNode(node_id, **self._node_kw)
+        if self._storage_dir is not None:
+            node.attach_storage(
+                DurableStore(os.path.join(self._storage_dir, node_id)))
+        self.nodes.append(node)
+        self.nodes.sort(key=lambda x: x.node_id)
+        self.by_id[node_id] = node
+        self.net.register(node_id, self._make_handler(node))
+        if any(x.fetch_hook is not None for x in self.nodes if x is not node):
+            node.fetch_hook = self._fetch_hook
+        return node
 
     def _fetch_hook(self, node: SyncNode,
                     eids: Sequence[str]) -> Dict[str, object]:

@@ -111,6 +111,23 @@ class Placement:
         return f"Placement(n={len(self.nodes)}, r={self.r})"
 
 
+def payload_nbytes(payload) -> int:
+    """Resident size of one store payload: the sum of its leaf tensor
+    bytes. The sizing key for budgeted shedding (`SyncNode.shed_blobs`)
+    — drop order is largest-first, so one oversized checkpoint frees
+    budget before a pile of adapters is touched.
+
+    >>> import numpy as np
+    >>> payload_nbytes({"a": np.zeros(4, np.float32),
+    ...                 "b": {"c": np.zeros((2, 3), np.float16)}})
+    28
+    """
+    import jax
+    import numpy as np
+    return sum(np.asarray(x).nbytes
+               for x in jax.tree_util.tree_leaves(payload))
+
+
 # ---------------------------------------------------------------------------
 # HaveMap chunk bitmaps
 # ---------------------------------------------------------------------------

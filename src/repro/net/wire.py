@@ -624,6 +624,36 @@ def _dec_payloads(r: _Reader) -> Dict[str, Any]:
     return {r.str_(): decode_value(r) for _ in range(r.u32())}
 
 
+def encode_layer1(adds: FrozenSet[AddEntry], removes: FrozenSet[str],
+                  vv: VersionVector) -> bytes:
+    """Canonical encoding of a Layer-1 (A, R, V) triple, payload-free.
+
+    The exact add/remove/version-vector encoders the sync frames use
+    (including the sparse `leaf_paths` coverage extension), exposed for
+    the durable journal (`repro.core.journal`): WAL records and
+    snapshots carry Layer-1 metadata in the same canonical bytes that
+    cross the wire, so there is exactly one (de)serialization of
+    `CRDTMergeState` metadata in the system."""
+    buf = bytearray()
+    _enc_adds(buf, adds)
+    _enc_removes(buf, removes)
+    _enc_vv(buf, vv)
+    return bytes(buf)
+
+
+def decode_layer1(raw: bytes) -> Tuple[FrozenSet[AddEntry],
+                                       FrozenSet[str], VersionVector]:
+    """Inverse of `encode_layer1`; raises `WireError` on malformed or
+    trailing bytes (a durable record must parse exactly)."""
+    r = _Reader(raw)
+    adds = _dec_adds(r)
+    removes = _dec_removes(r)
+    vv = _dec_vv(r)
+    if r.pos != len(raw):
+        raise WireError("trailing bytes after layer-1 payload")
+    return adds, removes, vv
+
+
 # ---------------------------------------------------------------------------
 # Message codecs
 # ---------------------------------------------------------------------------

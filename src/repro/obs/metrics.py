@@ -173,6 +173,17 @@ declare("probe_convergence_seconds", "histogram",
 declare("launch_events_total", "counter",
         "Structured CLI events emitted by launch/ tools",
         labels=("event",))
+declare("journal_events_total", "counter",
+        "Durable-store events: appends, fsyncs, replays, snapshots, "
+        "compactions, torn-tail repairs (per DurableStore)",
+        labels=("event",), deterministic=True)
+declare("store_log_bytes", "gauge",
+        "Bytes on disk across a DurableStore's blob log + WAL",
+        deterministic=True)
+declare("repair_events_total", "counter",
+        "Replication-repair events on membership change: re-placed "
+        "eids, repair fetches, shed blobs (per SyncNode)",
+        labels=("event",), deterministic=True)
 
 
 # ---------------------------------------------------------------------------

@@ -10,6 +10,10 @@
 3. Metrics-table check: the catalog documented in
    docs/OBSERVABILITY.md must match repro.obs CATALOG exactly — same
    names, kinds, label axes, and deterministic flags.
+4. Record-table check: the durable on-disk record types documented in
+   docs/PROTOCOL.md (rows shaped `| R 0xNN | \\`Name\\` |`, disjoint
+   from the frame table by the `R` marker) must match
+   repro.core.journal's RECORD_TYPES registry exactly.
 
 Usage: PYTHONPATH=src python tools/check_docs.py [repo_root]
 Exits non-zero listing every violation.
@@ -25,6 +29,10 @@ LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 # a frame-table row: | 0xNN | `Name` | ...
 FRAME_ROW_RE = re.compile(r"^\|\s*0x([0-9A-Fa-f]{2})\s*\|\s*`?(\w+)`?\s*\|",
                           re.MULTILINE)
+# a durable record-table row: | R 0xNN | `Name` | ...  (the `R` marker
+# keeps these rows out of FRAME_ROW_RE's net and vice versa)
+RECORD_ROW_RE = re.compile(
+    r"^\|\s*R\s+0x([0-9A-Fa-f]{2})\s*\|\s*`?(\w+)`?\s*\|", re.MULTILINE)
 # a metric-catalog row: | `name` | kind | labels | yes/no | ...
 METRIC_ROW_RE = re.compile(
     r"^\|\s*`(\w+)`\s*\|\s*(counter|gauge|histogram)\s*"
@@ -81,6 +89,34 @@ def check_frame_table(root: Path) -> List[str]:
     return errors
 
 
+def doc_record_table(protocol_md: Path) -> Dict[int, str]:
+    """{record type id: record name} parsed from the durable-format
+    table."""
+    table: Dict[int, str] = {}
+    for hex_id, name in RECORD_ROW_RE.findall(
+            protocol_md.read_text(encoding="utf-8")):
+        table[int(hex_id, 16)] = name
+    return table
+
+
+def check_record_table(root: Path) -> List[str]:
+    from repro.core.journal import RECORD_TYPES
+    documented = doc_record_table(root / "docs" / "PROTOCOL.md")
+    errors = []
+    for rtype in sorted(set(documented) | set(RECORD_TYPES)):
+        doc, impl = documented.get(rtype), RECORD_TYPES.get(rtype)
+        if doc is None:
+            errors.append(f"PROTOCOL.md: record R 0x{rtype:02X} ({impl}) "
+                          "written by the journal but undocumented")
+        elif impl is None:
+            errors.append(f"PROTOCOL.md: record R 0x{rtype:02X} ({doc}) "
+                          "documented but unknown to repro.core.journal")
+        elif doc != impl:
+            errors.append(f"PROTOCOL.md: record R 0x{rtype:02X} documented "
+                          f"as {doc}, journal calls it {impl}")
+    return errors
+
+
 def doc_metrics_table(obs_md: Path) -> Dict[str, Tuple[str, Tuple[str, ...],
                                                        bool]]:
     """{metric name: (kind, labels, deterministic)} from the doc."""
@@ -119,13 +155,13 @@ def check_metrics_table(root: Path) -> List[str]:
 def main(argv: List[str]) -> int:
     root = Path(argv[1]) if len(argv) > 1 else Path(__file__).parent.parent
     errors = (check_links(root) + check_frame_table(root)
-              + check_metrics_table(root))
+              + check_record_table(root) + check_metrics_table(root))
     for e in errors:
         print(f"FAIL {e}", file=sys.stderr)
     if not errors:
         n = len(md_files(root))
-        print(f"docs OK: {n} markdown files, frame + metric tables "
-              "in sync")
+        print(f"docs OK: {n} markdown files, frame + record + metric "
+              "tables in sync")
     return 1 if errors else 0
 
 
