@@ -25,6 +25,40 @@ ICI_BW = 45e9          # ~50 GB/s nominal less protocol overhead
 
 Row = Tuple[str, float, str]
 
+# Tie priority for the dominant roofline term. Deterministic and
+# documented: on exactly-equal times the EARLIER entry wins, so an
+# all-zero cell reports "compute", not whatever label happens to sort
+# last lexicographically.
+_TERM_PRIORITY = ("compute", "memory", "collective")
+
+
+def dominant_term(t_c: float, t_m: float, t_x: float) -> str:
+    """Keyed argmax over the three roofline terms.
+
+    The old ``max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))``
+    fell through to comparing the LABEL strings whenever two times were
+    equal — ties resolved alphabetically ("memory" > "compute"), not by
+    any modelling decision. Compare times only; break ties by the fixed
+    ``_TERM_PRIORITY`` order.
+    """
+    times = {"compute": t_c, "memory": t_m, "collective": t_x}
+    best = _TERM_PRIORITY[0]
+    for label in _TERM_PRIORITY[1:]:
+        if times[label] > times[best]:
+            best = label
+    return best
+
+
+def bandwidth_bound_s(bytes_moved: float, flops: float = 0.0) -> float:
+    """Roofline lower bound (seconds) for a kernel that moves
+    ``bytes_moved`` through HBM and does ``flops`` FLOPs — the larger of
+    the memory and compute terms on the modelled hardware. Merge kernels
+    are overwhelmingly memory-bound, so this is bytes/HBM_BW in
+    practice; bench_kernels uses it to price analytic traffic counts
+    without needing wall clocks (interpret-mode timings on CI CPUs say
+    nothing about TPU behaviour)."""
+    return max(bytes_moved / HBM_BW, flops / PEAK_FLOPS)
+
 
 def load_cells(dirname: str = "experiments/dryrun") -> List[Dict]:
     cells = []
@@ -41,13 +75,13 @@ def roofline_terms(cell: Dict) -> Dict:
     t_c = flops / PEAK_FLOPS
     t_m = mem / HBM_BW
     t_x = coll / ICI_BW
-    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+    dom = dominant_term(t_c, t_m, t_x)
     chips = cell.get("chips", 256)
     useful = cell.get("model_flops", 0.0) / chips
     bound = max(t_c, t_m, t_x)
     return {
         "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
-        "dominant": dom[1], "bound_s": bound,
+        "dominant": dom, "bound_s": bound,
         "useful_flops_per_device": useful,
         "useful_ratio": useful / flops if flops else 0.0,
         # fraction of hardware roofline actually doing model math:

@@ -97,6 +97,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.api.spec import MergeSpec, coerce_spec
+from repro.core.compression import (CompressedLeaf, CompressedTree,
+                                    compressed_tree_to_structure)
 from repro.core.hashing import pytree_digest, tensor_digest
 from repro.obs import CounterView, MetricsRegistry, span
 from repro.strategies import get_strategy
@@ -105,6 +107,27 @@ from repro.strategies.base import Strategy, run_fold
 _DOMAIN_LEAF = b"repro/engine/leaf-subroot/v2"
 _DOMAIN_MODEL = b"repro/engine/model-subroot/v2"
 _NO_BASE = b"\x00" * 32          # base=None marker (zeros_like base)
+
+
+def _is_qleaf(x: Any) -> bool:
+    return isinstance(x, CompressedLeaf)
+
+
+def _dense_leaf(x: Any, *, obs: Optional[MetricsRegistry]) -> Any:
+    """Densify one payload slice if (and only if) it arrived quantized.
+
+    The op sequence is `compression.decompress_tree`'s exactly, so the
+    eager fallback stays byte-identical to densify-then-merge. Counted
+    (`engine_events_total{event=dequant_leaves}`) because the whole
+    point of the merge-on-arrival kernel is that the hot path never
+    calls this — `bench_kernels.py` gates that count at zero."""
+    if not _is_qleaf(x):
+        return x
+    if obs is not None:
+        obs.counter("engine_events_total").inc(event="dequant_leaves")
+    import numpy as np
+    a = (x.q.astype(np.float32) * x.scale).reshape(x.shape)
+    return jnp.asarray(a, x.dtype)
 
 
 def _as_spec(spec: Optional[MergeSpec], strategy_name: Optional[str],
@@ -146,10 +169,20 @@ class ContribMeta:
     # the planner map a sparse contribution's leaves onto the model's
     # leaves by path rather than by position.
     paths: Tuple[str, ...] = ()
+    # per-leaf int8 dequantization scale for quantized (merge-on-
+    # arrival) contributions, parallel to digests; None = dense fp
+    # payload. Digests always describe the DEQUANTIZED tensor — content
+    # identity is defined on wire-format values (compression.py), so a
+    # quantized and a densified copy of the same contribution share
+    # cache keys.
+    scales: Optional[Tuple[Optional[float], ...]] = None
 
     @property
     def leaf_count(self) -> int:
         return len(self.digests)
+
+    def scale_of(self, local: int) -> Optional[float]:
+        return self.scales[local] if self.scales is not None else None
 
 
 _META_MEMO: "OrderedDict[str, ContribMeta]" = OrderedDict()
@@ -158,18 +191,34 @@ _META_MEMO_LIMIT = 1024
 
 def contrib_meta(contribution: Any, *, eid: Optional[str] = None
                  ) -> ContribMeta:
-    """Flatten + digest one contribution; memoized by content id."""
+    """Flatten + digest one contribution; memoized by content id.
+
+    Quantized contributions (`CompressedTree`) are planned in place:
+    leaves flatten to `CompressedLeaf` payloads, digests are computed
+    on a transient per-leaf dequantization (one leaf live at a time —
+    never the k x P densified copy), and the per-leaf scales ride into
+    the meta so the plan can account int8 wire bytes and the executor
+    can route the batch through the merge-on-arrival kernel."""
     if eid is not None and eid in _META_MEMO:
         _META_MEMO.move_to_end(eid)
         return _META_MEMO[eid]
-    flat, treedef = jax.tree_util.tree_flatten_with_path(contribution)
+    if isinstance(contribution, CompressedTree):
+        contribution = compressed_tree_to_structure(contribution)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        contribution, is_leaf=_is_qleaf)
     leaves = [l for _, l in flat]
+    quantized = any(_is_qleaf(l) for l in leaves)
     meta = ContribMeta(
         treedef=treedef,
-        digests=tuple(tensor_digest(l) for l in leaves),
-        shapes=tuple(tuple(jnp.shape(l)) for l in leaves),
-        dtypes=tuple(jnp.asarray(l).dtype for l in leaves),
+        digests=tuple(tensor_digest(_dense_leaf(l, obs=None))
+                      for l in leaves),
+        shapes=tuple(tuple(l.shape) if _is_qleaf(l) else tuple(jnp.shape(l))
+                     for l in leaves),
+        dtypes=tuple(jnp.dtype(l.dtype) if _is_qleaf(l)
+                     else jnp.asarray(l).dtype for l in leaves),
         paths=tuple(jax.tree_util.keystr(p) for p, _ in flat),
+        scales=tuple(float(l.scale) if _is_qleaf(l) else None
+                     for l in leaves) if quantized else None,
     )
     if eid is not None:
         _META_MEMO[eid] = meta
@@ -180,18 +229,29 @@ def contrib_meta(contribution: Any, *, eid: Optional[str] = None
 
 def note_meta(eid: str, paths: Sequence[str], digests: Sequence[bytes],
               shapes: Sequence[Tuple[int, ...]],
-              dtypes: Sequence[Any]) -> ContribMeta:
+              dtypes: Sequence[Any],
+              scales: Optional[Sequence[Optional[float]]] = None
+              ) -> ContribMeta:
     """Memoize planner metadata announced over the wire (SparseManifest
     leaf refs) WITHOUT the payload being resident: the planner can then
     key per-leaf subsets — and fully-cached or fold-resumable plans can
     execute — before (or without) fetching a single chunk. treedef stays
-    None: such metas are mapped onto the model by path."""
+    None: such metas are mapped onto the model by path.
+
+    `scales` threads the int8 dequantization scale announced per leaf
+    ref (zero-point is identically 0 — the wire codec is symmetric)
+    into the plan: the planner accounts the leaf's stacked bytes at the
+    int8 wire width and the executor knows the payload will arrive as a
+    `CompressedLeaf` it can merge on arrival."""
     meta = ContribMeta(
         treedef=None,
         digests=tuple(digests),
         shapes=tuple(tuple(s) for s in shapes),
         dtypes=tuple(jnp.dtype(d) for d in dtypes),
         paths=tuple(paths),
+        scales=(tuple(None if s is None else float(s) for s in scales)
+                if scales is not None and any(s is not None for s in scales)
+                else None),
     )
     _META_MEMO[eid] = meta
     while len(_META_MEMO) > _META_MEMO_LIMIT:
@@ -232,10 +292,21 @@ class LeafTask:
     contributors: Tuple[int, ...] = ()
     digests: Tuple[bytes, ...] = ()
     base_frag: bytes = b""
+    # per-contributor int8 dequant scale (None entry = dense fp payload),
+    # parallel to `contributors`; None = no contributor is quantized.
+    # Threaded from wire announcements (note_meta) or resident
+    # CompressedTrees so the executor can pick the merge-on-arrival
+    # kernel and the planner can account wire-width stacked bytes.
+    scales: Optional[Tuple[Optional[float], ...]] = None
 
     @property
     def k(self) -> int:
         return len(self.contributors)
+
+    @property
+    def quantized(self) -> bool:
+        return self.scales is not None and \
+            all(s is not None for s in self.scales)
 
 
 @dataclass(frozen=True)
@@ -344,11 +415,14 @@ def plan_merge(metas: Sequence[ContribMeta],
         path_index = {p: i for i, p in enumerate(paths)}
         contributors: List[List[int]] = [[] for _ in range(n_leaves)]
         leaf_digests: List[List[bytes]] = [[] for _ in range(n_leaves)]
+        leaf_scales: List[List[Optional[float]]] = [[] for _ in
+                                                    range(n_leaves)]
         for j, (m, cov) in enumerate(zip(metas, coverages)):
             if cov is None and m.treedef is not None:
                 for i in range(n_leaves):
                     contributors[i].append(j)
                     leaf_digests[i].append(m.digests[i])
+                    leaf_scales[i].append(m.scale_of(i))
                 continue
             # path-mapped: sparse, or dense-by-manifest (treedef unknown)
             if cov is not None and set(m.paths) != set(cov):
@@ -368,6 +442,7 @@ def plan_merge(metas: Sequence[ContribMeta],
                         "disagrees with the model structure")
                 contributors[i].append(j)
                 leaf_digests[i].append(m.digests[local])
+                leaf_scales[i].append(m.scale_of(local))
         if base is None:
             base_frags: Sequence[bytes] = [_NO_BASE] * n_leaves
         else:
@@ -388,17 +463,25 @@ def plan_merge(metas: Sequence[ContribMeta],
                 base_only.append(i)
                 continue
             digs = tuple(leaf_digests[i])
-            nbytes = jnp.dtype(dtypes[i]).itemsize
+            numel = 1
             for d in shapes[i]:
-                nbytes *= d
+                numel *= d
+            itemsize = jnp.dtype(dtypes[i]).itemsize
+            # quantized contributors stack at int8 wire width (the
+            # merge-on-arrival kernel never densifies them)
+            stacked = sum(numel * (1 if s is not None else itemsize)
+                          for s in leaf_scales[i])
+            scls = tuple(leaf_scales[i])
             tasks.append(
                 LeafTask(index=i, path=paths[i],
                          sub_root=_leaf_subroot(frag, base_frags[i], digs,
                                                 strat.needs_key, seed, i),
                          shape=shapes[i], dtype=dtypes[i],
-                         stacked_nbytes=ki * nbytes,
+                         stacked_nbytes=stacked,
                          contributors=tuple(contributors[i]),
-                         digests=digs, base_frag=base_frags[i]))
+                         digests=digs, base_frag=base_frags[i],
+                         scales=scls if any(s is not None for s in scls)
+                         else None))
     any_sparse = any(c is not None for c in coverages)
     return MergePlan(strategy=spec.strategy, reduction=spec.reduction,
                      seed=seed, k=k, cfg=spec.cfg,
@@ -742,13 +825,19 @@ def execute_plan(plan: MergePlan, contribs: Optional[Sequence[Any]], *,
                                  f"got {len(contribs)}")
             flat = _flatten_contribs(plan, contribs)
 
-            def leaf_of(j: int, t: LeafTask):
+            def leaf_raw(j: int, t: LeafTask):
                 f = flat[j]
                 if f is None:
                     raise KeyError(
                         f"contribution {j} is needed by leaf {t.path!r} "
                         "but its payload was not supplied")
                 return f[t.index] if isinstance(f, list) else f[t.path]
+
+            def leaf_of(j: int, t: LeafTask):
+                # eager paths densify quantized slices on access (exact
+                # decompress_tree math, counted); the kernel route reads
+                # the raw int8 payload via leaf_raw instead
+                return _dense_leaf(leaf_raw(j, t), obs=cache.obs)
 
             cfg = plan.cfg_dict()
             for t, m, aux in resumes:
@@ -774,8 +863,11 @@ def execute_plan(plan: MergePlan, contribs: Optional[Sequence[Any]], *,
                 if max_batch_bytes is None:
                     max_batch_bytes = max(t.stacked_nbytes
                                           for t in plan.tasks)
+                kernel_fuse = pallas and \
+                    _kernel_route(strat, cfg) is not None
                 for group in _dispatch_groups(strat, misses,
-                                              max_batch_bytes):
+                                              max_batch_bytes,
+                                              fuse=kernel_fuse):
                     approximate = False
                     if len(group) == 1:
                         o, a = _execute_leaf(strat, plan, group[0],
@@ -784,7 +876,7 @@ def execute_plan(plan: MergePlan, contribs: Optional[Sequence[Any]], *,
                     else:
                         out, auxs, approximate = _execute_batch(
                             strat, plan, group, leaf_of, base_leaves,
-                            cache, pallas=pallas)
+                            cache, pallas=pallas, leaf_raw=leaf_raw)
                         cache.stats["batched_leaves"] += len(group)
                     cache.stats["dispatches"] += 1
                     cache.stats["leaf_tasks"] += len(group)
@@ -801,16 +893,22 @@ def _flatten_contribs(plan: MergePlan, contribs: Sequence[Any]
                       ) -> List[Any]:
     """Per-contribution leaf accessors: a flatten-order list for dense
     contributions, a path-keyed dict for sparse ones, None for payloads
-    the executor was told it will not need."""
+    the executor was told it will not need. Quantized contributions
+    (`CompressedTree`) flatten to their `CompressedLeaf` payloads —
+    densification is deferred to the access site so the kernel route
+    can consume the int8 bytes directly."""
     covs = plan.coverages or (None,) * plan.k
     out: List[Any] = []
     for c, cov in zip(contribs, covs):
+        if isinstance(c, CompressedTree):
+            c = compressed_tree_to_structure(c)
         if c is None:
             out.append(None)
         elif cov is None:
             out.append(plan.treedef.flatten_up_to(c))
         else:
-            pairs = jax.tree_util.tree_flatten_with_path(c)[0]
+            pairs = jax.tree_util.tree_flatten_with_path(
+                c, is_leaf=_is_qleaf)[0]
             out.append({jax.tree_util.keystr(p): l for p, l in pairs})
     return out
 
@@ -856,13 +954,20 @@ def plan_needed_ids(plan: MergePlan,
 
 
 def _dispatch_groups(strat: Strategy, misses: List[LeafTask],
-                     max_batch_bytes: int) -> List[List[LeafTask]]:
+                     max_batch_bytes: int, *,
+                     fuse: bool = False) -> List[List[LeafTask]]:
     """Partition missed tasks into dispatches. Elementwise strategies
     fuse same-dtype leaves (flattened + concatenated) up to the batch
     byte cap; everything else runs one leaf per dispatch. Under sparse
     contributions only leaves with the SAME ordered contributor subset
-    fuse — a [k_i, N] batch has one k_i."""
-    if not strat.batchable:
+    fuse — a [k_i, N] batch has one k_i.
+
+    `fuse=True` forces fusing for strategies that are not elementwise-
+    batchable but have a kernel-frontier flat-batch route (histogram
+    TIES, counter-RNG DARE): those kernels keep per-leaf block
+    boundaries, so per-leaf global statistics (trim thresholds, RNG
+    offsets) survive batching."""
+    if not (strat.batchable or fuse):
         return [[t] for t in misses]
     groups: List[List[LeafTask]] = []
     by_dtype: Dict[Any, List[LeafTask]] = {}
@@ -953,9 +1058,107 @@ def _leaf_tree_fold(strat, slices, base_leaves, i, seed, cfg):
     return level[0]
 
 
+def _kernel_route(strat: Strategy, cfg: Dict[str, Any]) -> Optional[str]:
+    """Which kernel-frontier flat-batch route (beyond the elementwise
+    nary one) this strategy + cfg rides, or None.
+
+    - "ties_hist": TIES with the histogram trim — the sort-free
+      threshold makes the whole pipeline batchable (3 launches/batch).
+    - "dare": DARE through the counter-based kernel RNG. Opt-in via
+      `kernel_env.dare_kernel_rng`: the sampler differs from the exact
+      path's `jax.random`, so it is deterministic and replica-
+      convergent only when every replica opts in.
+    """
+    from repro.kernels.config import kernel_env
+    if strat.name == "ties" and \
+            str(cfg.get("trim_method", "quantile")) == "histogram":
+        return "ties_hist"
+    if strat.name == "dare" and kernel_env.dare_kernel_rng:
+        return "dare"
+    return None
+
+
+def _kernel_batch(strat: Strategy, plan: MergePlan, group: List[LeafTask],
+                  leaf_raw, base_leaves, cache: EngineCache
+                  ) -> Optional[Tuple[List[Any], List[Any], bool]]:
+    """Kernel-frontier dispatch: one (or three, for histogram TIES)
+    Pallas launches for a whole group of same-dtype leaves, keeping
+    per-leaf block boundaries so per-leaf statistics survive batching.
+
+    Routes, in priority order: histogram-trim TIES; counter-RNG DARE
+    (opt-in); int8 merge-on-arrival for linear-family groups whose
+    every slice arrived quantized (dequantizes inside the tile — the
+    fp32 densified batch never exists in HBM). Returns None when no
+    route applies (caller falls back to the generic batch), else
+    (outs, auxs, True): kernel outputs are fp32-accumulated tolerance
+    outputs and are NEVER written to the byte-exact cache."""
+    cfg = plan.cfg_dict()
+    contributors = group[0].contributors
+    ki = len(contributors)
+    if not jnp.issubdtype(jnp.dtype(group[0].dtype), jnp.floating):
+        return None
+    route = _kernel_route(strat, cfg)
+    from repro.kernels import ops as kops
+    from repro.kernels.config import kernel_env
+
+    def dense_rows(t: LeafTask):
+        return jnp.stack([
+            _dense_leaf(leaf_raw(j, t), obs=cache.obs).reshape(-1)
+            for j in contributors])
+
+    def base_row(t: LeafTask, zeros: bool = False):
+        if zeros or base_leaves is None:
+            n = 1
+            for d in t.shape:
+                n *= d
+            return jnp.zeros((n,), jnp.float32)
+        return jnp.asarray(base_leaves[t.index]).reshape(-1).astype(
+            jnp.float32)
+
+    if route == "ties_hist":
+        leaves = [dense_rows(t) for t in group]
+        bases = [base_row(t) for t in group]
+        cache.note_stacked(2 * sum(int(l.nbytes) for l in leaves))
+        flats = kops.ties_batch_merge(
+            leaves, bases, float(cfg.get("trim", 0.2)))
+        kernel = "ties_hist"
+    elif route == "dare":
+        leaves = [dense_rows(t) for t in group]
+        bases = [base_row(t) for t in group]
+        cache.note_stacked(2 * sum(int(l.nbytes) for l in leaves))
+        flats = kops.dare_batch_merge(
+            leaves, bases, [plan.seed + t.index for t in group],
+            float(cfg.get("p", 0.5)))
+        kernel = "dare"
+    else:
+        # int8 merge-on-arrival: linear-family group, all slices int8
+        form = _nary_weights(strat.name, ki, cfg)
+        if form is None or not kernel_env.quantized:
+            return None
+        raw = [[leaf_raw(j, t) for j in contributors] for t in group]
+        if not all(_is_qleaf(x) for slices in raw for x in slices):
+            return None
+        weights, uses_base = form
+        q_leaves = [jnp.stack([jnp.asarray(x.q).reshape(-1)
+                               for x in slices]) for slices in raw]
+        scales = [jnp.asarray([float(x.scale) for x in slices],
+                              jnp.float32) for slices in raw]
+        bases = [base_row(t, zeros=not uses_base) for t in group]
+        cache.note_stacked(2 * sum(int(q.nbytes) for q in q_leaves))
+        flats = kops.quant_batch_merge(q_leaves, scales, bases, weights)
+        kernel = "quant_nary"
+        cache.obs.counter("engine_quant_leaves_merged_total").inc(len(group))
+    cache.stats["pallas_dispatches"] += 1
+    cache.obs.counter("kernel_dispatch_total").inc(kernel=kernel)
+    dt = jnp.dtype(group[0].dtype)
+    outs = [f.reshape(t.shape).astype(dt) for f, t in zip(flats, group)]
+    return outs, [None] * len(group), True
+
+
 def _execute_batch(strat: Strategy, plan: MergePlan, group: List[LeafTask],
                    leaf_of, base_leaves, cache: EngineCache, *,
-                   pallas: bool) -> Tuple[List[Any], List[Any], bool]:
+                   pallas: bool, leaf_raw=None
+                   ) -> Tuple[List[Any], List[Any], bool]:
     """Fused dispatch over same-dtype, same-contributor-subset
     elementwise leaves: flatten each leaf's k_i slices, concatenate
     along the element axis, apply the leaf function ONCE on [k_i, N],
@@ -965,11 +1168,16 @@ def _execute_batch(strat: Strategy, plan: MergePlan, group: List[LeafTask],
     approximate): auxs are per-leaf fold accumulator slices for
     incremental strategies (sliced from the batch accumulator —
     elementwise, so bitwise equal to per-leaf folds); approximate=True
-    means the fused Pallas route produced the outputs (fp32-accumulated,
+    means a fused Pallas route produced the outputs (fp32-accumulated,
     tolerance only) and the caller must not cache them."""
     contributors = group[0].contributors
     ki = len(contributors)
     cfg = plan.cfg_dict()
+    if pallas and leaf_raw is not None:
+        routed = _kernel_batch(strat, plan, group, leaf_raw, base_leaves,
+                               cache)
+        if routed is not None:
+            return routed
     stacked = jnp.concatenate(
         [jnp.stack([leaf_of(j, t).reshape(-1) for j in contributors])
          for t in group], axis=1)
@@ -1039,8 +1247,13 @@ def _nary_pallas_batch(strat: Strategy, stacked, b, k: int,
     weights, uses_base = form
     from repro.kernels.ops import nary_flat_merge
     base_flat = b if uses_base else jnp.zeros_like(b)
-    out = nary_flat_merge(stacked, base_flat, weights)
+    # sub-fp32 batches stream in their own dtype and upcast in-tile
+    preserve = stacked.dtype != jnp.float32 and \
+        jnp.issubdtype(stacked.dtype, jnp.floating)
+    out = nary_flat_merge(stacked, base_flat, weights,
+                          preserve_dtype=preserve)
     cache.stats["pallas_dispatches"] += 1
+    cache.obs.counter("kernel_dispatch_total").inc(kernel="nary_accum")
     return out.astype(stacked.dtype)
 
 

@@ -42,6 +42,23 @@ def pad_stacked(s: jax.Array, block: int) -> Tuple[jax.Array, int]:
     return flat, n
 
 
+def pad_stacked_raw(s: jax.Array, block: int) -> Tuple[jax.Array, int]:
+    """[k, ...] -> [k, Np] zero-padded, dtype PRESERVED.
+
+    The quantized / bf16 merge-on-arrival kernels upcast inside the
+    (k, BLOCK) tile; padding in the wire dtype keeps the fp32 copies of
+    the stacked batch out of HBM entirely (the point of those kernels).
+    """
+    k = s.shape[0]
+    flat = s.reshape(k, -1)
+    n = flat.shape[1]
+    rem = (-n) % block
+    if rem:
+        flat = jnp.concatenate(
+            [flat, jnp.zeros((k, rem), flat.dtype)], axis=1)
+    return flat, n
+
+
 def hash_uniform(idx: jax.Array, seed) -> jax.Array:
     """Deterministic uniform(0,1) floats from uint32 element indices.
 
@@ -58,4 +75,11 @@ def hash_uniform(idx: jax.Array, seed) -> jax.Array:
 
 
 def default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    """Effective interpret flag, delegated to the central `KernelEnv`.
+
+    Kept as a thin shim for callers that predate `kernels.config`; the
+    backend probe runs at most once per process (cached on the env) and
+    `REPRO_KERNEL_INTERPRET` overrides it.
+    """
+    from repro.kernels.config import kernel_env
+    return kernel_env.resolve_interpret()

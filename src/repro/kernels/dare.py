@@ -5,6 +5,15 @@ element index via a stateless uint32 hash, entirely inside the kernel —
 the k x p mask never exists in HBM (vs. the eager pipeline which
 materializes the random tensor, the mask, and the rescaled taus). One
 streaming pass: read (k, BLOCK) + base tile, write merged tile.
+
+The kernel is meta-driven so the per-leaf path and the engine's flat-
+batch dispatch share one body: each grid step reads a per-block uint32
+metadata row (seed, leaf padded length, start column within the leaf)
+and reconstructs the same `row * npad + col` global index the per-leaf
+launch would have used. Because the hash is exact uint32 arithmetic,
+flat-batch output is byte-identical to per-leaf dispatch by
+construction — a batch block at offset `start` inside its leaf draws
+exactly the mask the standalone launch drew at that offset.
 """
 from __future__ import annotations
 
@@ -17,17 +26,14 @@ from jax.experimental import pallas as pl
 from repro.kernels.common import hash_uniform
 
 
-def _dare_kernel(x_ref, base_ref, seed_ref, out_ref, *, p: float,
-                 npad: int, block: int):
+def _dare_kernel(x_ref, base_ref, meta_ref, out_ref, *, p: float):
     x = x_ref[...]                          # [k, B]
     base = base_ref[...]                    # [1, B]
-    seed = seed_ref[0, 0]
-    k = x.shape[0]
-    i = pl.program_id(0)
-    col = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 1) + \
-        jnp.uint32(i * block)
+    meta = meta_ref[...]                    # [1, 3] uint32
+    seed, npad, start = meta[0, 0], meta[0, 1], meta[0, 2]
+    col = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 1) + start
     row = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 0)
-    idx = row * jnp.uint32(npad) + col
+    idx = row * npad + col
     u = hash_uniform(idx, seed)
     keep = (u >= jnp.float32(p)).astype(jnp.float32)
     tau = (x - base) * keep * jnp.float32(1.0 / (1.0 - p))
@@ -36,21 +42,40 @@ def _dare_kernel(x_ref, base_ref, seed_ref, out_ref, *, p: float,
 
 @functools.partial(jax.jit,
                    static_argnames=("p", "block", "interpret"))
-def dare_pallas(stacked, base, seed, *, p: float = 0.5, block: int = 2048,
-                interpret: bool = True):
-    """stacked: [k, Np] fp32; base: [1, Np]; seed: uint32 [1,1]."""
+def dare_block_pallas(stacked, base, meta, *, p: float = 0.5,
+                      block: int = 2048, interpret: bool = True):
+    """Meta-driven DARE: stacked [k, Np] fp32; base [1, Np]; meta
+    [nblocks, 3] uint32 rows of (seed, leaf_npad, start_col)."""
     k, npad = stacked.shape
     grid = (npad // block,)
-    kern = functools.partial(_dare_kernel, p=p, npad=npad, block=block)
+    kern = functools.partial(_dare_kernel, p=p)
     return pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
             pl.BlockSpec((k, block), lambda i: (0, i)),
             pl.BlockSpec((1, block), lambda i: (0, i)),
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 3), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, npad), jnp.float32),
         interpret=interpret,
-    )(stacked, base, seed)
+    )(stacked, base, meta)
+
+
+def leaf_meta(seed, npad: int, block: int) -> jax.Array:
+    """Per-block (seed, npad, start) rows for one standalone leaf."""
+    nb = npad // block
+    seed_v = jnp.broadcast_to(
+        jnp.asarray(seed, jnp.uint32).reshape(-1)[:1], (nb,))
+    starts = jnp.arange(nb, dtype=jnp.uint32) * jnp.uint32(block)
+    return jnp.stack(
+        [seed_v, jnp.full((nb,), npad, jnp.uint32), starts], axis=1)
+
+
+def dare_pallas(stacked, base, seed, *, p: float = 0.5, block: int = 2048,
+                interpret: bool = True):
+    """stacked: [k, Np] fp32; base: [1, Np]; seed: uint32 [1,1]."""
+    meta = leaf_meta(seed, stacked.shape[1], block)
+    return dare_block_pallas(stacked, base, meta, p=p, block=block,
+                             interpret=interpret)

@@ -1,0 +1,215 @@
+"""Two-pass histogram trim-quantile + flat-batch TIES merge kernels.
+
+The per-leaf `ops.ties_merge` path computed its trim threshold with a
+sort (`jnp.quantile`) — a global operation that blocks batching: every
+leaf needed its own sort over k x p elements before the fused merge
+kernel could launch, so TIES never joined the engine's one-launch-per-
+batch flat dispatch. This module replaces the sort with the catalog's
+histogram trim (`strategies.catalog._hist_quantile` math, bit-for-bit):
+
+  pass A  per-block max|tau| -> segment-max        (exact: max is
+          associative, so blockwise = global bitwise)
+  pass B  per-block |tau| histograms -> segment-sum (exact: integer
+          counts in fp32, order-free below 2^24 per bucket)
+  resolve cdf/argmax threshold per (leaf, contribution) — O(L*k*bins)
+          scalars, done in plain jnp outside the kernels
+  pass C  fused trim/sign-elect/agreeing-mean merge (`ties.ties_tile`)
+          with per-block thresholds
+
+Batch layout: each leaf is zero-padded to a multiple of BLOCK *before*
+concatenation, so every (k, BLOCK) tile belongs to exactly one leaf and
+per-leaf scalars (amax, thresholds, valid counts) ride in per-block
+metadata rows selected by the BlockSpec index map — no gather inside
+the kernel. Three streaming passes over the stacked bytes total,
+versus the eager pipeline's one-pass-per-op chain (see
+`benchmarks/bench_kernels.py` for the exact accounting the CI gate
+enforces).
+
+Byte-identity contract: for every leaf, the flat-batch output equals
+`kernels.ref.ties_hist_ref` (the per-leaf eager oracle) bitwise, for
+leaves up to 2^24 elements per histogram bucket (beyond that the eager
+fp32 scatter-add itself saturates).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ties import ties_tile
+
+# VMEM budget for the one-hot expansion inside the histogram kernel:
+# the [k, CHUNK, bins] fp32 intermediate is the largest tile the pass
+# materializes; keep it under ~4 MiB by shrinking the column chunk.
+_ONEHOT_VMEM_BYTES = 4 * 1024 * 1024
+
+
+def _hist_chunk(k: int, bins: int, block: int) -> int:
+    chunk = block
+    while chunk > 8 and k * chunk * bins * 4 > _ONEHOT_VMEM_BYTES \
+            and chunk % 2 == 0:
+        chunk //= 2
+    return chunk
+
+
+def _amax_kernel(x_ref, base_ref, out_ref):
+    x = x_ref[...]                        # [k, B] fp32
+    base = base_ref[...]                  # [1, B]
+    out_ref[...] = jnp.max(jnp.abs(x - base), axis=1).reshape(1, -1)
+
+
+def _hist_kernel(x_ref, base_ref, amax_ref, valid_ref, out_ref, *,
+                 bins: int, chunk: int):
+    """Per-block |tau| histogram, padding-masked, one-hot in chunks."""
+    x = x_ref[...]                        # [k, B] fp32
+    base = base_ref[...]                  # [1, B]
+    amax = amax_ref[...]                  # [1, k] (this block's leaf)
+    vb = valid_ref[0, 0]                  # int32 valid cols in block
+    k, b = x.shape
+    a = jnp.abs(x - base)
+    # catalog._hist_quantile binning, verbatim: (a / amax * bins) as i32
+    idx = jnp.clip((a / amax.reshape(k, 1) * bins).astype(jnp.int32),
+                   0, bins - 1)
+    colmask = jax.lax.broadcasted_iota(jnp.int32, (1, b), 1) < vb
+
+    def body(c, acc):
+        sl = jax.lax.dynamic_slice(idx, (0, c * chunk), (k, chunk))
+        ms = jax.lax.dynamic_slice(colmask, (0, c * chunk), (1, chunk))
+        onehot = (sl[:, :, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (1, 1, bins), 2)).astype(jnp.float32)
+        onehot = onehot * ms[:, :, None].astype(jnp.float32)
+        return acc + jnp.sum(onehot, axis=1)
+
+    acc = jax.lax.fori_loop(0, b // chunk, body,
+                            jnp.zeros((k, bins), jnp.float32))
+    out_ref[...] = acc.reshape(1, k * bins)
+
+
+def _ties_block_kernel(x_ref, base_ref, thr_ref, out_ref):
+    x = x_ref[...]                        # [k, B] fp32
+    base = base_ref[...]                  # [1, B]
+    thr = thr_ref[...].reshape(-1, 1)     # [1, k] meta row -> [k, 1]
+    out_ref[...] = ties_tile(x, base, thr)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def block_amax_pallas(stacked, base, *, block: int, interpret: bool):
+    """[k, Np] fp32 -> per-block max|x - base|, shape [nblocks, k]."""
+    k, npad = stacked.shape
+    nb = npad // block
+    return pl.pallas_call(
+        _amax_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((k, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, k), jnp.float32),
+        interpret=interpret,
+    )(stacked, base)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bins", "block", "interpret"))
+def block_hist_pallas(stacked, base, amax_meta, valid, *, bins: int,
+                      block: int, interpret: bool):
+    """Per-block histograms: [nblocks, k * bins] fp32 integer counts."""
+    k, npad = stacked.shape
+    nb = npad // block
+    chunk = _hist_chunk(k, bins, block)
+    kern = functools.partial(_hist_kernel, bins=bins, chunk=chunk)
+    return pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((k, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k * bins), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, k * bins), jnp.float32),
+        interpret=interpret,
+    )(stacked, base, amax_meta, valid)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def ties_block_pallas(stacked, base, thr_meta, *, block: int,
+                      interpret: bool):
+    """Fused TIES merge with per-block [nblocks, k] thresholds."""
+    k, npad = stacked.shape
+    nb = npad // block
+    return pl.pallas_call(
+        _ties_block_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((k, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, npad), jnp.float32),
+        interpret=interpret,
+    )(stacked, base, thr_meta)
+
+
+def hist_thresholds(counts, lengths, amax, trim: float, bins: int):
+    """Resolve per-(leaf, contribution) trim thresholds from histograms.
+
+    `counts`: [L, k, bins] fp32 integer counts; `lengths`: [L] true
+    (unpadded) leaf lengths; `amax`: [L, k] (already + 1e-12). The cdf /
+    argmax / scale sequence is `catalog._hist_quantile` verbatim so the
+    resolved thresholds match the eager oracle bitwise.
+    """
+    cdf = jnp.cumsum(counts, axis=2) / \
+        lengths.astype(jnp.float32)[:, None, None]
+    bucket = jnp.argmax(cdf >= trim, axis=2)             # first crossing
+    return (bucket.astype(jnp.float32) / bins) * amax    # [L, k]
+
+
+def ties_hist_batch(stacked, base, leaf_id, valid, lengths, *,
+                    trim: float, bins: int, block: int,
+                    interpret: bool) -> jax.Array:
+    """Histogram-trim TIES over a block-aligned flat batch, 3 passes.
+
+    `stacked`: [k, Np] fp32, L leaves each padded to a block multiple
+    then concatenated; `base`: [1, Np]; `leaf_id`: [nblocks] int32 leaf
+    index per block; `valid`: [nblocks, 1] int32 valid cols per block;
+    `lengths`: [L] int32 true leaf lengths. Returns [1, Np] fp32.
+    """
+    nleaf = int(lengths.shape[0])
+    bmax = block_amax_pallas(stacked, base, block=block,
+                             interpret=interpret)         # [nb, k]
+    amax = jax.ops.segment_max(bmax, leaf_id, num_segments=nleaf,
+                               indices_are_sorted=True) + 1e-12  # [L, k]
+    amax_meta = amax[leaf_id]                             # [nb, k]
+    counts_b = block_hist_pallas(stacked, base, amax_meta, valid,
+                                 bins=bins, block=block,
+                                 interpret=interpret)     # [nb, k*bins]
+    counts = jax.ops.segment_sum(
+        counts_b, leaf_id, num_segments=nleaf,
+        indices_are_sorted=True).reshape(nleaf, stacked.shape[0], bins)
+    thr = hist_thresholds(counts, lengths, amax, trim, bins)  # [L, k]
+    return ties_block_pallas(stacked, base, thr[leaf_id],
+                             block=block, interpret=interpret)
+
+
+def batch_layout(lengths, block: int) -> Tuple[jax.Array, jax.Array, int]:
+    """Per-block metadata for a block-aligned concatenation of leaves.
+
+    `lengths`: python ints, true element count per leaf. Returns
+    (leaf_id [nb] int32, valid [nb, 1] int32, total padded length).
+    """
+    leaf_id, valid = [], []
+    for li, n in enumerate(lengths):
+        nb = max(1, -(-n // block))
+        for b in range(nb):
+            leaf_id.append(li)
+            valid.append(min(block, n - b * block))
+    return (jnp.asarray(leaf_id, jnp.int32),
+            jnp.asarray(valid, jnp.int32).reshape(-1, 1),
+            len(leaf_id) * block)

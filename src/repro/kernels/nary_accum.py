@@ -22,7 +22,9 @@ from jax.experimental import pallas as pl
 
 
 def _nary_kernel(x_ref, base_ref, w_ref, out_ref):
-    x = x_ref[...]                        # [k, B]
+    # in-kernel upcast: bf16 (and other sub-fp32) inputs stream through
+    # HBM in their wire dtype and widen in VMEM — fp32 is a no-op cast
+    x = x_ref[...].astype(jnp.float32)    # [k, B]
     base = base_ref[...]                  # [1, B]
     w = w_ref[...]                        # [k, 1]
     acc = jnp.sum(w * (x - base), axis=0, keepdims=True)

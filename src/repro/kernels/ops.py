@@ -1,23 +1,47 @@
 """Jit'd public wrappers over the Pallas merge kernels.
 
 These operate on contribution pytrees (per-leaf), handle flatten/pad/
-unpad, compute the global pieces that need a sort (TIES trim quantiles)
-or a reduction epilogue (SLERP scalars), and dispatch to the kernels.
-interpret=True is chosen automatically off-TPU.
+unpad, compute the global pieces that need a reduction epilogue (SLERP
+scalars, histogram trim thresholds), and dispatch to the kernels.
+
+Defaults come from `kernels.config.kernel_env` — block size, interpret
+mode (backend probed once, `REPRO_KERNEL_INTERPRET` overrides), and
+histogram bins — instead of per-call backend probing.
+
+The `*_batch_merge` entry points are the merge engine's kernel-frontier
+dispatch: many same-dtype leaves, each zero-padded to a block multiple
+and concatenated into one [k, N] flat batch so every (k, BLOCK) tile
+belongs to exactly one leaf, merged in one kernel launch (3 launches
+for histogram TIES) per batch instead of one per tensor.
 """
 from __future__ import annotations
 
-from typing import Any, List, Optional
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import DEFAULT_BLOCK, default_interpret, \
-    pad_flat, pad_stacked
-from repro.kernels.dare import dare_pallas
+from repro.kernels.common import pad_flat, pad_stacked, pad_stacked_raw
+from repro.kernels.config import kernel_env
+from repro.kernels.dare import dare_block_pallas, dare_pallas, leaf_meta
+from repro.kernels.histogram import batch_layout, ties_hist_batch
 from repro.kernels.nary_accum import nary_accum_pallas
+from repro.kernels.quant import quant_nary_pallas
 from repro.kernels.slerp import slerp_pallas
 from repro.kernels.ties import ties_pallas
+
+# Backwards-compatible re-export: pre-KernelEnv callers imported the
+# block constant from here via kernels.common.
+DEFAULT_BLOCK = 2048
+
+
+def _defaults(block: Optional[int],
+              interpret: Optional[bool]) -> Tuple[int, bool]:
+    if block is None:
+        block = kernel_env.block
+    if interpret is None:
+        interpret = kernel_env.resolve_interpret()
+    return block, interpret
 
 
 def _per_leaf(contribs: List[Any], base: Optional[Any]):
@@ -31,14 +55,145 @@ def _per_leaf(contribs: List[Any], base: Optional[Any]):
 
 
 def _unpad(out, n, shape, dtype):
-    return out.reshape(-1)[:n].reshape(shape).astype(dtype)
+    dt = jnp.dtype(dtype)
+    if not jnp.issubdtype(dt, jnp.floating):
+        # fp32 kernel output silently truncates toward zero under an
+        # integer astype — surface the programming error instead
+        raise TypeError(
+            f"kernel output cannot be cast to non-float dtype {dt.name}: "
+            "merge kernels accumulate in fp32; integer leaves must take "
+            "the eager path")
+    return out.reshape(-1)[:n].reshape(shape).astype(dt)
+
+
+# ------------------------------------------------------------ flat batch --
+
+
+def _flat_batch(leaves: Sequence[jax.Array], base_leaves: Sequence[jax.Array],
+                block: int, *, raw: bool = False):
+    """Pad each leaf to a block multiple and concatenate.
+
+    `leaves[j]`: [k, n_j] (same k); `base_leaves[j]`: [n_j]. Returns
+    (stacked [k, Np], base [1, Np], lengths, leaf_id, valid, offsets)
+    where `offsets[j]` is leaf j's padded start column.
+    """
+    pad_s = pad_stacked_raw if raw else pad_stacked
+    parts, bparts, lengths, offsets = [], [], [], []
+    off = 0
+    for s, b in zip(leaves, base_leaves):
+        sp, n = pad_s(s, block)
+        bp, _ = pad_flat(b, block)
+        parts.append(sp)
+        bparts.append(bp)
+        lengths.append(int(n))
+        offsets.append(off)
+        off += sp.shape[1]
+    stacked = jnp.concatenate(parts, axis=1)
+    base = jnp.concatenate(bparts)[None, :]
+    leaf_id, valid, total = batch_layout(lengths, block)
+    assert total == stacked.shape[1]
+    return stacked, base, lengths, leaf_id, valid, offsets
+
+
+def _split_flat(out, lengths: List[int], offsets: List[int],
+                block: int) -> List[jax.Array]:
+    flat = out.reshape(-1)
+    return [flat[off:off + n] for off, n in zip(offsets, lengths)]
+
+
+def ties_batch_merge(leaves: Sequence[jax.Array],
+                     base_leaves: Sequence[jax.Array],
+                     trim: float = 0.2, *, bins: Optional[int] = None,
+                     block: Optional[int] = None,
+                     interpret: Optional[bool] = None) -> List[jax.Array]:
+    """Histogram-trim TIES over many leaves in one flat-batch dispatch.
+
+    3 kernel launches (amax, histogram, fused merge) for the whole
+    batch; byte-identical per leaf to `ref.ties_hist_ref`. Returns
+    unpadded fp32 1-D arrays, one per leaf.
+    """
+    block, interpret = _defaults(block, interpret)
+    bins = kernel_env.hist_bins if bins is None else bins
+    stacked, base, lengths, leaf_id, valid, offsets = _flat_batch(
+        leaves, base_leaves, block)
+    out = ties_hist_batch(
+        stacked, base, leaf_id, valid,
+        jnp.asarray(lengths, jnp.int32),
+        trim=trim, bins=bins, block=block, interpret=interpret)
+    return _split_flat(out, lengths, offsets, block)
+
+
+def dare_batch_merge(leaves: Sequence[jax.Array],
+                     base_leaves: Sequence[jax.Array],
+                     seeds: Sequence[int], p: float = 0.5, *,
+                     block: Optional[int] = None,
+                     interpret: Optional[bool] = None) -> List[jax.Array]:
+    """Flat-batch DARE: one launch for many leaves, byte-identical to
+    per-leaf `dare_pallas` with the same per-leaf seed.
+
+    `seeds[j]` is leaf j's uint32 RNG seed (the engine threads the
+    plan's global leaf index into it so replicas agree).
+    """
+    block, interpret = _defaults(block, interpret)
+    stacked, base, lengths, leaf_id, valid, offsets = _flat_batch(
+        leaves, base_leaves, block)
+    metas = [leaf_meta(jnp.uint32(s), -(-ln // block) * block, block)
+             for s, ln in zip(seeds, lengths)]
+    meta = jnp.concatenate(metas, axis=0)
+    out = dare_block_pallas(stacked, base, meta, p=p, block=block,
+                            interpret=interpret)
+    return _split_flat(out, lengths, offsets, block)
+
+
+def quant_batch_merge(q_leaves: Sequence[jax.Array],
+                      scales: Sequence[jax.Array],
+                      base_leaves: Sequence[jax.Array],
+                      weights, *, block: Optional[int] = None,
+                      interpret: Optional[bool] = None) -> List[jax.Array]:
+    """int8 merge-on-arrival over many leaves in one launch.
+
+    `q_leaves[j]`: [k, n_j] int8 wire payloads; `scales[j]`: [k] fp32
+    per-contribution dequant scales for leaf j; `weights`: [k] n-ary
+    scalars. Dequantization happens inside the tile — no fp32 copy of
+    the stacked batch ever reaches HBM. Byte-identical per leaf to
+    `ref.quant_nary_ref`.
+    """
+    block, interpret = _defaults(block, interpret)
+    stacked, base, lengths, leaf_id, valid, offsets = _flat_batch(
+        q_leaves, base_leaves, block, raw=True)
+    scale_rows = jnp.stack([jnp.asarray(s, jnp.float32) for s in scales])
+    scale_meta = scale_rows[leaf_id]                       # [nb, k]
+    w = jnp.asarray(weights, jnp.float32).reshape(-1, 1)
+    out = quant_nary_pallas(stacked, base, scale_meta, w, block=block,
+                            interpret=interpret)
+    return _split_flat(out, lengths, offsets, block)
+
+
+# ------------------------------------------------------------- per-leaf --
 
 
 def ties_merge(contribs, base=None, trim: float = 0.2, *,
-               block: int = DEFAULT_BLOCK, interpret: Optional[bool] = None):
-    interpret = default_interpret() if interpret is None else interpret
+               trim_method: str = "histogram",
+               block: Optional[int] = None,
+               interpret: Optional[bool] = None):
+    """Fused TIES. `trim_method="histogram"` (default) resolves the trim
+    threshold with the sort-free two-pass histogram kernel — the same
+    path the engine's flat-batch dispatch uses; `"quantile"` keeps the
+    exact sort-based threshold (one `jnp.quantile` per leaf, blocks
+    batching)."""
+    block, interpret = _defaults(block, interpret)
     ls, lb, treedef = _per_leaf(contribs, base)
     outs = []
+    if trim_method == "histogram":
+        flats = [s.reshape(s.shape[0], -1) for s in ls]
+        merged = ties_batch_merge(
+            flats, [b.reshape(-1) for b in lb], trim,
+            block=block, interpret=interpret)
+        for m, s, b in zip(merged, ls, lb):
+            outs.append(m.reshape(b.shape).astype(s.dtype))
+        return jax.tree_util.tree_unflatten(treedef, outs)
+    if trim_method != "quantile":
+        raise ValueError(f"unknown trim_method {trim_method!r}")
     for s, b in zip(ls, lb):
         sp, n = pad_stacked(s, block)
         bp, _ = pad_flat(b, block)
@@ -54,8 +209,9 @@ def ties_merge(contribs, base=None, trim: float = 0.2, *,
 
 
 def dare_merge(contribs, base=None, seed: int = 0, p: float = 0.5, *,
-               block: int = DEFAULT_BLOCK, interpret: Optional[bool] = None):
-    interpret = default_interpret() if interpret is None else interpret
+               block: Optional[int] = None,
+               interpret: Optional[bool] = None):
+    block, interpret = _defaults(block, interpret)
     ls, lb, treedef = _per_leaf(contribs, base)
     outs = []
     for i, (s, b) in enumerate(zip(ls, lb)):
@@ -69,8 +225,9 @@ def dare_merge(contribs, base=None, seed: int = 0, p: float = 0.5, *,
 
 
 def nary_flat_merge(stacked_flat, base_flat, weights, *,
-                    block: int = DEFAULT_BLOCK,
-                    interpret: Optional[bool] = None):
+                    block: Optional[int] = None,
+                    interpret: Optional[bool] = None,
+                    preserve_dtype: bool = False):
     """One fused nary_accum dispatch over an already-flattened batch.
 
     `stacked_flat`: [k, N] — many same-dtype leaves' slices concatenated
@@ -78,9 +235,15 @@ def nary_flat_merge(stacked_flat, base_flat, weights, *,
     `base_flat`: [N]; `weights`: [k] scalars. Returns fp32 [N]
     (out = base + sum_i w_i (x_i - base)), one HBM pass for the whole
     batch instead of one kernel launch per leaf.
+
+    `preserve_dtype=True` streams sub-fp32 inputs (bf16/fp16) through
+    HBM in their own dtype and upcasts inside the tile — half the read
+    traffic, identical fp32 result (the kernel widens before any
+    arithmetic, exactly as the eager stack-then-cast would).
     """
-    interpret = default_interpret() if interpret is None else interpret
-    sp, n = pad_stacked(stacked_flat, block)
+    block, interpret = _defaults(block, interpret)
+    pad_s = pad_stacked_raw if preserve_dtype else pad_stacked
+    sp, n = pad_s(stacked_flat, block)
     bp, _ = pad_flat(base_flat, block)
     w = jnp.asarray(weights, jnp.float32).reshape(-1, 1)
     out = nary_accum_pallas(sp, bp[None, :], w, block=block,
@@ -89,10 +252,10 @@ def nary_flat_merge(stacked_flat, base_flat, weights, *,
 
 
 def weighted_merge(contribs, weights, base=None, *,
-                   block: int = DEFAULT_BLOCK,
+                   block: Optional[int] = None,
                    interpret: Optional[bool] = None):
     """out = base + sum_i w_i (x_i - base). weights: [k] scalars."""
-    interpret = default_interpret() if interpret is None else interpret
+    block, interpret = _defaults(block, interpret)
     ls, lb, treedef = _per_leaf(contribs, base)
     w = jnp.asarray(weights, jnp.float32).reshape(-1, 1)
     outs = []
@@ -116,9 +279,9 @@ def task_arithmetic_merge(contribs, base, lam: float = 1.0, **kw):
     return weighted_merge(contribs, jnp.full((k,), lam), base, **kw)
 
 
-def slerp_merge(a, b_tree, t: float = 0.5, *, block: int = DEFAULT_BLOCK,
+def slerp_merge(a, b_tree, t: float = 0.5, *, block: Optional[int] = None,
                 interpret: Optional[bool] = None):
-    interpret = default_interpret() if interpret is None else interpret
+    block, interpret = _defaults(block, interpret)
     la, treedef = jax.tree_util.tree_flatten(a)
     lb = treedef.flatten_up_to(b_tree)
     outs = []

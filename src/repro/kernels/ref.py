@@ -40,6 +40,43 @@ def nary_accum_ref(stacked, base, weights):
     return base + jnp.sum(weights * (stacked - base), axis=0, keepdims=True)
 
 
+def hist_threshold_ref(stacked, base, trim=0.2, bins=512):
+    """Per-contribution trim thresholds, `strategies.catalog
+    ._hist_quantile` verbatim (same op order, fp32). Exact regardless
+    of layout: the max is associative and the counts are integers in
+    fp32, so the flat-batch kernel's per-block passes must reproduce
+    these bits."""
+    tau = stacked - base                                  # [k, n] fp32
+    a = jnp.abs(tau)
+    amax = jnp.max(a, axis=1, keepdims=True) + 1e-12
+    idx = jnp.clip((a / amax * bins).astype(jnp.int32), 0, bins - 1)
+    counts = jax.vmap(
+        lambda r: jnp.zeros((bins,), jnp.float32).at[r].add(1.0))(idx)
+    cdf = jnp.cumsum(counts, axis=1) / jnp.float32(a.shape[1])
+    bucket = jnp.argmax(cdf >= trim, axis=1)              # first crossing
+    return (bucket[:, None].astype(jnp.float32) / bins) * amax
+
+
+def ties_hist_ref(stacked, base, trim=0.2, bins=512):
+    """Per-leaf eager oracle for histogram-trim TIES:
+    `hist_threshold_ref` then `ties_ref`.
+
+    Byte-identity caveat: XLA CPU's axis-0 reduction order can shift by
+    an ulp at sub-SIMD tail widths (observed at k=16, n=7), so bitwise
+    comparisons against the kernel should evaluate the MERGE half on
+    the same block-padded layout the kernel sees — thresholds from the
+    unpadded row (exact either way), `ties_ref` on the padded stack."""
+    return ties_ref(stacked, base,
+                    hist_threshold_ref(stacked, base, trim, bins))
+
+
+def quant_nary_ref(q_stacked, scales, base, weights):
+    """Dequantize-then-merge oracle: `decompress_tree`'s exact op
+    (q.astype(fp32) * scale) followed by `nary_accum_ref`."""
+    x = q_stacked.astype(jnp.float32) * scales.reshape(-1, 1)
+    return nary_accum_ref(x, base, weights)
+
+
 def slerp_ref(u, v, t=0.5):
     eps = jnp.float32(1e-12)
     dot = jnp.sum(u * v)

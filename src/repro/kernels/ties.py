@@ -16,10 +16,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _ties_kernel(x_ref, base_ref, thr_ref, out_ref):
-    x = x_ref[...]                       # [k, B] fp32
-    base = base_ref[...]                 # [1, B]
-    thr = thr_ref[...]                   # [k, 1]
+def ties_tile(x, base, thr):
+    """The fused trim -> sign-elect -> agreeing-mean arithmetic on one
+    (k, B) tile. Shared by the per-leaf kernel and the flat-batch
+    histogram-trim kernel (`kernels.histogram`) so both paths run the
+    byte-identical fp32 op sequence."""
     tau = x - base
     mask = (jnp.abs(tau) >= thr).astype(jnp.float32)
     trimmed = tau * mask
@@ -28,7 +29,14 @@ def _ties_kernel(x_ref, base_ref, thr_ref, out_ref):
         jnp.float32)
     cnt = jnp.maximum(jnp.sum(agree, axis=0, keepdims=True), 1.0)
     merged = jnp.sum(trimmed * agree, axis=0, keepdims=True) / cnt
-    out_ref[...] = base + merged
+    return base + merged
+
+
+def _ties_kernel(x_ref, base_ref, thr_ref, out_ref):
+    x = x_ref[...]                       # [k, B] fp32
+    base = base_ref[...]                 # [1, B]
+    thr = thr_ref[...]                   # [k, 1]
+    out_ref[...] = ties_tile(x, base, thr)
 
 
 @functools.partial(jax.jit,

@@ -209,6 +209,7 @@ class SyncNode:
                  placement: Optional[Placement] = None,
                  chunk_timeout: Optional[float] = None,
                  max_fetch_timeouts: int = 8,
+                 keep_quantized: bool = False,
                  obs: Optional[MetricsRegistry] = None):
         if max_frame_bytes <= CHUNK_ENVELOPE:
             raise ValueError(f"max_frame_bytes must exceed {CHUNK_ENVELOPE}")
@@ -220,6 +221,12 @@ class SyncNode:
         self.storage = None
         self._state = state or CRDTMergeState()
         self.compress_blobs = compress_blobs
+        # merge-on-arrival opt-in: keep arriving int8 payloads
+        # (CompressedTree) in the store un-densified — the merge engine
+        # plans against their announced/derived metadata and merges the
+        # int8 bytes directly in the quantized Pallas kernel. Off by
+        # default: the legacy store holds dequantized tensors.
+        self.keep_quantized = keep_quantized
         self.max_frame_bytes = max_frame_bytes
         self.chunk_window = max(1, chunk_window)
         # sharded store: when set, this node is responsible only for the
@@ -580,7 +587,8 @@ class SyncNode:
 
     def _dispatch(self, msg: Message) -> List[Reply]:
         if isinstance(msg, StateMsg):
-            self.state = self.state.merge(msg_to_state(msg))
+            self.state = self.state.merge(
+                msg_to_state(msg, keep_quantized=self.keep_quantized))
             self.merge_calls += 1
             self._gc_partials()
             return []
@@ -753,13 +761,12 @@ class SyncNode:
                     # the requester's planner can key per-leaf subsets —
                     # and skip the fetch entirely — before any chunk
                     # arrives. Leaf refs describe the wire-format
-                    # payload, i.e. what the receiver's store will hold.
-                    wp = payload
-                    if self.compress_blobs:
-                        from repro.core.compression import decompress_tree
-                        wp = decompress_tree(wp)
+                    # payload, i.e. what the receiver's store will hold;
+                    # leaf_refs dequantizes CompressedTree leaves one at
+                    # a time for digesting and carries each int8 leaf's
+                    # scale so the planner can merge-on-arrival.
                     sparse_entries.append(
-                        SparseManifestEntry(me, leaf_refs(wp)))
+                        SparseManifestEntry(me, leaf_refs(payload)))
                     self.stats["sparse_manifests_sent"] += 1
                 else:
                     entries.append(me)
@@ -787,6 +794,7 @@ class SyncNode:
             if eid not in store:
                 store[eid] = (decompress_tree(payload)
                               if isinstance(payload, CompressedTree)
+                              and not self.keep_quantized
                               else payload)
         self.stats["blobs_received"] += len(msg.payloads)
         self.state = CRDTMergeState(self.state.adds, self.state.removes,
@@ -821,7 +829,8 @@ class SyncNode:
                              [l.path for l in e.leaves],
                              [l.digest for l in e.leaves],
                              [l.shape for l in e.leaves],
-                             [l.dtype for l in e.leaves])
+                             [l.dtype for l in e.leaves],
+                             scales=[l.scale for l in e.leaves])
         self.stats["sparse_manifests_received"] += len(msg.entries)
         return self._on_blob_manifest(
             BlobManifest(msg.sender, msg.sid,
@@ -1009,7 +1018,7 @@ class SyncNode:
             # itself was bogus; drop it all and refetch from scratch
             self.stats["blob_decode_error"] += 1
             return
-        if isinstance(payload, CompressedTree):
+        if isinstance(payload, CompressedTree) and not self.keep_quantized:
             payload = decompress_tree(payload)
         if eid not in self.state.store:
             store = dict(self.state.store)

@@ -309,11 +309,21 @@ class LeafRef:
     path, `tensor_digest`, dtype name, shape. A SparseManifest full of
     these lets the receiver plan per-leaf contribution subsets — and
     complete warm or fold-resumable resolves — before (or without)
-    fetching a single payload chunk."""
+    fetching a single payload chunk.
+
+    `scale` announces that the leaf's payload travels as symmetric int8
+    (`CompressedLeaf`) with this fp32 dequantization scale; zero-point
+    is identically 0 by construction (the codec is symmetric), so the
+    scale alone fully determines dequantization. The digest still
+    describes the DEQUANTIZED tensor — content identity is defined on
+    wire-format values — which is what lets a receiver plan (and the
+    merge-on-arrival kernel execute) against the int8 bytes without
+    ever densifying."""
     path: str
     digest: bytes                  # 32B tensor_digest
     dtype: str
     shape: Tuple[int, ...]
+    scale: Optional[float] = None  # int8 dequant scale; None = dense
 
 
 @dataclass(frozen=True)
@@ -887,6 +897,12 @@ def _enc_sparse_manifest(buf: bytearray, m: SparseManifest) -> None:
             _p_str(buf, l.path)
             buf += l.digest
             _enc_tensor_header(buf, l.dtype, tuple(l.shape))
+            # quantization trailer: u8 flag, then fp32 scale if set
+            if l.scale is None:
+                buf.append(0)
+            else:
+                buf.append(1)
+                buf += struct.pack("<f", float(l.scale))
 
 
 def _dec_sparse_manifest(r: _Reader) -> SparseManifest:
@@ -900,7 +916,12 @@ def _dec_sparse_manifest(r: _Reader) -> SparseManifest:
             path = r.str_()
             digest = r.take(DIGEST_LEN)
             dtype, shape = _dec_tensor_header(r)
-            leaves.append(LeafRef(path, digest, dtype, shape))
+            flag = r.take(1)[0]
+            if flag not in (0, 1):
+                raise WireError(f"bad leaf-ref scale flag {flag}")
+            scale = (struct.unpack("<f", r.take(4))[0] if flag
+                     else None)
+            leaves.append(LeafRef(path, digest, dtype, shape, scale))
         entries.append(SparseManifestEntry(
             ManifestEntry(eid, csize, total, digests), tuple(leaves)))
     return SparseManifest(sender, sid, tuple(entries))
@@ -1084,14 +1105,33 @@ def manifest_entry(eid: str, blob: bytes, chunk_size: int) -> ManifestEntry:
 
 def leaf_refs(payload: Any) -> Tuple[LeafRef, ...]:
     """Per-leaf planner refs of a payload pytree, sorted by path (the
-    canonical coverage order)."""
+    canonical coverage order).
+
+    Quantized payloads (`CompressedTree`) produce scale-carrying refs:
+    digests are computed on a transient per-leaf dequantization (one
+    leaf live at a time — the full fp32 tree is never materialized),
+    and the announced dtype/shape describe the dequantized tensor the
+    receiver's planner will key against."""
     import jax
     from repro.core.hashing import tensor_digest
-    flat, _ = jax.tree_util.tree_flatten_with_path(payload)
-    refs = [LeafRef(jax.tree_util.keystr(p), tensor_digest(leaf),
-                    str(np.asarray(leaf).dtype),
-                    tuple(np.asarray(leaf).shape))
-            for p, leaf in flat]
+    if isinstance(payload, CompressedTree):
+        payload = compressed_tree_to_structure(payload)
+    is_q = lambda x: isinstance(x, CompressedLeaf)  # noqa: E731
+    flat, _ = jax.tree_util.tree_flatten_with_path(payload, is_leaf=is_q)
+    refs = []
+    for p, leaf in flat:
+        if is_q(leaf):
+            dense = np.asarray(
+                (leaf.q.astype(np.float32) * leaf.scale).reshape(
+                    leaf.shape), leaf.dtype)
+            refs.append(LeafRef(jax.tree_util.keystr(p),
+                                tensor_digest(dense), str(dense.dtype),
+                                tuple(dense.shape), float(leaf.scale)))
+        else:
+            refs.append(LeafRef(jax.tree_util.keystr(p),
+                                tensor_digest(leaf),
+                                str(np.asarray(leaf).dtype),
+                                tuple(np.asarray(leaf).shape)))
     return tuple(sorted(refs, key=lambda r: r.path))
 
 
@@ -1113,12 +1153,21 @@ def state_to_msg(state: CRDTMergeState, sender: str) -> StateMsg:
                     dict(state.store))
 
 
-def msg_to_state(msg: StateMsg) -> CRDTMergeState:
-    # Compressed blobs decompress on arrival: the store always holds the
-    # dequantized wire-format tensors (content identity, Assumption 11).
-    store = {eid: (decompress_tree(p) if isinstance(p, CompressedTree)
-                   else p)
-             for eid, p in msg.payloads.items()}
+def msg_to_state(msg: StateMsg, *,
+                 keep_quantized: bool = False) -> CRDTMergeState:
+    # Compressed blobs decompress on arrival by default: the store then
+    # holds the dequantized wire-format tensors (content identity,
+    # Assumption 11). `keep_quantized=True` (SyncNode opt-in) stores the
+    # CompressedTree as-is — the merge engine plans and merges directly
+    # from the int8 payloads (merge-on-arrival), and content identity is
+    # unchanged because digests are always computed on dequantized
+    # values.
+    if keep_quantized:
+        store = dict(msg.payloads)
+    else:
+        store = {eid: (decompress_tree(p) if isinstance(p, CompressedTree)
+                       else p)
+                 for eid, p in msg.payloads.items()}
     return CRDTMergeState(msg.adds, msg.removes, msg.vv, store)
 
 

@@ -25,15 +25,31 @@ def _contribs(k, shape, dtype, seed=0):
 @pytest.mark.parametrize("dtype", DTYPES)
 @pytest.mark.parametrize("k", KS)
 def test_ties_kernel_sweep(shape, dtype, k):
+    """Default ties_merge (histogram trim) against the catalog's
+    histogram variant; both resolve the threshold from the same
+    512-bin estimator, so fp32 stays at kernel tolerance."""
     contribs, base = _contribs(k, shape, dtype)
     out = ops.ties_merge(contribs, base, trim=0.2, interpret=True)
     cat = get_strategy("ties")(
         [c.astype(jnp.float32) for c in contribs],
-        base=base.astype(jnp.float32))
+        base=base.astype(jnp.float32), trim_method="histogram")
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(cat, np.float32),
                                rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
                                atol=2e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("k", KS)
+def test_ties_kernel_quantile_path(shape, k):
+    """trim_method="quantile" keeps the exact sort-based threshold and
+    matches the catalog default bit-for-tolerance."""
+    contribs, base = _contribs(k, shape, jnp.float32)
+    out = ops.ties_merge(contribs, base, trim=0.2,
+                         trim_method="quantile", interpret=True)
+    cat = get_strategy("ties")(list(contribs), base=base)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(cat),
+                               rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("shape", SHAPES)

@@ -185,6 +185,48 @@ def test_compressed_blob_sync_deterministic():
     assert np.asarray(expect["w"]).tobytes() == np.asarray(got["w"]).tobytes()
 
 
+def test_keep_quantized_stores_int8_payloads():
+    """keep_quantized=True stores arriving CompressedTree payloads
+    as-is (merge-on-arrival feedstock for the engine's int8 kernel
+    route) instead of densifying; content identity is unchanged because
+    digests are defined on dequantized values."""
+    from repro.core.compression import CompressedTree, decompress_tree
+    rng = np.random.default_rng(21)
+    a = SyncNode("a", compress_blobs=True)
+    b = SyncNode("b", compress_blobs=True, keep_quantized=True)
+    a.contribute(_payload(rng, (16, 16)))
+    _sync(a, b)
+    assert a.root() == b.root()
+    eid = next(iter(a.state.visible()))
+    got = b.state.store[eid]
+    assert isinstance(got, CompressedTree)
+    # dequantizing b's stored wire payload reproduces exactly what a
+    # default receiver would have stored
+    from repro.core.compression import compress_tree
+    expect = decompress_tree(compress_tree(a.state.store[eid]))
+    dense = decompress_tree(got)
+    assert np.asarray(expect["w"]).tobytes() == \
+        np.asarray(dense["w"]).tobytes()
+
+
+def test_keep_quantized_large_blob_chunk_path():
+    """The chunked blob-stream reassembly path (_finish_blob) honours
+    keep_quantized too: a blob too big for one frame still lands in the
+    store as a CompressedTree."""
+    from repro.core.compression import CompressedTree
+    rng = np.random.default_rng(22)
+    a = SyncNode("a", compress_blobs=True, max_frame_bytes=2048)
+    b = SyncNode("b", compress_blobs=True, keep_quantized=True,
+                 max_frame_bytes=2048)
+    a.contribute(_payload(rng, (64, 64)))      # 16 KiB dense > frame
+    _sync(a, b)
+    _sync(b, a)
+    assert a.root() == b.root()
+    eid = next(iter(a.state.visible()))
+    assert eid in b.state.store
+    assert isinstance(b.state.store[eid], CompressedTree)
+
+
 # ------------------------------------------------------------ multi-node
 
 

@@ -1,0 +1,41 @@
+"""Roofline helpers: deterministic dominant-term selection and the
+bandwidth bound used by the bench_kernels gates."""
+from benchmarks.roofline import (HBM_BW, PEAK_FLOPS, bandwidth_bound_s,
+                                 dominant_term, roofline_terms)
+
+
+def test_dominant_term_picks_largest():
+    assert dominant_term(3.0, 1.0, 2.0) == "compute"
+    assert dominant_term(1.0, 3.0, 2.0) == "memory"
+    assert dominant_term(1.0, 2.0, 3.0) == "collective"
+
+
+def test_dominant_term_tie_break_is_priority_not_lexicographic():
+    """The old max((t, label), ...) compared label STRINGS on equal
+    times — an all-zero cell reported "memory" ("memory" > "compute"
+    lexicographically). Ties now resolve by fixed priority order:
+    compute, then memory, then collective."""
+    assert dominant_term(0.0, 0.0, 0.0) == "compute"
+    assert dominant_term(1.0, 1.0, 0.5) == "compute"
+    assert dominant_term(0.5, 1.0, 1.0) == "memory"
+    # a strictly larger later term still wins
+    assert dominant_term(1.0, 1.0, 1.5) == "collective"
+
+
+def test_roofline_terms_use_keyed_argmax():
+    cell = {"flops_per_device": 0.0, "bytes_accessed_per_device": 0.0,
+            "collective_bytes_per_device": 0.0, "chips": 8,
+            "model_flops": 0.0}
+    t = roofline_terms(cell)
+    assert t["dominant"] == "compute"
+    # memory-bound cell: 1 GB moved vs 1 MFLOP
+    cell = {"flops_per_device": 1e6, "bytes_accessed_per_device": 1e9,
+            "collective_bytes_per_device": 0.0, "chips": 8,
+            "model_flops": 1e6}
+    assert roofline_terms(cell)["dominant"] == "memory"
+
+
+def test_bandwidth_bound_memory_vs_compute():
+    assert bandwidth_bound_s(HBM_BW) == 1.0          # 1s of HBM traffic
+    assert bandwidth_bound_s(0.0, PEAK_FLOPS) == 1.0  # 1s of math
+    assert bandwidth_bound_s(HBM_BW, PEAK_FLOPS / 2) == 1.0

@@ -534,6 +534,50 @@ def test_sparse_manifest_round_trip():
     assert encode_message(got) == frame
 
 
+def test_sparse_manifest_quant_scales_round_trip():
+    """A quantized payload's leaf refs carry the int8 dequant scale
+    (fp32 trailer, flag byte 1); digests stay defined on the
+    DEQUANTIZED tensor so content identity is representation-free."""
+    from repro.core.compression import compress_tree, decompress_tree
+    payload = _sub(_full(5), "emb")
+    ct = compress_tree(payload)
+    entry = sparse_manifest_entry("ab" * 32, ct, encode_blob(ct), 64)
+    dense = decompress_tree(ct)
+    dentry = sparse_manifest_entry("ab" * 32, dense,
+                                   encode_blob(dense), 64)
+    assert entry.leaves[0].scale is not None
+    assert dentry.leaves[0].scale is None
+    assert entry.leaves[0].digest == dentry.leaves[0].digest
+    assert entry.leaves[0].shape == dentry.leaves[0].shape
+    assert entry.coverage == dentry.coverage == (P_EMB,)
+    msg = SparseManifest("a", 9, (entry, dentry))     # mixed flags
+    frame = encode_message(msg)
+    got = decode_message(frame)
+    assert got == msg
+    assert encode_message(got) == frame
+    assert got.entries[0].leaves[0].scale == pytest.approx(
+        entry.leaves[0].scale)
+
+
+def test_sparse_manifest_scales_reach_note_meta():
+    """_on_sparse_manifest threads announced scales into the planner
+    memo: plan_merge prices the quantized contribution at int8 bytes
+    and marks its tasks quantized."""
+    from repro.core.compression import compress_tree
+    engine.clear_meta_memo()
+    payload = _sub(_full(6), "emb")
+    ct = compress_tree(payload)
+    eid = "cd" * 32
+    entry = sparse_manifest_entry(eid, ct, encode_blob(ct), 64)
+    node = SyncNode("n")
+    node.handle(SparseManifest("peer", 3, (entry,)))
+    meta = engine.memoized_meta(eid)
+    assert meta is not None
+    assert meta.scales == tuple(l.scale for l in entry.leaves)
+    assert meta.scales[0] is not None
+    engine.clear_meta_memo()
+
+
 # ---------------------------------------------------------------------------
 # SyncNode: sparse blobs announce per leaf; receiver plans before bytes
 # ---------------------------------------------------------------------------
