@@ -41,10 +41,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.roofline import HBM_BW, bandwidth_bound_s
+from benchmarks.roofline import bandwidth_bound_s, HBM_BW
 from repro.kernels import ops, ref
-from repro.kernels.dare import dare_pallas
 from repro.kernels.common import pad_flat, pad_stacked, pad_stacked_raw
+from repro.kernels.dare import dare_pallas
 
 Row = Tuple[str, float, str]
 

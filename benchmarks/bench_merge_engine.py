@@ -34,10 +34,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine
 from repro.api import MergeSpec
-from repro.core.resolve import (reference_apply, canonical_order,
-                                clear_cache, resolve, seed_from_root)
+from repro.core import engine
+from repro.core.resolve import (
+    canonical_order, clear_cache, reference_apply, resolve, seed_from_root)
 from repro.core.state import CRDTMergeState
 
 Row = Tuple[str, str]

@@ -10,9 +10,7 @@ from typing import List, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.merkle import merkle_root
-from repro.core.resolve import reference_apply, canonical_order, resolve, \
-    seed_from_root
+from repro.core.resolve import canonical_order, reference_apply, seed_from_root
 from repro.core.state import CRDTMergeState
 
 Row = Tuple[str, float, str]

@@ -12,9 +12,9 @@ from typing import List, Tuple
 
 import jax
 
-from repro.core.properties import (TABLE3_EXPECTED, audit_all_raw,
-                                   audit_all_wrapped, controlled_tensors,
-                                   production_slices)
+from repro.core.properties import (
+    audit_all_raw, audit_all_wrapped, controlled_tensors, production_slices,
+    TABLE3_EXPECTED)
 
 Row = Tuple[str, float, str]
 

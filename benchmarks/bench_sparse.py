@@ -35,7 +35,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import MergeSpec
-from repro.core import engine
 from repro.core.engine import EngineCache
 from repro.core.resolve import (canonical_order, resolve_spec,
                                 seed_from_root, sparse_reference_apply)

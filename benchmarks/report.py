@@ -10,7 +10,7 @@ import json
 import os
 from typing import Dict, List
 
-from benchmarks.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, roofline_terms
+from benchmarks.roofline import roofline_terms
 
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 

@@ -16,7 +16,6 @@ from __future__ import annotations
 import glob
 import json
 import os
-import sys
 from typing import Dict, List, Tuple
 
 PEAK_FLOPS = 197e12

@@ -14,9 +14,8 @@ and independently resolve the identical merged model. Demonstrates:
 """
 import argparse
 
-import jax
 
-from repro.configs import get_config, smoke_config
+from repro.configs import smoke_config
 from repro.train.btm import BranchTrainMerge
 
 

@@ -59,7 +59,8 @@ def main():
     gated = MergeSpec("ties", trust_threshold=0.5)
     clean = rep.resolve(gated, base=base_j)
     dirty = rep.resolve(MergeSpec("ties"), base=base_j)
-    print(f"resolve with trust gate: |max|={float(jnp.max(jnp.abs(clean))):.3f}"
+    clean_max = float(jnp.max(jnp.abs(clean)))
+    print(f"resolve with trust gate: |max|={clean_max:.3f}"
           f"  vs ungated: |max|={float(jnp.max(jnp.abs(dirty))):.3f}")
     print("gated merge excludes the poisoned model deterministically on "
           "every honest node.")

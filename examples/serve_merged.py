@@ -39,8 +39,10 @@ def main():
     base = base_state["params"]
 
     print("fine-tuning two branches…")
-    ft1 = quick_finetune(model, jax.tree_util.tree_map(jnp.copy, base_state), 1)
-    ft2 = quick_finetune(model, jax.tree_util.tree_map(jnp.copy, base_state), 2)
+    ft1 = quick_finetune(model,
+                         jax.tree_util.tree_map(jnp.copy, base_state), 1)
+    ft2 = quick_finetune(model,
+                         jax.tree_util.tree_map(jnp.copy, base_state), 2)
 
     rep = Replica("serve")
     rep.contribute(ft1["params"])

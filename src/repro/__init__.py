@@ -28,3 +28,7 @@ def __getattr__(name: str) -> Any:
 
 def __dir__():
     return sorted(__all__ + ["__version__"])
+
+# detcheck tier manifest (docs/ANALYSIS.md):
+# SEC surface by default; packages opt out explicitly
+DETCHECK_TIER = "deterministic"

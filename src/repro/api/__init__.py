@@ -37,3 +37,7 @@ def __getattr__(name: str) -> Any:
 
 def __dir__():
     return sorted(__all__)
+
+# detcheck tier manifest (docs/ANALYSIS.md):
+# spec encoding/digests feed cache keys and gossip
+DETCHECK_TIER = "deterministic"

@@ -39,7 +39,7 @@ from __future__ import annotations
 import difflib
 import hashlib
 import struct
-from dataclasses import InitVar, dataclass
+from dataclasses import dataclass, InitVar
 from typing import Any, Dict, Mapping, Optional, Tuple
 
 from repro.strategies import get_strategy

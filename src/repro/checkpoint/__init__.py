@@ -1,4 +1,8 @@
 from repro.checkpoint.ckpt import (  # noqa: F401
-    save_checkpoint, restore_checkpoint, latest_checkpoint,
-    save_crdt_state, restore_crdt_state)
+    latest_checkpoint, restore_checkpoint, restore_crdt_state, save_checkpoint,
+    save_crdt_state)
 from repro.checkpoint.ckpt import save_checkpoint_async  # noqa: F401,E402
+
+# detcheck tier manifest (docs/ANALYSIS.md):
+# filesystem I/O paths and mtimes
+DETCHECK_TIER = "environment"

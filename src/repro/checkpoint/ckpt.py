@@ -16,7 +16,6 @@ from __future__ import annotations
 import json
 import os
 import shutil
-import threading
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, Optional, Tuple
 

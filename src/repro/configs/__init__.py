@@ -1,4 +1,8 @@
 from repro.configs.base import (  # noqa: F401
-    ModelConfig, MoEConfig, MLAConfig, MambaConfig, ShapeSpec,
-    SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K,
-    get_config, list_archs, register, smoke_config)
+    DECODE_32K, get_config, list_archs, LONG_500K, MambaConfig, MLAConfig,
+    ModelConfig, MoEConfig, PREFILL_32K, register, SHAPES, ShapeSpec,
+    smoke_config, TRAIN_4K)
+
+# detcheck tier manifest (docs/ANALYSIS.md):
+# static model shapes; registration side effects only
+DETCHECK_TIER = "environment"

@@ -7,7 +7,7 @@ cleanly, and can be serialized into checkpoints and dry-run artifacts.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------
@@ -92,9 +92,9 @@ class ModelConfig:
     sandwich_norms: bool = False   # post-attn/post-ffn extra RMSNorms
     query_scale: float = 0.0       # 0 -> 1/sqrt(head_dim)
     # minicpm-style extras
-    residual_scale: float = 1.0    # depth-scaled residual (scale_depth/sqrt(L))
+    residual_scale: float = 1.0   # depth-scaled resid (scale_depth/sqrt(L))
     logit_mult: float = 1.0        # mup-ish output multiplier
-    emb_scale: float = 1.0         # embedding multiplier (gemma sqrt(d), minicpm 12)
+    emb_scale: float = 1.0        # emb multiplier (gemma sqrt(d), minicpm)
     # MoE / MLA / Mamba
     moe: Optional[MoEConfig] = None
     mla: Optional[MLAConfig] = None
@@ -199,7 +199,7 @@ def smoke_config(name: str) -> ModelConfig:
         n_kv_heads=min(cfg.n_kv_heads, 4) if cfg.n_kv_heads else 0,
         head_dim=16,
         d_ff=128,
-        vocab_size=503,           # deliberately odd: exercises replication path
+        vocab_size=503,         # deliberately odd: exercises replication
         attn_q_chunk=32,
         remat="none",
         grad_accum=2,

@@ -1,4 +1,9 @@
-from repro.core.state import CRDTMergeState, AddEntry  # noqa: F401
-from repro.core.resolve import resolve, canonical_order, seed_from_root  # noqa: F401
-from repro.core.version_vector import VersionVector  # noqa: F401
 from repro.core.dotted_vv import DottedVersionVector  # noqa: F401
+from repro.core.resolve import (  # noqa: F401
+    canonical_order, resolve, seed_from_root)
+from repro.core.state import AddEntry, CRDTMergeState  # noqa: F401
+from repro.core.version_vector import VersionVector  # noqa: F401
+
+# detcheck tier manifest (docs/ANALYSIS.md):
+# Layer-1/2 resolve math must be replica-pure
+DETCHECK_TIER = "deterministic"

@@ -14,7 +14,7 @@ delta compression trick adapted to model merging.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, List, Tuple
+from typing import Any, List, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -10,13 +10,13 @@ quantization, core.compression) for gossip bandwidth.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, FrozenSet, Optional
+from typing import Any, Dict, FrozenSet
 
 import jax
 import numpy as np
 
-from repro.core.compression import CompressedTree, compress_tree, \
-    decompress_tree
+from repro.core.compression import (
+    compress_tree, CompressedTree, decompress_tree)
 from repro.core.state import AddEntry, CRDTMergeState
 from repro.core.version_vector import VersionVector
 

@@ -96,13 +96,13 @@ from typing import (Any, Dict, List, NamedTuple, Optional, Sequence,
 import jax
 import jax.numpy as jnp
 
-from repro.api.spec import MergeSpec, coerce_spec
-from repro.core.compression import (CompressedLeaf, CompressedTree,
-                                    compressed_tree_to_structure)
+from repro.api.spec import coerce_spec, MergeSpec
+from repro.core.compression import (
+    compressed_tree_to_structure, CompressedLeaf, CompressedTree)
 from repro.core.hashing import pytree_digest, tensor_digest
 from repro.obs import CounterView, MetricsRegistry, span
 from repro.strategies import get_strategy
-from repro.strategies.base import Strategy, run_fold
+from repro.strategies.base import run_fold, Strategy
 
 _DOMAIN_LEAF = b"repro/engine/leaf-subroot/v2"
 _DOMAIN_MODEL = b"repro/engine/model-subroot/v2"

@@ -24,11 +24,10 @@ protocols in repro.net.simulator.
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
-from repro.api.spec import MergeSpec, coerce_spec
-from repro.core.delta import Delta, delta_since, apply_delta
+from repro.api.spec import coerce_spec, MergeSpec
+from repro.core.delta import apply_delta, Delta, delta_since
 from repro.core.resolve import resolve, resolve_spec
 from repro.core.state import CRDTMergeState
 from repro.core.version_vector import VersionVector
@@ -39,7 +38,7 @@ class GossipNode:
     def __init__(self, node_id: str):
         self.node_id = node_id
         self.state = CRDTMergeState()
-        self.known: Dict[str, dict] = {}     # peer -> last seen vv (delta sync)
+        self.known: Dict[str, dict] = {}   # peer -> last vv (delta sync)
         self.merge_calls = 0
 
     def contribute(self, contribution, element_id: Optional[str] = None):

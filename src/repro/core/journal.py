@@ -50,7 +50,7 @@ from __future__ import annotations
 import os
 import struct
 import zlib
-from typing import Any, Dict, FrozenSet, Iterator, List, Optional, Tuple
+from typing import Any, Dict, FrozenSet, List, Optional, Tuple
 
 from repro.core.state import AddEntry, CRDTMergeState
 from repro.core.version_vector import VersionVector

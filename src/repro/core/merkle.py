@@ -18,7 +18,7 @@ differing range.
 from __future__ import annotations
 
 import hashlib
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 _EMPTY = hashlib.sha256(b"crdt-merge/empty").digest()
 
@@ -48,7 +48,8 @@ def merkle_root(leaves: Sequence[bytes]) -> bytes:
     return merkle_levels(leaves)[-1][0]
 
 
-def merkle_proof(leaves: Sequence[bytes], leaf: bytes) -> List[Tuple[str, bytes]]:
+def merkle_proof(leaves: Sequence[bytes],
+                 leaf: bytes) -> List[Tuple[str, bytes]]:
     """Audit path [(side, sibling_hash)] from leaf to root."""
     levels = merkle_levels(leaves)
     idx = levels[0].index(leaf)

@@ -10,14 +10,14 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.api.spec import MergeSpec
-from repro.core.resolve import reference_apply, resolve_spec, seed_from_root
+from repro.core.resolve import reference_apply, resolve_spec
 from repro.core.state import CRDTMergeState
 from repro.strategies import get_strategy, list_strategies
 

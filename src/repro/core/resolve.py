@@ -50,11 +50,11 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.api.spec import MergeSpec, coerce_spec
+from repro.api.spec import coerce_spec, MergeSpec
 from repro.core import engine
-from repro.core.engine import (CacheInfo, EngineCache,  # noqa: F401
-                               cache_info, clear_cache, default_cache,
-                               reset_cache_limits, set_cache_limit)
+from repro.core.engine import (  # noqa: F401
+    cache_info, CacheInfo, clear_cache, default_cache, EngineCache,
+    reset_cache_limits, set_cache_limit)
 from repro.core.merkle import merkle_root
 from repro.core.state import CRDTMergeState
 from repro.obs import layer1_timer, span

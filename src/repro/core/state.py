@@ -35,7 +35,7 @@ equal values — Assumption 11).
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, FrozenSet, Iterable, Mapping, Optional, Tuple
 
 from repro.core.hashing import leaf_paths_of, pytree_digest

@@ -77,6 +77,16 @@ def gated_visible(state: CRDTMergeState, trust: TrustState,
                      if trust.score(e) >= threshold)
 
 
+def _warn_gated_resolve() -> None:
+    # stacklevel=3: warn -> helper -> gated_resolve -> caller, so the
+    # once-per-site dedup keys on the deprecated call site itself
+    import warnings
+    warnings.warn(
+        "gated_resolve() is deprecated; use resolve(state, "
+        "MergeSpec(strategy, cfg, trust_threshold=...), trust=trust) "
+        "or Replica.resolve(spec)", DeprecationWarning, stacklevel=3)
+
+
 def gated_resolve(state: CRDTMergeState, trust: TrustState,
                   strategy: str, base=None, threshold: float = 0.5, **cfg):
     """DEPRECATED: resolve with the trust gate folded into the spec —
@@ -89,14 +99,9 @@ def gated_resolve(state: CRDTMergeState, trust: TrustState,
     store. Output bytes are identical (the engine is byte-equal to the
     whole-tree reference, and the seed still derives from the Merkle
     root of the gated id set)."""
-    import warnings
-
     from repro.api.spec import MergeSpec
     from repro.core.resolve import resolve_spec
-    warnings.warn(
-        "gated_resolve() is deprecated; use resolve(state, "
-        "MergeSpec(strategy, cfg, trust_threshold=...), trust=trust) "
-        "or Replica.resolve(spec)", DeprecationWarning, stacklevel=2)
+    _warn_gated_resolve()
     reduction = cfg.pop("reduction", "fold")
     fetch = cfg.pop("fetch", None)
     spec = MergeSpec.lenient(strategy, cfg, reduction=reduction,

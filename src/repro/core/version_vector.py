@@ -6,7 +6,7 @@ already has (delta sync) — see paper §4.2.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, Mapping
+from typing import Dict, Mapping
 
 
 class VersionVector:

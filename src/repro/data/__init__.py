@@ -1,1 +1,5 @@
-from repro.data.synthetic import SyntheticTask, batch_shapes  # noqa: F401
+from repro.data.synthetic import batch_shapes, SyntheticTask  # noqa: F401
+
+# detcheck tier manifest (docs/ANALYSIS.md):
+# synthetic data generation, seeded per task
+DETCHECK_TIER = "environment"

@@ -1,4 +1,8 @@
-from repro.kernels.ops import (  # noqa: F401
-    ties_merge, dare_merge, weighted_merge, weight_average_merge,
-    task_arithmetic_merge, slerp_merge)
 from repro.kernels.flash_attention import flash_attention  # noqa: F401,E402
+from repro.kernels.ops import (  # noqa: F401
+    dare_merge, slerp_merge, task_arithmetic_merge, ties_merge,
+    weight_average_merge, weighted_merge)
+
+# detcheck tier manifest (docs/ANALYSIS.md):
+# kernel routes must match reference semantics bit-for-bit
+DETCHECK_TIER = "deterministic"

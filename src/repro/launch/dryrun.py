@@ -367,7 +367,8 @@ def main() -> None:
                         f"{r['variant']:10s} "
                         f"bytes/dev={r['bytes_accessed_per_device']:.3e} "
                         f"(bound {r['bytes_lower_bound_per_device']:.3e}) "
-                        f"coll={r['collective_bytes_per_device']/2**20:.1f}MiB",
+                        f"coll="
+                        f"{r['collective_bytes_per_device']/2**20:.1f}MiB",
                         arch=arch, kind="merge", status="OK")
                 else:
                     n_fail += 1
@@ -386,14 +387,16 @@ def main() -> None:
                 r = dryrun_cell(arch, shape_name, multi_pod=mp,
                                 moe_impl=args.moe_impl, out_dir=args.out,
                                 variant=args.variant)
-                tag = f"{arch:24s} {shape_name:12s} {'2x16x16' if mp else '16x16':8s}"
+                mesh = "2x16x16" if mp else "16x16"
+                tag = f"{arch:24s} {shape_name:12s} {mesh:8s}"
                 if r["status"] == "OK":
                     n_ok += 1
                     log.emit(
                         "cell_ok",
                         f"[OK]   {tag} flops/dev={r['flops_per_device']:.3e} "
                         f"peak={r['peak_memory_per_device']/2**30:.2f}GiB "
-                        f"coll={r['collective_bytes_per_device']/2**20:.1f}MiB "
+                        f"coll="
+                        f"{r['collective_bytes_per_device']/2**20:.1f}MiB "
                         f"compile={r['compile_s']:.1f}s",
                         arch=arch, shape=shape_name, status="OK")
                 elif r["status"] == "SKIP":

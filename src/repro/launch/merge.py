@@ -21,9 +21,9 @@ import argparse
 
 import jax
 
+from repro.api import MergeSpec, Replica
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.configs import get_config, smoke_config
-from repro.api import MergeSpec, Replica
 from repro.core.resolve import seed_from_root
 from repro.models.model import Model
 from repro.obs import EventLog

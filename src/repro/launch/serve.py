@@ -13,11 +13,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke_config
-from repro.data.synthetic import make_batch
 from repro.configs.base import ShapeSpec
+from repro.data.synthetic import make_batch
 from repro.models.model import Model
 from repro.train.serve import greedy_decode
-from repro.train.step import init_train_state
 
 
 def main() -> None:

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import latest_checkpoint, restore_checkpoint, \
     save_checkpoint
-from repro.configs import SHAPES, ShapeSpec, get_config, smoke_config
+from repro.configs import get_config, smoke_config
 from repro.data.synthetic import SyntheticTask
 from repro.launch.mesh import make_mesh
 from repro.models.model import Model

@@ -1,1 +1,5 @@
 from repro.models.model import Model  # noqa: F401
+
+# detcheck tier manifest (docs/ANALYSIS.md):
+# forward-pass code; not on the resolve path
+DETCHECK_TIER = "environment"

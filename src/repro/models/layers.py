@@ -7,7 +7,6 @@ analysis honest and maps directly onto VMEM-sized tiles on TPU.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -208,4 +207,5 @@ def gqa_attention(p: dict, x, *, n_heads: int, n_kv: int, head_dim: int,
     out = chunked_attention(q, k, v, q_offset=q_offset, causal=causal,
                             window=window, softcap=softcap, q_scale=q_scale,
                             q_chunk=q_chunk, compute_dtype=compute_dtype)
-    return out.reshape(b, s, n_heads * head_dim) @ p["wo"].astype(compute_dtype)
+    out = out.reshape(b, s, n_heads * head_dim)
+    return out @ p["wo"].astype(compute_dtype)

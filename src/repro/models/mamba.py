@@ -7,7 +7,6 @@ recurrent update over a [B, H, P, N] state. The conv1d frontend keeps a
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -115,7 +114,7 @@ def ssd_chunked(xh, dt, a_log, bmat, cmat, d_skip, m: MambaConfig,
     chunk_decay = jnp.exp(cum[:, :, -1, :])                    # [B,nc,H]
 
     def scan_body(h_prev, inp):
-        st, dec = inp                                          # [B,H,P,N],[B,H]
+        st, dec = inp                                # [B,H,P,N], [B,H]
         h_new = h_prev * dec[..., None, None] + st
         return h_new, h_prev
 

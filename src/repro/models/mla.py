@@ -11,8 +11,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import MLAConfig, ModelConfig
-from repro.models.layers import NEG_INF, apply_rope, rmsnorm, rmsnorm_def
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, NEG_INF, rmsnorm, rmsnorm_def
 from repro.models.schema import PDef
 
 

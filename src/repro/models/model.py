@@ -10,20 +10,19 @@ state, static cross-attention KV).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, ShapeSpec
+from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models import mamba as M
 from repro.models import mla as MLA
 from repro.models import moe as MOE
-from repro.models.schema import PDef, init_from_schema, shapes_from_schema, \
-    specs_from_schema
+from repro.models.schema import (
+    init_from_schema, PDef, shapes_from_schema, specs_from_schema)
 
 
 @dataclass(frozen=True)
@@ -384,8 +383,8 @@ class Model:
 
         xs = (params["blocks"], caches) if mode == "decode" else \
             params["blocks"]
-        (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
-                                            xs)
+        (x, aux), new_caches = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), xs)
         return x, new_caches, aux
 
     # -------------------------------------------------------- embeddings

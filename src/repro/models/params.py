@@ -3,11 +3,11 @@ from __future__ import annotations
 
 from typing import Tuple
 
-import numpy as np
 import jax
+import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.schema import PDef, _path_str
+from repro.models.schema import _path_str, PDef
 
 
 def count_params(cfg: ModelConfig) -> Tuple[int, int]:

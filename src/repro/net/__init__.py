@@ -14,17 +14,16 @@ stays fully replicated); `simulator` is a deterministic discrete-event
 network with per-link latency/bandwidth/loss/duplication/reordering for
 convergence experiments the in-process tests cannot express.
 """
-from repro.net.antientropy import SyncNode, reconcile_root, state_items
+from repro.net.antientropy import reconcile_root, state_items, SyncNode
 from repro.net.simulator import LinkSpec, SimGossipNetwork, SimNetwork
-from repro.net.store import (BlobSource, Placement, bitmap_indices,
-                             chunk_bitmap, rendezvous_holders)
-from repro.net.transport import (InMemoryTransport, LoopbackSocketTransport,
-                                 PersistentLoopbackTransport, Transport,
-                                 pump)
-from repro.net.wire import (DEFAULT_MAX_FRAME, ResolveSpecMsg, decode_blob,
-                            decode_frame, decode_message, encode_blob,
-                            encode_message, msg_to_delta, msg_to_state,
-                            state_to_msg)
+from repro.net.store import (
+    bitmap_indices, BlobSource, chunk_bitmap, Placement, rendezvous_holders)
+from repro.net.transport import (
+    InMemoryTransport, LoopbackSocketTransport, PersistentLoopbackTransport,
+    pump, Transport)
+from repro.net.wire import (
+    decode_blob, decode_frame, decode_message, DEFAULT_MAX_FRAME, encode_blob,
+    encode_message, msg_to_delta, msg_to_state, ResolveSpecMsg, state_to_msg)
 
 __all__ = [
     "SyncNode", "reconcile_root", "state_items",
@@ -37,3 +36,7 @@ __all__ = [
     "decode_message", "encode_blob", "encode_message",
     "msg_to_delta", "msg_to_state", "state_to_msg",
 ]
+
+# detcheck tier manifest (docs/ANALYSIS.md):
+# transports/sync touch sockets and wall clocks by design
+DETCHECK_TIER = "environment"

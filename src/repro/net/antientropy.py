@@ -64,27 +64,24 @@ from typing import (Any, Callable, Dict, FrozenSet, Iterable, List, Optional,
                     Sequence, Set, Tuple)
 
 from repro.api.spec import MergeSpec
-from repro.core.delta import Delta, apply_delta
-from repro.core.merkle import bucket_digests, diff_buckets, pick_bucket_bits, \
-    prefix_bucket
+from repro.core.delta import apply_delta, Delta
+from repro.core.merkle import (
+    bucket_digests, diff_buckets, pick_bucket_bits, prefix_bucket)
 from repro.core.resolve import resolve as _legacy_resolve
 from repro.core.resolve import resolve_spec as _resolve_spec
 from repro.core.state import AddEntry, CRDTMergeState
-from repro.core.version_vector import VersionVector
+from repro.net.store import (
+    bitmap_indices, BlobSource, chunk_bitmap, payload_nbytes, Placement)
+from repro.net.wire import (
+    BlobManifest, BlobReq, BlobResp, BucketItemsMsg, BucketsMsg,
+    CHUNK_ENVELOPE, ChunkData, ChunkReq, decode_blob, DEFAULT_MAX_FRAME,
+    DeltaMsg, encode_blob, HaveEntry, HaveMap, HaveReq, leaf_refs,
+    manifest_entry, ManifestEntry, Message, msg_to_delta, msg_to_state,
+    ResolveSpecMsg, SparseManifest, SparseManifestEntry, StateMsg, SyncDone,
+    SyncReq, WireError)
 from repro.obs import CounterView, MetricsRegistry
 from repro.obs import enabled as _obs_enabled
 from repro.obs import span as _span
-from repro.net.store import (BlobSource, Placement, bitmap_indices,
-                             chunk_bitmap, payload_nbytes)
-from repro.net.wire import (CHUNK_ENVELOPE, DEFAULT_MAX_FRAME, BlobManifest,
-                            BlobReq, BlobResp, BucketItemsMsg, BucketsMsg,
-                            ChunkData, ChunkReq, DeltaMsg, HaveEntry,
-                            HaveMap, HaveReq, ManifestEntry, Message,
-                            ResolveSpecMsg, SparseManifest,
-                            SparseManifestEntry, StateMsg, SyncDone,
-                            SyncReq, WireError, decode_blob, encode_blob,
-                            leaf_refs, manifest_entry, msg_to_delta,
-                            msg_to_state)
 
 Reply = Tuple[str, Message]
 
@@ -324,7 +321,8 @@ class SyncNode:
         recovered blob locally; a warm restart fetches zero bytes."""
         recovered = storage.load()
         merged = recovered.merge(self._state)
-        if merged != recovered or merged.store.keys() != recovered.store.keys():
+        if (merged != recovered
+                or merged.store.keys() != recovered.store.keys()):
             storage.record_transition(recovered, merged)
         self._state = merged
         self.storage = storage

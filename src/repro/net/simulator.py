@@ -30,8 +30,8 @@ from repro.core.state import CRDTMergeState
 from repro.core.version_vector import VersionVector
 from repro.net.antientropy import SyncNode
 from repro.net.store import Placement
-from repro.net.wire import (Message, decode_frame, delta_to_msg,
-                            encode_message, state_to_msg)
+from repro.net.wire import (
+    decode_frame, delta_to_msg, encode_message, Message, state_to_msg)
 from repro.obs import ConvergenceProbe, MetricsRegistry, Tracer
 from repro.obs.probes import wire_phase
 

@@ -26,10 +26,10 @@ import errno
 import socket
 import time
 from collections import Counter, deque
-from typing import Callable, Deque, Dict, List, Mapping, Optional, Tuple
+from typing import Deque, Dict, List, Mapping, Optional, Tuple
 
-from repro.net.wire import (FRAME_OVERHEAD, HEADER, Message, TRAILER,
-                            decode_frame, encode_message)
+from repro.net.wire import (
+    decode_frame, encode_message, FRAME_OVERHEAD, HEADER, Message)
 from repro.obs import MetricsRegistry
 from repro.obs.probes import wire_phase
 

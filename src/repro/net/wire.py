@@ -45,14 +45,13 @@ import hashlib
 import struct
 import zlib
 from dataclasses import dataclass, field
-from typing import Any, Dict, FrozenSet, List, Optional, Tuple
+from typing import Any, Dict, FrozenSet, Optional, Tuple
 
 import numpy as np
 
-from repro.core.compression import (CompressedLeaf, CompressedTree,
-                                    compressed_tree_from_structure,
-                                    compressed_tree_to_structure,
-                                    decompress_tree)
+from repro.core.compression import (
+    compressed_tree_from_structure, compressed_tree_to_structure,
+    CompressedLeaf, CompressedTree, decompress_tree)
 from repro.core.delta import Delta
 from repro.core.state import AddEntry, CRDTMergeState
 from repro.core.version_vector import VersionVector

@@ -19,16 +19,14 @@ never changes a merged byte, and identical converged contribution
 sets produce identical deterministic aggregates
 (`MetricsRegistry.aggregate()`) regardless of delivery order.
 """
-from .metrics import (CATALOG, Counter, CounterView, Gauge, Histogram,
-                      MetricSpec, MetricsRegistry, NULL_REGISTRY,
-                      NullRegistry, declare, default_registry, enabled,
-                      set_enabled)
-from .trace import (NULL_TRACER, Span, Tracer, current_tracer, set_tracer,
-                    span)
-from .export import EventLog, render_table, report_rows, to_events, \
-    write_jsonl
-from .probes import (WIRE_PHASES, ConvergenceProbe, layer1_timer,
-                     observe_layer1, wire_phase)
+from .export import EventLog, render_table, report_rows, to_events, write_jsonl
+from .metrics import (
+    CATALOG, Counter, CounterView, declare, default_registry, enabled, Gauge,
+    Histogram, MetricSpec, MetricsRegistry, NULL_REGISTRY, NullRegistry,
+    set_enabled)
+from .probes import (
+    ConvergenceProbe, layer1_timer, observe_layer1, wire_phase, WIRE_PHASES)
+from .trace import current_tracer, NULL_TRACER, set_tracer, Span, span, Tracer
 
 __all__ = [
     "CATALOG", "MetricSpec", "MetricsRegistry", "NullRegistry",
@@ -40,3 +38,8 @@ __all__ = [
     "WIRE_PHASES", "wire_phase", "ConvergenceProbe", "layer1_timer",
     "observe_layer1",
 ]
+
+# detcheck tier manifest (docs/ANALYSIS.md):
+# SEC aggregates are convergence evidence; clock-bearing modules carry per-file
+# overrides
+DETCHECK_TIER = "deterministic"

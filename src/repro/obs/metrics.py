@@ -43,8 +43,7 @@ from __future__ import annotations
 
 import bisect
 from collections.abc import MutableMapping
-from typing import Any, Dict, Iterable, Iterator, List, NamedTuple, \
-    Optional, Tuple
+from typing import Any, Dict, Iterable, Iterator, List, NamedTuple, Tuple
 
 __all__ = [
     "CATALOG", "MetricSpec", "MetricsRegistry", "Counter", "Gauge",

@@ -26,9 +26,9 @@ These are the SEC instruments the paper's claims translate into:
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, Iterable, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
-from .metrics import MetricsRegistry, default_registry, enabled
+from .metrics import default_registry, enabled, MetricsRegistry
 
 __all__ = ["wire_phase", "WIRE_PHASES", "ConvergenceProbe",
            "observe_layer1", "layer1_timer"]
@@ -90,12 +90,14 @@ class layer1_timer:
 
     def __enter__(self) -> "layer1_timer":
         if self._registry is not None or enabled():
+            # detcheck: allow[DET001] telemetry-only; feeds obs only
             self._t0 = time.perf_counter()
         return self
 
     def __exit__(self, exc_type, exc, tb) -> None:
         if self._t0 is None or exc_type is not None:
             return
+        # detcheck: allow[DET001] telemetry-only; feeds obs only
         self.ms = (time.perf_counter() - self._t0) * 1e3
         observe_layer1(self.ms, self._registry)
 

@@ -1,2 +1,6 @@
 from repro.optim.adamw import (  # noqa: F401
-    init_opt_state, adamw_update, lr_schedule)
+    adamw_update, init_opt_state, lr_schedule)
+
+# detcheck tier manifest (docs/ANALYSIS.md):
+# pure update math; nothing here may draw entropy
+DETCHECK_TIER = "deterministic"

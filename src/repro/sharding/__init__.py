@@ -1,3 +1,7 @@
 from repro.sharding.policy import (  # noqa: F401
-    params_shardings, batch_shardings, cache_shardings, resolve_leaf_spec,
-    set_mesh, expert_activation_constraint, state_shardings)
+    batch_shardings, cache_shardings, expert_activation_constraint,
+    params_shardings, resolve_leaf_spec, set_mesh, state_shardings)
+
+# detcheck tier manifest (docs/ANALYSIS.md):
+# mesh/sharding policy; device-topology dependent
+DETCHECK_TIER = "environment"

@@ -13,7 +13,6 @@ vocab sizes stay replicated instead of relying on GSPMD padding.
 """
 from __future__ import annotations
 
-import math
 from typing import Optional, Tuple
 
 import jax

@@ -1,3 +1,7 @@
-from repro.strategies.base import (  # noqa: F401
-    Strategy, get_strategy, list_strategies, REGISTRY)
 import repro.strategies.catalog  # noqa: F401,E402  (populates REGISTRY)
+from repro.strategies.base import (  # noqa: F401
+    get_strategy, list_strategies, REGISTRY, Strategy)
+
+# detcheck tier manifest (docs/ANALYSIS.md):
+# strategy output is a pure fn of ordered contribs + seed
+DETCHECK_TIER = "deterministic"

@@ -103,7 +103,7 @@ def run_fold(fold: LeafFold, stacked, base, *, acc=None, start: int = 0,
 @dataclass(frozen=True)
 class Strategy:
     name: str
-    fn: Callable                      # fn(stacked_tree, base_tree, seed, **cfg)
+    fn: Callable                 # fn(stacked_tree, base_tree, seed, **cfg)
     stochastic: bool = False
     binary_only: bool = False
     category: str = "linear"          # linear | sparse | geometry | search

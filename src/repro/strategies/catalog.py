@@ -18,7 +18,7 @@ by tests/test_strategies_audit.py):
   emr                      P F F   elect-mask-rescale + trim
   evolutionary_merge       F F F   population search, unnormalised weights
   fisher_merge             P F P   squared-magnitude (proxy) Fisher weights
-  genetic_merge            P F P   deterministic generational coefficient search
+  genetic_merge            P F P   deterministic generational coeff search
   led_merge                P F P   largest-element-dominance softmax blend
   linear                   P F P   interpolation (t=0.5)
   model_breadcrumbs        P F F   top+bottom magnitude masking
@@ -40,8 +40,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.strategies.base import (LeafFold, Strategy, leafwise, register,
-                                   run_fold)
+from repro.strategies.base import (
+    LeafFold, leafwise, register, run_fold, Strategy)
 
 EPS = 1e-12
 

@@ -1,2 +1,6 @@
-from repro.train.step import make_train_step, init_train_state  # noqa: F401
-from repro.train.serve import make_prefill, make_decode_step  # noqa: F401
+from repro.train.serve import make_decode_step, make_prefill  # noqa: F401
+from repro.train.step import init_train_state, make_train_step  # noqa: F401
+
+# detcheck tier manifest (docs/ANALYSIS.md):
+# training loops time themselves and pick run seeds
+DETCHECK_TIER = "environment"

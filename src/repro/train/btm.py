@@ -19,16 +19,14 @@ and continues training from it. There is no coordinator:
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs.base import ModelConfig, ShapeSpec
 from repro.api.spec import MergeSpec
+from repro.configs.base import ModelConfig, ShapeSpec
 from repro.core.gossip import GossipNetwork
 from repro.core.resolve import clear_cache
 from repro.data.synthetic import SyntheticTask

@@ -12,7 +12,6 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.models.model import Model
 from repro.optim.adamw import adamw_update, init_opt_state
 
@@ -29,7 +28,6 @@ def init_train_state(model: Model, key) -> Dict:
 
 def train_state_shapes(model: Model):
     """Abstract TrainState for dry-runs (no allocation)."""
-    import numpy as np
     pshapes = model.param_shapes()
     pdt = jnp.dtype(model.cfg.param_dtype)
     cast = lambda dt: lambda s: jax.ShapeDtypeStruct(s.shape, dt)

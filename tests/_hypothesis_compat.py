@@ -9,7 +9,8 @@ tests in the same module still run) and strategy construction at module
 scope returns inert placeholders.
 """
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import given, settings  # noqa: F401  (re-exports)
+    from hypothesis import strategies as st  # noqa: F401
     HAVE_HYPOTHESIS = True
 except ImportError:
     import pytest

@@ -10,19 +10,19 @@ one-warning deprecation shims.
 import warnings
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from conftest import make_contribs
+
 from repro.api import EngineCache, MergeSpec, Replica, SpecError
 from repro.core import engine
-from repro.core.resolve import (canonical_order, clear_cache,
-                                hierarchical_resolve, reference_apply,
-                                resolve, resolve_spec, seed_from_root)
+from repro.core.resolve import (
+    canonical_order, clear_cache, hierarchical_resolve, reference_apply,
+    resolve, resolve_spec, seed_from_root)
 from repro.core.state import CRDTMergeState
-from repro.core.trust import TrustState, gated_resolve
-from repro.strategies import get_strategy, list_strategies
+from repro.core.trust import gated_resolve, TrustState
+from repro.strategies import list_strategies
 
 
 def _bytes_equal(a, b) -> bool:

@@ -1,14 +1,12 @@
 """Compression determinism + optimizer behaviour."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.compression import (compress_tree, decompress_tree,
-                                    topk_reconstruct, topk_sparsify)
-from repro.optim.adamw import adamw_update, init_opt_state, lr_schedule
 from repro.configs import get_config
+from repro.core.compression import (
+    compress_tree, decompress_tree, topk_reconstruct, topk_sparsify)
+from repro.optim.adamw import adamw_update, init_opt_state, lr_schedule
 
 
 def test_compress_roundtrip_deterministic():

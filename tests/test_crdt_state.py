@@ -1,12 +1,9 @@
 """OR-Set / CRDTMergeState laws — unit + hypothesis property tests
 (Theorem 8: commutativity, associativity, idempotency, lattice LUB)."""
 import jax.numpy as jnp
-import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.state import AddEntry, CRDTMergeState
-from repro.core.version_vector import VersionVector
+from repro.core.state import CRDTMergeState
 
 
 def _payload(i):

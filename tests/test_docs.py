@@ -26,11 +26,13 @@ def test_protocol_frame_table_matches_wire_registry():
     mod = _check_docs()
     documented = mod.doc_frame_table(ROOT / "docs" / "PROTOCOL.md")
     registry = {tag: cls.__name__ for tag, cls in wire.MESSAGE_TYPES.items()}
+    renamed = [t for t in set(documented) & set(registry)
+               if documented[t] != registry[t]]
     assert documented == registry, (
         "docs/PROTOCOL.md frame table out of sync with net/wire.py: "
         f"doc-only={set(documented) - set(registry)}, "
         f"code-only={set(registry) - set(documented)}, "
-        f"renamed={[t for t in set(documented) & set(registry) if documented[t] != registry[t]]}")
+        f"renamed={renamed}")
     assert mod.check_frame_table(ROOT) == []
 
 

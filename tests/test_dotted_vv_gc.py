@@ -1,7 +1,6 @@
 """Dotted version vectors (L1) + causal-stability tombstone GC (L3)."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.dotted_vv import DottedVersionVector

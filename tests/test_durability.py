@@ -19,17 +19,18 @@ import jax
 import numpy as np
 import pytest
 
-from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from _hypothesis_compat import given, HAVE_HYPOTHESIS, settings, st
+
 from repro.api import MergeSpec, Replica
 from repro.core.hashing import leaf_paths_of, pytree_digest
-from repro.core.journal import (RECORD_TYPES, BlobLog, CrashPoint,
-                                DurableStore, JournalError, SimulatedCrash,
-                                scan_records)
+from repro.core.journal import (
+    BlobLog, CrashPoint, DurableStore, JournalError, RECORD_TYPES,
+    scan_records, SimulatedCrash)
 from repro.core.resolve import resolve_spec
 from repro.core.state import CRDTMergeState
 from repro.net.antientropy import SyncNode
 from repro.net.simulator import SimGossipNetwork
-from repro.net.store import Placement, payload_nbytes
+from repro.net.store import payload_nbytes, Placement
 from repro.net.wire import decode_layer1, encode_layer1
 
 

@@ -9,13 +9,14 @@ import numpy as np
 import pytest
 
 from conftest import make_contribs
+
+from repro.api import MergeSpec
 from repro.core import engine
 from repro.core.properties import controlled_tensors
-from repro.api import MergeSpec
-from repro.core.resolve import (cache_info, canonical_order, clear_cache,
-                                hierarchical_resolve, reference_apply,
-                                reset_cache_limits, resolve, seed_from_root,
-                                set_cache_limit)
+from repro.core.resolve import (
+    cache_info, canonical_order, clear_cache, hierarchical_resolve,
+    reference_apply, reset_cache_limits, resolve, seed_from_root,
+    set_cache_limit)
 from repro.core.state import CRDTMergeState
 from repro.strategies import get_strategy, list_strategies
 

@@ -3,7 +3,6 @@ import os
 import subprocess
 import sys
 
-import pytest
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 

@@ -5,12 +5,12 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
+from repro.api import MergeSpec
 from repro.core.delta import apply_delta, delta_since
 from repro.core.gossip import GossipNetwork
-from repro.core.state import CRDTMergeState
-from repro.api import MergeSpec
 from repro.core.resolve import resolve
-from repro.core.trust import TrustState, gated_visible
+from repro.core.state import CRDTMergeState
+from repro.core.trust import gated_visible, TrustState
 from repro.core.version_vector import VersionVector
 
 

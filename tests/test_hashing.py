@@ -4,8 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 from _hypothesis_compat import given, settings, st
 
-from repro.core.hashing import (fingerprint2x32, hexdigest, pytree_digest,
-                                tensor_digest, tree_fingerprint)
+from repro.core.hashing import (fingerprint2x32,
+    pytree_digest,
+    tensor_digest,
+    tree_fingerprint)
 
 
 def test_digest_deterministic_and_content_sensitive():
@@ -34,7 +36,6 @@ def test_fingerprint_split_invariance(n, seed):
     cut = n // 2
     # manual split with index offsets: recompute with iota offset by slicing
     # the full index space — equivalent to per-shard partial fingerprints.
-    import jax.numpy as jnp2
     w = jax.lax.bitcast_convert_type(x, jnp.uint32)
     i = jax.lax.iota(jnp.uint32, n)
     from repro.core.hashing import _MIX_A, _MIX_B, _MIX_C, _MIX_D

@@ -9,7 +9,6 @@ jitted driver (quant), and against the eager reference for the
 histogram pipeline (its threshold math runs host-side op-by-op in both
 the kernel driver and the reference). Op-by-op vs jitted eager can
 differ by an FMA-contraction ulp, so each test states its oracle."""
-import os
 
 import jax
 import jax.numpy as jnp

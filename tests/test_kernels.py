@@ -1,6 +1,5 @@
 """Pallas kernel sweep: shapes x dtypes x k vs the pure-jnp oracles
 (interpret=True on CPU; TPU is the compile target)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,11 +1,9 @@
 """Merkle tree + version vector unit/property tests."""
 import hashlib
 
-import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.merkle import merkle_levels, merkle_proof, merkle_root, \
-    verify_proof
+from repro.core.merkle import merkle_proof, merkle_root, verify_proof
 from repro.core.version_vector import VersionVector
 
 

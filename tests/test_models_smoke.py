@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ShapeSpec, list_archs, smoke_config
+from repro.configs import list_archs, ShapeSpec, smoke_config
 from repro.data.synthetic import make_batch
 from repro.models.model import Model
 from repro.train.step import init_train_state, make_train_step

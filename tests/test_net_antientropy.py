@@ -11,18 +11,18 @@ import numpy as np
 import pytest
 
 from _hypothesis_compat import given, settings, st
+
 from repro.core.delta import apply_delta, delta_for_entries
 from repro.core.gossip import GossipNetwork
-from repro.core.merkle import (bucket_digests, diff_buckets,
-                               pick_bucket_bits, prefix_bucket,
-                               subtree_digest, merkle_levels)
+from repro.core.merkle import (
+    bucket_digests, diff_buckets, merkle_levels, pick_bucket_bits,
+    prefix_bucket, subtree_digest)
 from repro.core.state import CRDTMergeState
 from repro.core.version_vector import VersionVector
-from repro.net.antientropy import SyncNode, reconcile_root, state_items
-from repro.net.transport import InMemoryTransport, LoopbackSocketTransport, \
-    pump
-from repro.net.wire import BucketsMsg, StateMsg, SyncDone, frame_size, \
-    state_to_msg
+from repro.net.antientropy import reconcile_root, SyncNode
+from repro.net.transport import (
+    InMemoryTransport, LoopbackSocketTransport, pump)
+from repro.net.wire import frame_size, state_to_msg
 
 
 def _payload(rng, shape=(4, 4)):

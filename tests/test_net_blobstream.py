@@ -18,14 +18,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.delta import delta_for_entries, apply_delta
+from repro.core.delta import apply_delta, delta_for_entries
 from repro.core.gossip import GossipNetwork
 from repro.net.antientropy import SyncNode
 from repro.net.simulator import LinkSpec, SimGossipNetwork
-from repro.net.transport import (InMemoryTransport,
-                                 PersistentLoopbackTransport, pump)
-from repro.net.wire import (BlobResp, ChunkData, chunk_digests, decode_blob,
-                            encode_blob, frame_size, manifest_entry)
+from repro.net.transport import (
+    InMemoryTransport, PersistentLoopbackTransport, pump)
+from repro.net.wire import (
+    BlobResp, chunk_digests, ChunkData, decode_blob, encode_blob,
+    manifest_entry)
 
 MAX_FRAME = 2048          # tiny budget => many chunks from small payloads
 

@@ -22,8 +22,8 @@ from repro.core.delta import apply_delta, delta_for_entries
 from repro.core.gossip import GossipNetwork
 from repro.net.antientropy import SyncNode
 from repro.net.simulator import LinkSpec, SimGossipNetwork
-from repro.net.store import (BlobSource, Placement, bitmap_indices,
-                             chunk_bitmap, rendezvous_holders)
+from repro.net.store import (
+    bitmap_indices, BlobSource, chunk_bitmap, Placement, rendezvous_holders)
 from repro.net.transport import InMemoryTransport, pump
 from repro.net.wire import CHUNK_ENVELOPE, ChunkData, encode_blob
 

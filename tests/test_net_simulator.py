@@ -10,9 +10,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.net.simulator import LinkSpec, SimGossipNetwork, SimNetwork
-from repro.net.wire import SyncDone, frame_size
 from repro.core.version_vector import VersionVector
+from repro.net.simulator import LinkSpec, SimGossipNetwork, SimNetwork
+from repro.net.wire import frame_size, SyncDone
 
 
 def _payloads(n, side=4, seed=0):

@@ -12,16 +12,16 @@ import numpy as np
 import pytest
 
 from _hypothesis_compat import given, settings, st
-from repro.core.compression import (CompressedTree, compress_tree,
-                                    decompress_tree)
+
+from repro.core.compression import (
+    compress_tree, CompressedTree, decompress_tree)
 from repro.core.delta import delta_since
 from repro.core.state import CRDTMergeState
 from repro.core.version_vector import VersionVector
-from repro.net.wire import (BlobReq, BlobResp, BucketItemsMsg, BucketsMsg,
-                            DeltaMsg, StateMsg, SyncDone, SyncReq, WireError,
-                            decode_frame, decode_message, delta_to_msg,
-                            encode_message, msg_to_delta, msg_to_state,
-                            state_to_msg)
+from repro.net.wire import (
+    BlobReq, BlobResp, BucketItemsMsg, BucketsMsg, decode_frame,
+    decode_message, delta_to_msg, DeltaMsg, encode_message, msg_to_delta,
+    msg_to_state, state_to_msg, SyncDone, SyncReq, WireError)
 
 
 def tree_equal(a, b) -> bool:
@@ -149,7 +149,8 @@ def test_compressed_payload_bit_identical_after_wire():
     out = roundtrip(msg)
     local = decompress_tree(ct)
     remote = decompress_tree(out.payloads["e"])
-    assert np.asarray(local["a"]).tobytes() == np.asarray(remote["a"]).tobytes()
+    assert (np.asarray(local["a"]).tobytes()
+            == np.asarray(remote["a"]).tobytes())
 
 
 def test_tensor_dtypes_survive():

@@ -14,11 +14,11 @@ from repro.api import MergeSpec, Replica
 from repro.core.gossip import GossipNetwork
 from repro.net.simulator import SimGossipNetwork
 from repro.net.wire import MESSAGE_TYPES
-from repro.obs import (CATALOG, ConvergenceProbe, CounterView, EventLog,
-                       MetricsRegistry, Tracer, default_registry,
-                       layer1_timer, set_enabled, set_tracer, span,
-                       to_events, write_jsonl)
-from repro.obs.probes import WIRE_PHASES, wire_phase
+from repro.obs import (
+    CATALOG, ConvergenceProbe, CounterView, default_registry, EventLog,
+    layer1_timer, MetricsRegistry, set_enabled, set_tracer, span, to_events,
+    Tracer, write_jsonl)
+from repro.obs.probes import wire_phase, WIRE_PHASES
 from repro.strategies import list_strategies
 
 

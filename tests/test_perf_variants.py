@@ -3,7 +3,6 @@ math (or stay within the documented approximation)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from conftest import make_contribs
 from repro.configs import ShapeSpec, smoke_config
@@ -57,7 +56,6 @@ def test_cast_params_for_loss_matches_plain_bf16_compute():
 
 def test_moe_capacity_factor_monotone():
     """Higher capacity keeps more tokens (sanity for the dispatch paths)."""
-    from repro.configs.base import MoEConfig
     import dataclasses
     cfg = smoke_config("qwen3-moe-30b-a3b").replace(compute_dtype="float32")
     lo = dataclasses.replace(cfg.moe, capacity_factor=0.25)

@@ -1,19 +1,17 @@
 """Layer-2 resolve: canonical ordering, seeding, folds, caching,
 incremental/hierarchical resolve, and the Remark 16 transparency check."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from conftest import make_contribs
+
 from repro.api import MergeSpec
-from repro.core.resolve import (IncrementalMean, cache_info,
-                                canonical_order, clear_cache,
-                                hierarchical_resolve, reference_apply,
-                                reset_cache_limits, resolve,
-                                seed_from_root, set_cache_limit)
+from repro.core.resolve import (
+    cache_info, canonical_order, clear_cache, hierarchical_resolve,
+    IncrementalMean, reference_apply, reset_cache_limits, resolve,
+    seed_from_root, set_cache_limit)
 from repro.core.state import CRDTMergeState
-from repro.strategies import get_strategy
 
 
 def _state_with(contribs):
@@ -132,8 +130,9 @@ def test_resolve_cache_lru_recency_order():
         s3 = _state_with(make_contribs(2, seed=12))
         r1 = resolve(s1, MergeSpec("weight_average"))
         resolve(s2, MergeSpec("weight_average"))
-        assert resolve(s1, MergeSpec("weight_average")) is r1   # refresh s1's recency
-        resolve(s3, MergeSpec("weight_average"))                # evicts s2, not s1
+        # refresh s1's recency
+        assert resolve(s1, MergeSpec("weight_average")) is r1
+        resolve(s3, MergeSpec("weight_average"))    # evicts s2, not s1
         assert resolve(s1, MergeSpec("weight_average")) is r1
         assert cache_info().entries == 2
     finally:
@@ -153,8 +152,9 @@ def test_incremental_mean_matches_weight_average():
 
 def test_incremental_mean_sync_repairs_divergence():
     """Regression: out-of-order arrivals and retractions silently
-    diverged the accumulator from resolve(state, MergeSpec("weight_average")) —
-    sync(state) re-folds from the canonical visible set."""
+    diverged the accumulator from resolve(state,
+    MergeSpec("weight_average")) — sync(state) re-folds from the
+    canonical visible set."""
     contribs = make_contribs(5)
     s = _state_with(contribs)
     inc = IncrementalMean()
@@ -210,16 +210,20 @@ def test_resolve_cache_distinguishes_large_array_cfg():
     r_a = resolve(s, MergeSpec.lenient("weight_average", {"knob": mask_a}))
     r_b = resolve(s, MergeSpec.lenient("weight_average", {"knob": mask_b}))
     assert r_a is not r_b                    # distinct cache entries
-    assert resolve(s, MergeSpec.lenient("weight_average", {"knob": mask_a})) is r_a
-    assert resolve(s, MergeSpec.lenient("weight_average", {"knob": mask_b})) is r_b
+    spec_a = MergeSpec.lenient("weight_average", {"knob": mask_a})
+    assert resolve(s, spec_a) is r_a
+    spec_b = MergeSpec.lenient("weight_average", {"knob": mask_b})
+    assert resolve(s, spec_b) is r_b
     clear_cache()
 
 
 def test_hierarchical_resolve_deterministic():
     contribs = make_contribs(9)
     states = [_state_with([c]) for c in contribs]
-    r1 = hierarchical_resolve(states, MergeSpec("weight_average"), group_size=3)
-    r2 = hierarchical_resolve(states[::-1], MergeSpec("weight_average"), group_size=3)
+    r1 = hierarchical_resolve(states, MergeSpec("weight_average"),
+                              group_size=3)
+    r2 = hierarchical_resolve(states[::-1], MergeSpec("weight_average"),
+                              group_size=3)
     assert bool(jnp.array_equal(r1, r2))
 
 

@@ -1,7 +1,7 @@
 """Roofline helpers: deterministic dominant-term selection and the
 bandwidth bound used by the bench_kernels gates."""
-from benchmarks.roofline import (HBM_BW, PEAK_FLOPS, bandwidth_bound_s,
-                                 dominant_term, roofline_terms)
+from benchmarks.roofline import (
+    bandwidth_bound_s, dominant_term, HBM_BW, PEAK_FLOPS, roofline_terms)
 
 
 def test_dominant_term_picks_largest():

@@ -6,7 +6,6 @@ import subprocess
 import sys
 from types import SimpleNamespace
 
-import pytest
 
 from repro.sharding.policy import resolve_leaf_spec
 

@@ -14,20 +14,21 @@ import numpy as np
 import pytest
 
 from _hypothesis_compat import given, settings, st
+
 from repro.api import MergeSpec, Replica
 from repro.core import engine
 from repro.core.engine import EngineCache
 from repro.core.hashing import leaf_paths_of, pytree_digest
-from repro.core.resolve import (canonical_order, resolve_spec,
-                                seed_from_root, sparse_reference_apply)
+from repro.core.resolve import (
+    canonical_order, resolve_spec, seed_from_root, sparse_reference_apply)
 from repro.core.state import AddEntry, CRDTMergeState
-from repro.strategies import list_strategies
 from repro.net import wire
 from repro.net.antientropy import SyncNode
 from repro.net.transport import InMemoryTransport, pump
-from repro.net.wire import (SparseManifest, StateMsg, decode_message,
-                            encode_blob, encode_message,
-                            sparse_manifest_entry)
+from repro.net.wire import (
+    decode_message, encode_blob, encode_message, sparse_manifest_entry,
+    SparseManifest, StateMsg)
+from repro.strategies import list_strategies
 
 
 def _bytes_equal(a, b) -> bool:

@@ -6,9 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.properties import (TABLE3_EXPECTED, audit_all_raw,
-                                   audit_all_wrapped, audit_raw,
-                                   audit_wrapped, controlled_tensors)
+from repro.core.properties import (
+    audit_all_raw, audit_all_wrapped, audit_raw, audit_wrapped,
+    controlled_tensors, TABLE3_EXPECTED)
 from repro.strategies import get_strategy, list_strategies
 
 

@@ -1,79 +1,52 @@
 #!/usr/bin/env python
-"""Docs checks, run by CI and reused by tests/test_docs.py.
+"""Docs checks — compatibility shim over tools/detcheck.
 
-1. Link check: every relative markdown link in README.md and docs/*.md
-   must point at an existing file (external http(s)/mailto links are
-   not fetched — CI must not depend on network).
-2. Frame-table check: the frame ids documented in docs/PROTOCOL.md
-   must match repro.net.wire's codec registry exactly — same ids, same
-   message class names.
-3. Metrics-table check: the catalog documented in
-   docs/OBSERVABILITY.md must match repro.obs CATALOG exactly — same
-   names, kinds, label axes, and deterministic flags.
-4. Record-table check: the durable on-disk record types documented in
-   docs/PROTOCOL.md (rows shaped `| R 0xNN | \\`Name\\` |`, disjoint
-   from the frame table by the `R` marker) must match
-   repro.core.journal's RECORD_TYPES registry exactly.
+The markdown parsers and the doc/registry diff logic migrated into the
+detcheck static-analysis pass (tools/detcheck/mdtables.py and the
+DOC/REG rule family); `python -m tools.detcheck` is the CI gate. This
+module keeps the historical entry point and the function surface that
+tests/test_docs.py exercises:
+
+  * `doc_frame_table` / `doc_record_table` / `doc_metrics_table` —
+    markdown table parsers (re-exported from detcheck.mdtables);
+  * `check_frame_table` / `check_record_table` /
+    `check_metrics_table` — *runtime* diffs of those tables against
+    the imported registries (repro.net.wire, repro.core.journal,
+    repro.obs). detcheck performs the same diffs statically; keeping
+    the runtime versions proves the AST extraction agrees with what
+    the interpreter actually builds.
+  * `check_links` / `md_files` — link hygiene.
 
 Usage: PYTHONPATH=src python tools/check_docs.py [repo_root]
 Exits non-zero listing every violation.
 """
 from __future__ import annotations
 
-import re
 import sys
 from pathlib import Path
-from typing import Dict, List, Tuple
+from typing import List
 
-LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
-# a frame-table row: | 0xNN | `Name` | ...
-FRAME_ROW_RE = re.compile(r"^\|\s*0x([0-9A-Fa-f]{2})\s*\|\s*`?(\w+)`?\s*\|",
-                          re.MULTILINE)
-# a durable record-table row: | R 0xNN | `Name` | ...  (the `R` marker
-# keeps these rows out of FRAME_ROW_RE's net and vice versa)
-RECORD_ROW_RE = re.compile(
-    r"^\|\s*R\s+0x([0-9A-Fa-f]{2})\s*\|\s*`?(\w+)`?\s*\|", re.MULTILINE)
-# a metric-catalog row: | `name` | kind | labels | yes/no | ...
-METRIC_ROW_RE = re.compile(
-    r"^\|\s*`(\w+)`\s*\|\s*(counter|gauge|histogram)\s*"
-    r"\|\s*([^|]*?)\s*\|\s*(yes|no)\s*\|", re.MULTILINE)
+# The shim is loaded standalone (importlib from a file path) by
+# tests/test_docs.py, so make the repo root importable explicitly.
+_REPO_ROOT = Path(__file__).resolve().parent.parent
+if str(_REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(_REPO_ROOT))
 
-
-def md_files(root: Path) -> List[Path]:
-    out = [root / "README.md"]
-    out += sorted((root / "docs").glob("*.md"))
-    return [p for p in out if p.exists()]
+from tools.detcheck.mdtables import (  # noqa: E402,F401
+    FRAME_ROW_RE, LINK_RE, METRIC_ROW_RE, RECORD_ROW_RE, broken_links,
+    doc_frame_table, doc_metrics_table, doc_record_table, md_files)
 
 
 def check_links(root: Path) -> List[str]:
-    errors = []
-    for md in md_files(root):
-        text = md.read_text(encoding="utf-8")
-        for target in LINK_RE.findall(text):
-            if target.startswith(("http://", "https://", "mailto:", "#")):
-                continue
-            rel = target.split("#", 1)[0]
-            if not rel:
-                continue
-            if not (md.parent / rel).exists():
-                errors.append(f"{md.relative_to(root)}: broken link "
-                              f"-> {target}")
-    return errors
-
-
-def doc_frame_table(protocol_md: Path) -> Dict[int, str]:
-    """{frame id: message class name} parsed from the spec's tables."""
-    table: Dict[int, str] = {}
-    for hex_id, name in FRAME_ROW_RE.findall(
-            protocol_md.read_text(encoding="utf-8")):
-        table[int(hex_id, 16)] = name
-    return table
+    return [f"{md.relative_to(root)}: broken link -> {target}"
+            for md, target in broken_links(root)]
 
 
 def check_frame_table(root: Path) -> List[str]:
     from repro.net import wire
     documented = doc_frame_table(root / "docs" / "PROTOCOL.md")
-    registry = {tag: cls.__name__ for tag, cls in wire.MESSAGE_TYPES.items()}
+    registry = {tag: cls.__name__
+                for tag, cls in wire.MESSAGE_TYPES.items()}
     errors = []
     for tag in sorted(set(documented) | set(registry)):
         doc, impl = documented.get(tag), registry.get(tag)
@@ -84,19 +57,9 @@ def check_frame_table(root: Path) -> List[str]:
             errors.append(f"PROTOCOL.md: frame 0x{tag:02X} ({doc}) "
                           "documented but unknown to the codec")
         elif doc != impl:
-            errors.append(f"PROTOCOL.md: frame 0x{tag:02X} documented as "
-                          f"{doc}, codec calls it {impl}")
+            errors.append(f"PROTOCOL.md: frame 0x{tag:02X} documented "
+                          f"as {doc}, codec calls it {impl}")
     return errors
-
-
-def doc_record_table(protocol_md: Path) -> Dict[int, str]:
-    """{record type id: record name} parsed from the durable-format
-    table."""
-    table: Dict[int, str] = {}
-    for hex_id, name in RECORD_ROW_RE.findall(
-            protocol_md.read_text(encoding="utf-8")):
-        table[int(hex_id, 16)] = name
-    return table
 
 
 def check_record_table(root: Path) -> List[str]:
@@ -112,21 +75,9 @@ def check_record_table(root: Path) -> List[str]:
             errors.append(f"PROTOCOL.md: record R 0x{rtype:02X} ({doc}) "
                           "documented but unknown to repro.core.journal")
         elif doc != impl:
-            errors.append(f"PROTOCOL.md: record R 0x{rtype:02X} documented "
-                          f"as {doc}, journal calls it {impl}")
+            errors.append(f"PROTOCOL.md: record R 0x{rtype:02X} "
+                          f"documented as {doc}, journal calls it {impl}")
     return errors
-
-
-def doc_metrics_table(obs_md: Path) -> Dict[str, Tuple[str, Tuple[str, ...],
-                                                       bool]]:
-    """{metric name: (kind, labels, deterministic)} from the doc."""
-    table: Dict[str, Tuple[str, Tuple[str, ...], bool]] = {}
-    for name, kind, labels, det in METRIC_ROW_RE.findall(
-            obs_md.read_text(encoding="utf-8")):
-        parsed = tuple(x.strip().strip("`") for x in labels.split(",")
-                       if x.strip() and x.strip() not in ("–", "-"))
-        table[name] = (kind, parsed, det == "yes")
-    return table
 
 
 def check_metrics_table(root: Path) -> List[str]:
@@ -153,16 +104,17 @@ def check_metrics_table(root: Path) -> List[str]:
 
 
 def main(argv: List[str]) -> int:
-    root = Path(argv[1]) if len(argv) > 1 else Path(__file__).parent.parent
+    root = Path(argv[1]) if len(argv) > 1 else _REPO_ROOT
     errors = (check_links(root) + check_frame_table(root)
               + check_record_table(root) + check_metrics_table(root))
     for e in errors:
         print(f"FAIL {e}", file=sys.stderr)
-    if not errors:
-        n = len(md_files(root))
-        print(f"docs OK: {n} markdown files, frame + record + metric "
-              "tables in sync")
-    return 1 if errors else 0
+    if errors:
+        return 1
+    n = len(md_files(root))
+    print(f"docs OK: {n} markdown files, frame + record + metric "
+          "tables in sync (full static pass: python -m tools.detcheck)")
+    return 0
 
 
 if __name__ == "__main__":

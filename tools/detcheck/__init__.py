@@ -1,0 +1,6 @@
+"""detcheck — determinism & registry static analysis for the repro
+tree, enforcing the SEC invariants (deterministic Layer 2, normative
+registries, cache/kernel hygiene) at lint time. See docs/ANALYSIS.md
+for the rule catalog and tools/detcheck/core.py for the engine."""
+from tools.detcheck.core import (  # noqa: F401
+    Report, Rule, RULES, run, Violation)

@@ -1,0 +1,82 @@
+"""detcheck command line.
+
+Usage:
+    python -m tools.detcheck [paths ...] [--root DIR] [--json FILE]
+                             [--tier TIER] [--rules ID,ID] [--list-rules]
+
+Default scan target is `src/repro` under --root (default: cwd). Exits
+non-zero when any unsuppressed violation remains.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from tools.detcheck.core import RULES, run
+
+
+def list_rules() -> str:
+    import tools.detcheck.rules  # noqa: F401
+    lines = []
+    for r in sorted(RULES.values(), key=lambda r: r.id):
+        lines.append(f"{r.id}  [{r.tier:>13}]  {r.name}")
+        lines.append(f"        {r.rationale}")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="detcheck",
+        description="Determinism & registry static analysis enforcing "
+                    "the SEC invariants at lint time.")
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories to scan (default: src/repro)")
+    ap.add_argument("--root", default=".",
+                    help="repo root for docs/registry cross-references")
+    ap.add_argument("--json", metavar="FILE",
+                    help="also write a JSON report (\"-\" for stdout)")
+    ap.add_argument("--tier", default="environment",
+                    choices=("deterministic", "environment"),
+                    help="tier for files no manifest covers "
+                         "(fixture/one-off scans)")
+    ap.add_argument("--rules", metavar="ID,ID",
+                    help="run only these rule ids")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the registered rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        try:
+            print(list_rules())
+        except BrokenPipeError:  # `detcheck --list-rules | head` etc.
+            sys.stderr.close()   # suppress the shutdown-flush complaint
+        return 0
+
+    root = Path(args.root)
+    paths = [Path(p) for p in args.paths] or [root / "src" / "repro"]
+    missing = [p for p in paths if not p.exists()]
+    if missing:
+        print(f"detcheck: no such path: {missing}", file=sys.stderr)
+        return 2
+    rule_ids = args.rules.split(",") if args.rules else None
+    report = run(paths, root=root, default_tier=args.tier,
+                 rule_ids=rule_ids)
+
+    if args.json:
+        payload = json.dumps(report.as_json(), indent=2, sort_keys=True)
+        if args.json == "-":
+            print(payload)
+        else:
+            Path(args.json).write_text(payload + "\n", encoding="utf-8")
+    for v in report.violations:
+        print(f"FAIL {v.format()}", file=sys.stderr)
+    if report.ok:
+        print(f"detcheck OK: {report.files_scanned} files, "
+              f"{report.rules_run} rules, 0 violations")
+        return 0
+    print(f"detcheck: {len(report.violations)} violation(s) in "
+          f"{report.files_scanned} files", file=sys.stderr)
+    return 1

@@ -1,0 +1,346 @@
+"""detcheck rule engine: contexts, registry, suppressions, runner.
+
+The analysis is pure-AST — it never imports `repro` (or jax), so the CI
+gate runs in well under a second and cannot be perturbed by the code it
+checks. Rules come in two shapes:
+
+  * file rules — run once per scanned file with a `FileContext`
+    (source, AST, resolved determinism tier, import table);
+  * project rules — run once per invocation with a `ProjectContext`
+    (every parsed file plus the repo root, for doc/registry
+    cross-referencing).
+
+Suppressions: `# detcheck: allow[RULE-ID] <reason>` on the violating
+line (or on its own line directly above) silences that rule there. A
+reason is mandatory (SUP001) and the suppression must still be load-
+bearing — if the rule no longer fires on that line, the stale comment
+is itself a violation (SUP002), so allow-lists cannot rot.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Dict, Iterable, Iterator, List, Optional
+
+TIERS = ("deterministic", "environment")
+
+# `# detcheck: allow[DET001] reason` / `allow[DET001,DET005] reason`
+ALLOW_RE = re.compile(
+    r"#\s*detcheck:\s*allow\[([A-Z]{3}\d{3}(?:\s*,\s*[A-Z]{3}\d{3})*)\]"
+    r"[ \t]*(.*)")
+# `# detcheck: tier=environment reason` — per-file tier override
+TIER_RE = re.compile(r"#\s*detcheck:\s*tier=(\w+)[ \t]*(.*)")
+
+
+@dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str                # repo-root-relative (or absolute if outside)
+    line: int
+    message: str
+    col: int = 0
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} " \
+               f"{self.message}"
+
+
+@dataclass(frozen=True)
+class Rule:
+    id: str
+    name: str
+    tier: str            # "deterministic" | "global" | "project"
+    rationale: str       # one line, mirrored in docs/ANALYSIS.md
+    example: str         # one-line violating snippet for the catalog
+    check: Callable = field(compare=False)
+    project: bool = False
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def rule(id: str, *, name: str, tier: str, rationale: str, example: str,
+         project: bool = False):
+    """Register a rule. `tier="deterministic"` file rules only run in
+    deterministic-tier files; `tier="global"` file rules run
+    everywhere; `project=True` rules run once over the whole tree."""
+    def wrap(fn):
+        if id in RULES:
+            raise ValueError(f"duplicate rule id {id}")
+        RULES[id] = Rule(id=id, name=name, tier=tier, rationale=rationale,
+                         example=example, check=fn, project=project)
+        return fn
+    return wrap
+
+
+@dataclass
+class Suppression:
+    line: int            # line the comment sits on
+    rules: List[str]
+    reason: str
+    path: str
+    used: bool = False
+
+    def covers(self, v: Violation) -> bool:
+        return (v.rule in self.rules
+                and v.line in (self.line, self.line + 1))
+
+
+class FileContext:
+    """One parsed source file plus everything file rules need."""
+
+    def __init__(self, path: Path, rel: str, source: str, tier: str,
+                 tier_reason: str = ""):
+        self.path = path
+        self.rel = rel
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=str(path))
+        self.tier = tier
+        self.tier_reason = tier_reason
+        self.suppressions = self._scan_suppressions()
+        self._imports: Optional[Dict[str, str]] = None
+
+    def _scan_suppressions(self) -> List[Suppression]:
+        out = []
+        for i, text in enumerate(self.lines, start=1):
+            m = ALLOW_RE.search(text)
+            if m:
+                ids = [x.strip() for x in m.group(1).split(",")]
+                out.append(Suppression(line=i, rules=ids,
+                                       reason=m.group(2).strip(),
+                                       path=self.rel))
+        return out
+
+    @property
+    def imports(self) -> Dict[str, str]:
+        """{local name: canonical dotted module/attr path} for every
+        import in the file — the shared resolver determinism and
+        registry rules use to match dotted call names."""
+        if self._imports is None:
+            table: Dict[str, str] = {}
+            for node in ast.walk(self.tree):
+                if isinstance(node, ast.Import):
+                    for a in node.names:
+                        local = a.asname or a.name.split(".")[0]
+                        table[local] = a.asname and a.name or \
+                            a.name.split(".")[0]
+                        if a.asname:
+                            table[a.asname] = a.name
+                elif isinstance(node, ast.ImportFrom):
+                    if node.level:      # relative: keep the tail only
+                        base = node.module or ""
+                    else:
+                        base = node.module or ""
+                    for a in node.names:
+                        if a.name == "*":
+                            continue
+                        local = a.asname or a.name
+                        table[local] = f"{base}.{a.name}" if base \
+                            else a.name
+            self._imports = table
+        return self._imports
+
+    def dotted(self, node: ast.AST) -> Optional[str]:
+        """Resolve a Name/Attribute chain to a canonical dotted path
+        through the import table (e.g. `np.random.rand` ->
+        `numpy.random.rand`), or None for non-name expressions."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        head = self.imports.get(node.id, node.id)
+        parts.append(head)
+        return ".".join(reversed(parts))
+
+    def violation(self, rule_id: str, node_or_line, message: str
+                  ) -> Violation:
+        if isinstance(node_or_line, int):
+            line, col = node_or_line, 0
+        else:
+            line = getattr(node_or_line, "lineno", 1)
+            col = getattr(node_or_line, "col_offset", 0)
+        return Violation(rule=rule_id, path=self.rel, line=line, col=col,
+                         message=message)
+
+
+class ProjectContext:
+    """Whole-invocation context: every scanned file + the repo root."""
+
+    def __init__(self, root: Path, files: List[FileContext]):
+        self.root = root
+        self.files = files
+        self.by_rel = {f.rel: f for f in files}
+
+    def file(self, rel: str) -> Optional[FileContext]:
+        return self.by_rel.get(rel)
+
+    def doc(self, rel: str) -> Optional[str]:
+        p = self.root / rel
+        if not p.exists():
+            return None
+        return p.read_text(encoding="utf-8")
+
+
+def file_tier(path: Path, rel: str, source: str,
+              manifest: Dict[str, str], default: str) -> tuple:
+    """Resolve a file's determinism tier: per-file `# detcheck: tier=`
+    override first, then the owning package's manifest entry, then the
+    invocation default. Returns (tier, override_reason_or_empty)."""
+    for text in source.splitlines():
+        m = TIER_RE.search(text)
+        if m:
+            return m.group(1), m.group(2).strip()
+    pkg = rel.rsplit("/", 1)[0] if "/" in rel else ""
+    while pkg:
+        if pkg in manifest:
+            return manifest[pkg], ""
+        pkg = pkg.rsplit("/", 1)[0] if "/" in pkg else ""
+    return default, ""
+
+
+def read_manifest(root: Path, paths: Iterable[Path]) -> Dict[str, str]:
+    """{package rel-dir: tier} from `DETCHECK_TIER = "..."` assignments
+    in package __init__ files (AST-extracted, never imported)."""
+    manifest: Dict[str, str] = {}
+    seen = set()
+    for p in paths:
+        d = p.parent
+        while d not in seen:
+            seen.add(d)
+            init = d / "__init__.py"
+            if init.exists():
+                tier = _manifest_entry(init)
+                if tier is not None:
+                    try:
+                        rel = str(d.relative_to(root))
+                    except ValueError:
+                        rel = str(d)
+                    manifest[rel.replace("\\", "/")] = tier
+            if d == root or d.parent == d:
+                break
+            d = d.parent
+    return manifest
+
+
+def _manifest_entry(init: Path) -> Optional[str]:
+    try:
+        tree = ast.parse(init.read_text(encoding="utf-8"))
+    except SyntaxError:
+        return None
+    for node in tree.body:
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == "DETCHECK_TIER"
+                and isinstance(node.value, ast.Constant)):
+            return str(node.value.value)
+    return None
+
+
+def iter_py_files(paths: Iterable[Path]) -> Iterator[Path]:
+    for p in paths:
+        if p.is_dir():
+            yield from sorted(p.rglob("*.py"))
+        elif p.suffix == ".py":
+            yield p
+
+
+@dataclass
+class Report:
+    violations: List[Violation]
+    files_scanned: int
+    rules_run: int
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def as_json(self) -> dict:
+        return {
+            "version": 1,
+            "files_scanned": self.files_scanned,
+            "rules_run": self.rules_run,
+            "ok": self.ok,
+            "violations": [
+                {"rule": v.rule, "path": v.path, "line": v.line,
+                 "col": v.col, "message": v.message}
+                for v in self.violations],
+        }
+
+
+def run(paths: List[Path], *, root: Path, default_tier: str = "environment",
+        rule_ids: Optional[List[str]] = None) -> Report:
+    """Run every registered rule over `paths`. Project rules that
+    cross-reference files absent from the tree (docs, wire.py, …) skip
+    themselves, so the same engine runs on fixture directories."""
+    import tools.detcheck.rules  # noqa: F401  (registers on import)
+    root = root.resolve()
+    files: List[FileContext] = []
+    scanned = list(iter_py_files(paths))
+    manifest = read_manifest(root, scanned)
+    errors: List[Violation] = []
+    for p in scanned:
+        p = p.resolve()
+        try:
+            rel = str(p.relative_to(root)).replace("\\", "/")
+        except ValueError:
+            rel = str(p)
+        source = p.read_text(encoding="utf-8")
+        tier, why = file_tier(p, rel, source, manifest, default_tier)
+        if tier not in TIERS:
+            errors.append(Violation(
+                rule="MAN001", path=rel, line=1,
+                message=f"unknown tier {tier!r}; declare one of {TIERS}"))
+            tier = default_tier
+        try:
+            files.append(FileContext(p, rel, source, tier, why))
+        except SyntaxError as e:
+            errors.append(Violation(
+                rule="MAN001", path=rel, line=e.lineno or 1,
+                message=f"cannot parse: {e.msg}"))
+
+    active = [r for r in RULES.values()
+              if rule_ids is None or r.id in rule_ids]
+    raw: List[Violation] = list(errors)
+    for r in active:
+        if r.project:
+            raw.extend(r.check(ProjectContext(root, files)))
+        else:
+            for f in files:
+                if r.tier == "deterministic" and f.tier != "deterministic":
+                    continue
+                raw.extend(r.check(f))
+
+    # Suppression pass: SUP001 (reason mandatory) is computed alongside
+    # the raw run; a suppression only counts as used when it actually
+    # covered a raw violation, and unused ones surface as SUP002.
+    final: List[Violation] = []
+    all_sup: List[Suppression] = []
+    for f in files:
+        all_sup.extend(f.suppressions)
+    for v in raw:
+        sup = next((s for s in all_sup if s.path == v.path
+                    and s.covers(v)), None)
+        if sup is not None:
+            sup.used = True
+            continue
+        final.append(v)
+    for s in all_sup:
+        if not s.reason:
+            final.append(Violation(
+                rule="SUP001", path=s.path, line=s.line,
+                message=f"suppression allow[{','.join(s.rules)}] carries "
+                        "no reason — write why the rule is wrong here"))
+        if not s.used:
+            final.append(Violation(
+                rule="SUP002", path=s.path, line=s.line,
+                message=f"stale suppression: allow[{','.join(s.rules)}] "
+                        "but no such violation fires on this line — "
+                        "delete it"))
+    final.sort(key=lambda v: (v.path, v.line, v.col, v.rule))
+    return Report(violations=final, files_scanned=len(files),
+                  rules_run=len(active))

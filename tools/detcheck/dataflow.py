@@ -1,0 +1,242 @@
+"""Intraprocedural unordered-iteration taint (rule DET005).
+
+The SEC theorem needs Layer 2 to be a pure function of the *canonically
+ordered* contribution set. The regression class this pass catches: an
+unordered collection (set/frozenset, `os.listdir`, glob, `iterdir`)
+whose iteration order leaks into an order-sensitive sink — content
+hashing, canonical wire encoding, cache-key derivation, or float
+accumulation. Across replicas (and across processes, because str hash
+is salted) that order differs, so the leak IS a divergence.
+
+Scope is deliberately modest — single function, name-based, no alias
+or interprocedural analysis — matching what a lint-time gate can prove:
+
+  * taint sources: set()/frozenset()/set literals/set comprehensions,
+    os.listdir/os.scandir, glob.glob/iglob, Path.iterdir/glob/rglob,
+    set-typed binops (| & - ^) of tainted operands;
+  * propagation: assignment, list()/tuple()/iter()/enumerate()/
+    reversed()/filter() of tainted, comprehensions iterating tainted,
+    str.join of tainted, set-method results (.union, .difference, …),
+    next(iter(tainted)) / tainted.pop() (arbitrary-choice values);
+  * sanitizers: sorted() (THE fix), min/max/len/any/all/bool/
+    frozenset-membership tests;
+  * sinks: hashlib constructors + .update on hash objects,
+    zlib.crc32/adler32, repro canonical digests (tensor_digest,
+    pytree_digest), wire encode helpers (encode*/_enc_*/_p_*),
+    cache-key derivation (*_key/cache_fragment/sub_root), float
+    accumulation (sum/math.fsum/functools.reduce), and sink calls on
+    loop variables of a `for … in tainted:` loop.
+
+Dict iteration is NOT a source: Python dicts iterate in insertion
+order, and the deterministic tier's dicts are built in canonical order
+by construction (the per-leaf OR-Set projections are sorted at the
+boundary). Set iteration has no such contract anywhere.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set, Tuple
+
+UNORDERED_CALLS = {"set", "frozenset"}
+UNORDERED_DOTTED = {"os.listdir", "os.scandir", "glob.glob", "glob.iglob"}
+UNORDERED_METHODS = {"iterdir", "glob", "rglob", "scandir"}
+SET_METHODS = {"union", "difference", "intersection",
+               "symmetric_difference", "copy", "pop"}
+PROPAGATORS = {"list", "tuple", "iter", "enumerate", "reversed", "filter",
+               "map"}
+SANITIZERS = {"sorted", "min", "max", "len", "any", "all", "bool",
+              "sum"}  # sum is a SINK, listed here only to stop nesting
+# order-free results of a method on a tainted receiver
+SAFE_METHODS = {"count", "index", "isdisjoint", "issubset", "issuperset",
+                "__len__", "__contains__"}
+FLOAT_ACCUM = {"sum", "math.fsum", "functools.reduce"}
+HASH_CONSTRUCTORS = {"hashlib.sha256", "hashlib.sha1", "hashlib.sha512",
+                     "hashlib.md5", "hashlib.blake2b", "hashlib.blake2s",
+                     "hashlib.new"}
+HASH_SINKS = HASH_CONSTRUCTORS | {
+    "zlib.crc32", "zlib.adler32",
+    "repro.core.hashing.tensor_digest", "repro.core.hashing.pytree_digest",
+    "tensor_digest", "pytree_digest",
+}
+
+
+def _sink_kind(ctx, call: ast.Call) -> Optional[str]:
+    """Classify a call as an order-sensitive sink (or None)."""
+    name = ctx.dotted(call.func)
+    if name is None:
+        return None
+    if name in HASH_SINKS:
+        return "content hashing"
+    if name in FLOAT_ACCUM:
+        return "float accumulation"
+    tail = name.rsplit(".", 1)[-1]
+    if tail.startswith(("_enc_", "_p_")) or tail.startswith("encode"):
+        return "canonical wire encoding"
+    if tail.endswith("_key") or tail in ("cache_fragment", "sub_root",
+                                         "model_key"):
+        return "cache-key derivation"
+    return None
+
+
+class _FunctionTaint:
+    """Fixpoint taint over one function body (or the module body)."""
+
+    def __init__(self, ctx, body: List[ast.stmt]):
+        self.ctx = ctx
+        self.body = body
+        self.tainted: Set[str] = set()
+        self.hash_objects: Set[str] = set()
+
+    def is_tainted(self, node: ast.expr) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Starred):
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.BinOp) and isinstance(
+                node.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)):
+            return self.is_tainted(node.left) or self.is_tainted(node.right)
+        if isinstance(node, ast.IfExp):
+            return self.is_tainted(node.body) or self.is_tainted(node.orelse)
+        if isinstance(node, (ast.ListComp, ast.GeneratorExp)):
+            return any(self.is_tainted(g.iter) for g in node.generators)
+        if isinstance(node, ast.Call):
+            return self._call_tainted(node)
+        if isinstance(node, ast.Attribute):
+            # tainted.copy / tainted.union(...) accessed as value
+            return self.is_tainted(node.value)
+        return False
+
+    def _call_tainted(self, call: ast.Call) -> bool:
+        name = self.ctx.dotted(call.func)
+        if name in UNORDERED_DOTTED:
+            return True
+        if isinstance(call.func, ast.Name):
+            fn = call.func.id
+            if fn in UNORDERED_CALLS:
+                return True
+            if fn in SANITIZERS:
+                return False
+            if fn in PROPAGATORS:
+                return any(self.is_tainted(a) for a in call.args)
+            if fn == "next":
+                return any(self.is_tainted(a) for a in call.args)
+            return False
+        if isinstance(call.func, ast.Attribute):
+            attr = call.func.attr
+            recv = call.func.value
+            if attr in UNORDERED_METHODS:
+                return True
+            if attr in SET_METHODS and self.is_tainted(recv):
+                return True
+            if attr == "join":
+                return any(self.is_tainted(a) for a in call.args)
+            if attr in SAFE_METHODS:
+                return False
+            # a value-returning method of a tainted object (e.encode(),
+            # x.to_bytes(), s.strip()) carries its order-dependence
+            return self.is_tainted(recv)
+        return False
+
+    def solve(self) -> None:
+        """Iterate assignments to fixpoint (bounded; loops converge in
+        a handful of rounds on real code)."""
+        for _ in range(10):
+            before = (len(self.tainted), len(self.hash_objects))
+            for node in ast.walk(ast.Module(body=self.body,
+                                            type_ignores=[])):
+                self._transfer(node)
+            if (len(self.tainted), len(self.hash_objects)) == before:
+                break
+
+    def _targets(self, t: ast.expr) -> Iterator[str]:
+        if isinstance(t, ast.Name):
+            yield t.id
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                yield from self._targets(e)
+        elif isinstance(t, ast.Starred):
+            yield from self._targets(t.value)
+
+    def _transfer(self, node: ast.AST) -> None:
+        if isinstance(node, ast.Assign):
+            val_tainted = self.is_tainted(node.value)
+            is_hash = (isinstance(node.value, ast.Call)
+                       and self.ctx.dotted(node.value.func)
+                       in HASH_CONSTRUCTORS)
+            for t in node.targets:
+                for name in self._targets(t):
+                    if val_tainted:
+                        self.tainted.add(name)
+                    if is_hash:
+                        self.hash_objects.add(name)
+        elif isinstance(node, ast.AugAssign):
+            if self.is_tainted(node.value) and isinstance(
+                    node.target, ast.Name):
+                self.tainted.add(node.target.id)
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            if self.is_tainted(node.iter):
+                for name in self._targets(node.target):
+                    self.tainted.add(name)
+        elif isinstance(node, ast.comprehension):
+            if self.is_tainted(node.iter):
+                for name in self._targets(node.target):
+                    self.tainted.add(name)
+        elif isinstance(node, ast.Call):
+            # mutation propagation: acc.append(tainted) taints acc
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in ("append", "extend", "add",
+                                           "update")
+                    and isinstance(node.func.value, ast.Name)
+                    and any(self.is_tainted(a) for a in node.args)):
+                self.tainted.add(node.func.value.id)
+
+    def findings(self) -> Iterator[Tuple[ast.Call, str, str]]:
+        """(sink call, sink kind, tainted description) triples."""
+        for node in ast.walk(ast.Module(body=self.body, type_ignores=[])):
+            if not isinstance(node, ast.Call):
+                continue
+            kind = _sink_kind(self.ctx, node)
+            if kind is None and not self._is_hash_update(node):
+                continue
+            if kind is None:
+                kind = "content hashing"
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if self.is_tainted(arg):
+                    yield node, kind, self._describe(arg)
+                    break
+
+    def _is_hash_update(self, call: ast.Call) -> bool:
+        return (isinstance(call.func, ast.Attribute)
+                and call.func.attr == "update"
+                and isinstance(call.func.value, ast.Name)
+                and call.func.value.id in self.hash_objects)
+
+    def _describe(self, arg: ast.expr) -> str:
+        if isinstance(arg, ast.Name):
+            return f"`{arg.id}`"
+        return "an unordered value"
+
+
+def function_bodies(tree: ast.Module) -> Iterator[List[ast.stmt]]:
+    """Module top level + every function body, innermost included once
+    (nested functions analysed in their own scope, not the parent's)."""
+    top: List[ast.stmt] = [
+        s for s in tree.body
+        if not isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef))]
+    yield top
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            body = [s for s in node.body
+                    if not isinstance(s, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef))]
+            yield body
+
+
+def unordered_flow_findings(ctx) -> Iterator[Tuple[ast.Call, str, str]]:
+    for body in function_bodies(ctx.tree):
+        ft = _FunctionTaint(ctx, body)
+        ft.solve()
+        yield from ft.findings()

@@ -1,0 +1,76 @@
+"""Markdown table parsers shared by the DOC/REG rules and the
+tools/check_docs.py compatibility shim (which migrated here)."""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# a frame-table row: | 0xNN | `Name` | ...
+FRAME_ROW_RE = re.compile(r"^\|\s*0x([0-9A-Fa-f]{2})\s*\|\s*`?(\w+)`?\s*\|",
+                          re.MULTILINE)
+# a durable record-table row: | R 0xNN | `Name` | ...  (the `R` marker
+# keeps these rows out of FRAME_ROW_RE's net and vice versa)
+RECORD_ROW_RE = re.compile(
+    r"^\|\s*R\s+0x([0-9A-Fa-f]{2})\s*\|\s*`?(\w+)`?\s*\|", re.MULTILINE)
+# a metric-catalog row: | `name` | kind | labels | yes/no | ...
+METRIC_ROW_RE = re.compile(
+    r"^\|\s*`(\w+)`\s*\|\s*(counter|gauge|histogram)\s*"
+    r"\|\s*([^|]*?)\s*\|\s*(yes|no)\s*\|", re.MULTILINE)
+# an analysis-catalog row: | `RULE001` | tier | ...
+RULE_ROW_RE = re.compile(
+    r"^\|\s*`?([A-Z]{3}\d{3})`?\s*\|\s*([\w-]+)\s*\|", re.MULTILINE)
+
+
+def doc_frame_table(protocol_md: Path) -> Dict[int, str]:
+    """{frame id: message class name} parsed from the spec's tables."""
+    return {int(h, 16): name for h, name in FRAME_ROW_RE.findall(
+        protocol_md.read_text(encoding="utf-8"))}
+
+
+def doc_record_table(protocol_md: Path) -> Dict[int, str]:
+    """{record type id: record name} from the durable-format table."""
+    return {int(h, 16): name for h, name in RECORD_ROW_RE.findall(
+        protocol_md.read_text(encoding="utf-8"))}
+
+
+def doc_metrics_table(obs_md: Path) -> Dict[str, Tuple[str, Tuple[str, ...],
+                                                       bool]]:
+    """{metric name: (kind, labels, deterministic)} from the doc."""
+    table: Dict[str, Tuple[str, Tuple[str, ...], bool]] = {}
+    for name, kind, labels, det in METRIC_ROW_RE.findall(
+            obs_md.read_text(encoding="utf-8")):
+        parsed = tuple(x.strip().strip("`") for x in labels.split(",")
+                       if x.strip() and x.strip() not in ("–", "-"))
+        table[name] = (kind, parsed, det == "yes")
+    return table
+
+
+def doc_rule_table(analysis_md: Path) -> Dict[str, str]:
+    """{rule id: tier} from docs/ANALYSIS.md's rule catalog."""
+    return dict(RULE_ROW_RE.findall(
+        analysis_md.read_text(encoding="utf-8")))
+
+
+def md_files(root: Path) -> List[Path]:
+    out = [root / "README.md"]
+    out += sorted((root / "docs").glob("*.md"))
+    return [p for p in out if p.exists()]
+
+
+def broken_links(root: Path) -> List[Tuple[Path, str]]:
+    """(markdown file, unresolvable relative target) pairs. External
+    http(s)/mailto links are not fetched — CI must not need network."""
+    errors = []
+    for md in md_files(root):
+        text = md.read_text(encoding="utf-8")
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (md.parent / rel).exists():
+                errors.append((md, target))
+    return errors

@@ -1,0 +1,5 @@
+"""Rule modules register themselves on import."""
+from tools.detcheck.rules import determinism  # noqa: F401
+from tools.detcheck.rules import docs  # noqa: F401
+from tools.detcheck.rules import hygiene  # noqa: F401
+from tools.detcheck.rules import registries  # noqa: F401

@@ -1,0 +1,155 @@
+"""Determinism-taint rules (DET family).
+
+These run only in deterministic-tier files (see the per-package
+`DETCHECK_TIER` manifest): the modules whose outputs must be a pure
+function of the canonically-ordered contribution set for the paper's
+SEC theorem to hold. Wall clocks, global RNG state, process-local
+identity, and unordered iteration are exactly the inputs that differ
+between replicas evaluating the same converged state.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.detcheck.core import FileContext, rule, Violation
+from tools.detcheck.dataflow import unordered_flow_findings
+
+WALL_CLOCK = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns", "time.process_time",
+    "time.process_time_ns", "datetime.datetime.now",
+    "datetime.datetime.utcnow", "datetime.datetime.today",
+    "datetime.date.today",
+}
+
+# module-level (shared-state) samplers; random.Random(seed) instances
+# are fine and are how the simulator and gossip fanout stay replayable
+GLOBAL_RANDOM = {
+    "random.random", "random.randint", "random.randrange", "random.choice",
+    "random.choices", "random.shuffle", "random.sample", "random.uniform",
+    "random.gauss", "random.normalvariate", "random.seed",
+    "random.getrandbits", "random.betavariate", "random.expovariate",
+}
+NUMPY_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "Philox",
+                   "PCG64", "bit_generator"}
+
+ENTROPY = {
+    "os.urandom", "uuid.uuid1", "uuid.uuid4", "random.SystemRandom",
+}
+
+JAX_KEY_MAKERS = {"jax.random.PRNGKey", "jax.random.key"}
+
+
+def _calls(ctx: FileContext) -> Iterator[ast.Call]:
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call):
+            yield node
+
+
+@rule("DET001", name="no-wall-clock", tier="deterministic",
+      rationale="Wall-clock reads differ per replica; any flow into "
+                "merge output or its keys breaks SEC convergence.",
+      example="t0 = time.time()")
+def det001(ctx: FileContext) -> Iterator[Violation]:
+    for call in _calls(ctx):
+        name = ctx.dotted(call.func)
+        if name in WALL_CLOCK:
+            yield ctx.violation(
+                "DET001", call,
+                f"wall-clock read `{name}` in deterministic-tier module "
+                f"{ctx.rel}; thread an explicit clock (sim clock or the "
+                "obs tracer's) instead")
+
+
+@rule("DET002", name="no-global-rng", tier="deterministic",
+      rationale="Module-level RNG state is process-local and "
+                "seed-invisible; all randomness must flow from the "
+                "resolve seed (Merkle root, paper Def. 6).",
+      example="p = np.random.rand()")
+def det002(ctx: FileContext) -> Iterator[Violation]:
+    for call in _calls(ctx):
+        name = ctx.dotted(call.func)
+        if name is None:
+            continue
+        if name in GLOBAL_RANDOM:
+            yield ctx.violation(
+                "DET002", call,
+                f"global RNG `{name}`; use random.Random(seed) or derive "
+                "from the resolve seed")
+        elif name.startswith("numpy.random."):
+            tail = name.split(".")[2]
+            if tail in NUMPY_RANDOM_OK:
+                if tail == "default_rng" and not (call.args
+                                                  or call.keywords):
+                    yield ctx.violation(
+                        "DET002", call,
+                        "numpy.random.default_rng() without a seed draws "
+                        "OS entropy; pass an explicit seed")
+            else:
+                yield ctx.violation(
+                    "DET002", call,
+                    f"global numpy RNG `{name}`; use "
+                    "numpy.random.default_rng(seed)")
+
+
+def _const_args(call: ast.Call) -> bool:
+    vals = list(call.args) + [kw.value for kw in call.keywords]
+    return bool(vals) and all(isinstance(a, ast.Constant) for a in vals)
+
+
+@rule("DET003", name="jax-key-discipline", tier="deterministic",
+      rationale="A constant PRNG key reuses one stream everywhere; keys "
+                "must derive from the Merkle-root seed via fold_in so "
+                "replicas draw identical, position-keyed streams.",
+      example="x = jax.random.normal(jax.random.PRNGKey(0), shape)")
+def det003(ctx: FileContext) -> Iterator[Violation]:
+    for call in _calls(ctx):
+        name = ctx.dotted(call.func)
+        if name in JAX_KEY_MAKERS and _const_args(call):
+            yield ctx.violation(
+                "DET003", call,
+                f"`{name}` with a constant key; derive the key from the "
+                "resolve seed (seed_from_root) or fold_in")
+
+
+@rule("DET004", name="no-process-identity", tier="deterministic",
+      rationale="id() and builtin hash() (salted for str) are "
+                "process-local; os.urandom/uuid4 are pure entropy — "
+                "none may influence deterministic-tier output.",
+      example="bucket = hash(eid) % n")
+def det004(ctx: FileContext) -> Iterator[Violation]:
+    hash_ok_spans = []
+    for node in ast.walk(ctx.tree):
+        if (isinstance(node, ast.FunctionDef)
+                and node.name in ("__hash__",)):
+            hash_ok_spans.append((node.lineno,
+                                  node.end_lineno or node.lineno))
+    for call in _calls(ctx):
+        name = ctx.dotted(call.func)
+        if name in ENTROPY or (name or "").startswith("secrets."):
+            yield ctx.violation(
+                "DET004", call,
+                f"process-local entropy `{name}` in deterministic tier")
+        elif name in ("id", "hash"):
+            if name == "hash" and any(a <= call.lineno <= b
+                                      for a, b in hash_ok_spans):
+                continue  # __hash__ impls feed in-process dicts only
+            yield ctx.violation(
+                "DET004", call,
+                f"builtin `{name}()` is process-local (str hash is "
+                "salted); use the canonical SHA-256 digests instead")
+
+
+@rule("DET005", name="unordered-into-ordered-sink", tier="deterministic",
+      rationale="Set/listdir iteration order differs across processes; "
+                "flowing it into hashing, wire encoding, cache keys or "
+                "float accumulation makes replicas diverge. sorted() "
+                "is the sanitizer.",
+      example="h.update(b'|'.join(e.encode() for e in set(eids)))")
+def det005(ctx: FileContext) -> Iterator[Violation]:
+    for call, kind, what in unordered_flow_findings(ctx):
+        yield ctx.violation(
+            "DET005", call,
+            f"{what} iterates in unordered (set/directory) order and "
+            f"flows into {kind}; wrap the source in sorted(...)")

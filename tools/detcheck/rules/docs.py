@@ -1,0 +1,59 @@
+"""Docs rules (DOC family) — the former tools/check_docs.py checks,
+now rows in the same rule engine (check_docs.py remains as a thin shim
+over these)."""
+from __future__ import annotations
+
+from typing import Iterator
+
+from tools.detcheck import mdtables
+from tools.detcheck.core import ProjectContext, rule, Violation
+
+
+@rule("DOC001", name="markdown-links-resolve", tier="global",
+      rationale="Every relative link in README.md and docs/*.md must "
+                "point at an existing file; the docs tree is normative "
+                "and a dead link is a missing contract.",
+      example="[engine](core/enginee.py)", project=True)
+def doc001(project: ProjectContext) -> Iterator[Violation]:
+    if not (project.root / "README.md").exists():
+        return
+    for md, target in mdtables.broken_links(project.root):
+        try:
+            rel = str(md.relative_to(project.root))
+        except ValueError:
+            rel = str(md)
+        yield Violation("DOC001", rel, 1,
+                        f"broken relative link -> {target}")
+
+
+@rule("DOC002", name="analysis-rule-catalog", tier="global",
+      rationale="docs/ANALYSIS.md's rule table is CI-diffed against "
+                "the registered rule set — ids and tiers both — so the "
+                "catalog can neither lag a new rule nor advertise a "
+                "deleted one.",
+      example="a registered rule with no ANALYSIS.md row",
+      project=True)
+def doc002(project: ProjectContext) -> Iterator[Violation]:
+    from tools.detcheck.core import RULES
+    doc = project.root / "docs" / "ANALYSIS.md"
+    if not doc.exists():
+        # only binding when the tree ships the doc (fixture trees and
+        # freshly-scanned foreign repos do not)
+        return
+    documented = mdtables.doc_rule_table(doc)
+    rel = "docs/ANALYSIS.md"
+    registered = {r.id: r.tier for r in RULES.values()}
+    for rid in sorted(set(documented) | set(registered)):
+        d, i = documented.get(rid), registered.get(rid)
+        if d is None:
+            yield Violation("DOC002", rel, 1,
+                            f"rule {rid} is registered but has no "
+                            "catalog row in ANALYSIS.md")
+        elif i is None:
+            yield Violation("DOC002", rel, 1,
+                            f"rule {rid} documented but not registered "
+                            "in tools/detcheck")
+        elif d != i:
+            yield Violation("DOC002", rel, 1,
+                            f"rule {rid} documented with tier {d!r}, "
+                            f"registered as {i!r}")

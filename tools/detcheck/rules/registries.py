@@ -1,0 +1,500 @@
+"""Registry-consistency rules (REG family).
+
+The repo's normative registries — wire frame tags, durable record
+types, the metric catalog, crash points, strategy cfg schemas — each
+pair a declaration site with scattered use sites. These rules diff the
+two statically (AST only, nothing imported), so drift is caught in
+review rather than as a runtime KeyError (or worse, silently).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+from tools.detcheck import mdtables
+from tools.detcheck.core import FileContext, ProjectContext, rule, Violation
+
+_MISSING = object()
+
+
+def _literal(node: ast.AST, consts: Dict[str, Any]) -> Any:
+    """Evaluate a literal, following module-level constant Names."""
+    if isinstance(node, ast.Name) and node.id in consts:
+        return consts[node.id]
+    try:
+        return ast.literal_eval(node)
+    except (ValueError, SyntaxError):
+        return _MISSING
+
+
+def module_constants(ctx: FileContext) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for node in ctx.tree.body:
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            v = _literal(node.value, out)
+            if v is not _MISSING:
+                out[node.targets[0].id] = v
+    return out
+
+
+def module_dict(ctx: FileContext, name: str) -> Optional[ast.Dict]:
+    for node in ctx.tree.body:
+        targets: List[ast.expr] = []
+        if isinstance(node, ast.Assign):
+            targets, value = node.targets, node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets, value = [node.target], node.value
+        else:
+            continue
+        for t in targets:
+            if isinstance(t, ast.Name) and t.id == name \
+                    and isinstance(value, ast.Dict):
+                return value
+    return None
+
+
+def find_file(project: ProjectContext, suffix: str
+              ) -> Optional[FileContext]:
+    for f in project.files:
+        if f.rel.endswith(suffix):
+            return f
+    return None
+
+
+def _int_keyed(ctx: FileContext, name: str,
+               consts: Dict[str, Any]) -> Optional[Dict[int, str]]:
+    """{int key: value-name-or-str} from a module-level dict literal
+    whose keys are int constants (directly or via module constants)."""
+    d = module_dict(ctx, name)
+    if d is None:
+        return None
+    out: Dict[int, str] = {}
+    for k, v in zip(d.keys, d.values):
+        kv = _literal(k, consts)
+        if not isinstance(kv, int):
+            continue
+        if isinstance(v, ast.Name):
+            out[kv] = v.id
+        elif isinstance(v, ast.Constant) and isinstance(v.value, str):
+            out[kv] = v.value
+        elif isinstance(v, ast.Attribute):
+            out[kv] = v.attr
+    return out
+
+
+# ---------------------------------------------------------------- wire ---
+
+
+@rule("REG001", name="wire-codec-registry-sync", tier="global",
+      rationale="MESSAGE_TYPES is the public contract; a frame tag with "
+                "a codec handler missing from it (or vice versa) is a "
+                "frame peers can send but the registry denies exists.",
+      example="_ENCODERS has 0x1D but MESSAGE_TYPES does not",
+      project=True)
+def reg001(project: ProjectContext) -> Iterator[Violation]:
+    wire = find_file(project, "net/wire.py")
+    if wire is None:
+        return
+    consts = module_constants(wire)
+    tables = {name: _int_keyed(wire, name, consts)
+              for name in ("MESSAGE_TYPES", "_ENCODERS", "_DECODERS")}
+    if any(t is None for t in tables.values()):
+        for name, t in tables.items():
+            if t is None:
+                yield Violation("REG001", wire.rel, 1,
+                                f"registry dict {name} not found as a "
+                                "module-level literal")
+        return
+    classes = {n.name for n in ast.walk(wire.tree)
+               if isinstance(n, ast.ClassDef)}
+    public = tables["MESSAGE_TYPES"]
+    for name in ("_ENCODERS", "_DECODERS"):
+        other = tables[name]
+        for tag in sorted(set(public) ^ set(other)):
+            where = name if tag in public else "MESSAGE_TYPES"
+            yield Violation(
+                "REG001", wire.rel, 1,
+                f"frame 0x{tag:02X} missing from {where} (present in "
+                f"{'MESSAGE_TYPES' if tag in public else name})")
+    for tag, cls in sorted(public.items()):
+        if cls not in classes:
+            yield Violation(
+                "REG001", wire.rel, 1,
+                f"MESSAGE_TYPES maps 0x{tag:02X} to {cls}, which is not "
+                "a class defined in wire.py")
+
+
+@rule("REG002", name="protocol-frame-table", tier="global",
+      rationale="docs/PROTOCOL.md is normative: its frame table must "
+                "list exactly the codec's accepted tags and names.",
+      example="PROTOCOL.md lacks a row for a new 0x1D frame",
+      project=True)
+def reg002(project: ProjectContext) -> Iterator[Violation]:
+    wire = find_file(project, "net/wire.py")
+    doc = project.root / "docs" / "PROTOCOL.md"
+    if wire is None or not doc.exists():
+        return
+    documented = mdtables.doc_frame_table(doc)
+    registry = _int_keyed(wire, "MESSAGE_TYPES", module_constants(wire))
+    if registry is None:
+        return
+    rel = "docs/PROTOCOL.md"
+    for tag in sorted(set(documented) | set(registry)):
+        d, i = documented.get(tag), registry.get(tag)
+        if d is None:
+            yield Violation("REG002", rel, 1,
+                            f"frame 0x{tag:02X} ({i}) accepted by the "
+                            "codec but undocumented")
+        elif i is None:
+            yield Violation("REG002", rel, 1,
+                            f"frame 0x{tag:02X} ({d}) documented but "
+                            "unknown to the codec")
+        elif d != i:
+            yield Violation("REG002", rel, 1,
+                            f"frame 0x{tag:02X} documented as {d}, codec "
+                            f"calls it {i}")
+
+
+@rule("REG003", name="protocol-record-table", tier="global",
+      rationale="The on-disk record table in PROTOCOL.md must match the "
+                "journal's RECORD_TYPES registry — recovery reads what "
+                "the doc promises, nothing else.",
+      example="journal gains REC 0x04 with no `| R 0x04 |` row",
+      project=True)
+def reg003(project: ProjectContext) -> Iterator[Violation]:
+    journal = find_file(project, "core/journal.py")
+    doc = project.root / "docs" / "PROTOCOL.md"
+    if journal is None or not doc.exists():
+        return
+    documented = mdtables.doc_record_table(doc)
+    registry = _int_keyed(journal, "RECORD_TYPES",
+                          module_constants(journal))
+    if registry is None:
+        return
+    rel = "docs/PROTOCOL.md"
+    for rtype in sorted(set(documented) | set(registry)):
+        d, i = documented.get(rtype), registry.get(rtype)
+        if d is None:
+            yield Violation("REG003", rel, 1,
+                            f"record R 0x{rtype:02X} ({i}) written by "
+                            "the journal but undocumented")
+        elif i is None:
+            yield Violation("REG003", rel, 1,
+                            f"record R 0x{rtype:02X} ({d}) documented "
+                            "but unknown to repro.core.journal")
+        elif d != i:
+            yield Violation("REG003", rel, 1,
+                            f"record R 0x{rtype:02X} documented as {d}, "
+                            f"journal calls it {i}")
+
+
+# ------------------------------------------------------------- metrics ---
+
+
+def _declared_metrics(metrics: FileContext
+                      ) -> Dict[str, Tuple[str, Tuple[str, ...], bool,
+                                           int]]:
+    """{name: (kind, sorted labels, deterministic, lineno)} from the
+    `declare(...)` calls in obs/metrics.py."""
+    out: Dict[str, Tuple[str, Tuple[str, ...], bool, int]] = {}
+    for node in ast.walk(metrics.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id == "declare"
+                and len(node.args) >= 2
+                and isinstance(node.args[0], ast.Constant)):
+            continue
+        name = node.args[0].value
+        kind = node.args[1].value if isinstance(
+            node.args[1], ast.Constant) else "?"
+        labels: Tuple[str, ...] = ()
+        det = False
+        for kw in node.keywords:
+            if kw.arg == "labels":
+                v = _literal(kw.value, {})
+                if isinstance(v, (tuple, list)):
+                    labels = tuple(sorted(v))
+            elif kw.arg == "deterministic":
+                v = _literal(kw.value, {})
+                det = bool(v) if v is not _MISSING else False
+        out[name] = (kind, labels, det, node.lineno)
+    return out
+
+
+@rule("REG004", name="metrics-doc-table", tier="global",
+      rationale="docs/OBSERVABILITY.md documents exactly the obs "
+                "CATALOG: names, kinds, label axes, deterministic "
+                "flags. The deterministic flag partitions the SEC "
+                "aggregates, so a wrong flag is a wrong claim.",
+      example="a declare(...) call with no OBSERVABILITY.md row",
+      project=True)
+def reg004(project: ProjectContext) -> Iterator[Violation]:
+    metrics = find_file(project, "obs/metrics.py")
+    doc = project.root / "docs" / "OBSERVABILITY.md"
+    if metrics is None or not doc.exists():
+        return
+    documented = mdtables.doc_metrics_table(doc)
+    declared = _declared_metrics(metrics)
+    rel = "docs/OBSERVABILITY.md"
+    for name in sorted(set(documented) | set(declared)):
+        d = documented.get(name)
+        i = declared.get(name)
+        if d is None:
+            yield Violation("REG004", metrics.rel, i[3],
+                            f"metric {name!r} declared in CATALOG but "
+                            "undocumented in OBSERVABILITY.md")
+        elif i is None:
+            yield Violation("REG004", rel, 1,
+                            f"metric {name!r} documented but not "
+                            "declared in the obs CATALOG")
+        else:
+            kind, labels, det = d
+            if (kind, tuple(sorted(labels)), det) != i[:3]:
+                yield Violation(
+                    "REG004", rel, 1,
+                    f"metric {name!r} documented as "
+                    f"{(kind, tuple(sorted(labels)), det)}, CATALOG "
+                    f"declares {i[:3]}")
+
+
+@rule("REG005", name="metric-callsite-declared", tier="global",
+      rationale="MetricsRegistry raises on undeclared names at runtime; "
+                "this catches the typo statically, at the call site, "
+                "including kind mismatches (inc on a gauge).",
+      example='obs.counter("engine_evnets_total").inc()',
+      project=True)
+def reg005(project: ProjectContext) -> Iterator[Violation]:
+    metrics = find_file(project, "obs/metrics.py")
+    if metrics is None:
+        return
+    declared = _declared_metrics(metrics)
+    for f in project.files:
+        if f is metrics:
+            continue
+        for node in ast.walk(f.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in ("counter", "gauge",
+                                           "histogram")
+                    and node.args
+                    and isinstance(node.args[0], ast.Constant)
+                    and isinstance(node.args[0].value, str)):
+                continue
+            name = node.args[0].value
+            spec = declared.get(name)
+            if spec is None:
+                yield f.violation(
+                    "REG005", node,
+                    f"metric {name!r} is not declared in the obs "
+                    "CATALOG (obs/metrics.py) — declare it or fix the "
+                    "name")
+            elif spec[0] != node.func.attr:
+                yield f.violation(
+                    "REG005", node,
+                    f"metric {name!r} is declared as a {spec[0]} but "
+                    f"fetched via .{node.func.attr}()")
+
+
+# --------------------------------------------------------- crash points ---
+
+
+@rule("REG006", name="crashpoint-registry-sync", tier="global",
+      rationale="The crash-point registry is the durability proof "
+                "surface: an injection site for an undeclared point "
+                "can never be armed by the suite; a declared point "
+                "with no site is a recovery path no test can reach.",
+      example='CrashPoint.maybe_crash("blob.pre_appnd")',
+      project=True)
+def reg006(project: ProjectContext) -> Iterator[Violation]:
+    journal = find_file(project, "core/journal.py")
+    if journal is None:
+        return
+    declared: Dict[str, int] = {}
+    const_names: Dict[str, str] = {}
+    for node in ast.walk(journal.tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "_declare"
+                and node.args
+                and isinstance(node.args[0], ast.Constant)):
+            declared[node.args[0].value] = node.lineno
+    for node in journal.tree.body:
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Call)
+                and isinstance(node.value.func, ast.Attribute)
+                and node.value.func.attr == "_declare"
+                and node.value.args
+                and isinstance(node.value.args[0], ast.Constant)):
+            const_names[node.targets[0].id] = node.value.args[0].value
+
+    hit: Dict[str, bool] = {n: False for n in declared}
+    for f in project.files:
+        for node in ast.walk(f.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "maybe_crash" and node.args):
+                continue
+            arg = node.args[0]
+            names = _crash_arg_names(arg, f, const_names)
+            if names is None:
+                continue        # dynamic beyond the f-string pattern
+            matched = [n for n in names if n in declared]
+            if not matched:
+                yield f.violation(
+                    "REG006", node,
+                    f"maybe_crash({ast.unparse(arg)}) matches no "
+                    "declared crash point; declare it via "
+                    "CrashPoint._declare first")
+            for n in matched:
+                hit[n] = True
+    for name, ok in sorted(hit.items()):
+        if not ok:
+            yield Violation(
+                "REG006", journal.rel, declared[name],
+                f"crash point {name!r} is declared but has no "
+                "maybe_crash injection site — the suite cannot prove "
+                "recovery at it")
+
+
+def _crash_arg_names(arg: ast.expr, f: FileContext,
+                     const_names: Dict[str, str]) -> Optional[List[str]]:
+    """Declared-name candidates for a maybe_crash argument: a literal,
+    a CP_* constant, or an f-string treated as a wildcard pattern
+    (constant parts fixed, {expr} parts match anything)."""
+    if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+        return [arg.value]
+    if isinstance(arg, ast.Name):
+        dotted = f.imports.get(arg.id, arg.id)
+        tail = dotted.rsplit(".", 1)[-1]
+        if tail in const_names:
+            return [const_names[tail]]
+        return []
+    if isinstance(arg, ast.JoinedStr):
+        pat = ""
+        for part in arg.values:
+            if isinstance(part, ast.Constant):
+                pat += re.escape(str(part.value))
+            else:
+                pat += r".+"
+        rx = re.compile(f"^{pat}$")
+        return [n for n in const_names.values() if rx.match(n)] or []
+    return None
+
+
+# ----------------------------------------------------------- strategies ---
+
+
+@rule("REG007", name="strategy-schema-signature", tier="global",
+      rationale="MergeSpec validates cfg against cfg_schema while the "
+                "leaf function consumes its keyword defaults; if the "
+                "two drift, a knob is silently dropped or a default "
+                "silently differs from the cache key's.",
+      example='schema={"trim": (float, 0.3)} but def _ties(s, b, '
+              'trim=0.2)',
+      project=True)
+def reg007(project: ProjectContext) -> Iterator[Violation]:
+    catalog = find_file(project, "strategies/catalog.py")
+    if catalog is None:
+        return
+    defs = {n.name: n for n in ast.walk(catalog.tree)
+            if isinstance(n, ast.FunctionDef)}
+    folds = set()
+    for node in catalog.tree.body:
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Call)
+                and isinstance(node.value.func, ast.Name)
+                and node.value.func.id == "LeafFold"):
+            folds.add(node.targets[0].id)
+    for node in ast.walk(catalog.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id == "_reg" and len(node.args) >= 2
+                and isinstance(node.args[0], ast.Constant)
+                and isinstance(node.args[1], ast.Name)):
+            continue
+        sname = node.args[0].value
+        fn = defs.get(node.args[1].id)
+        kwargs = {kw.arg: kw.value for kw in node.keywords}
+        if fn is None:
+            yield catalog.violation(
+                "REG007", node,
+                f"strategy {sname!r} registers leaf fn "
+                f"{node.args[1].id} which is not defined in catalog.py")
+            continue
+        schema_node = kwargs.get("schema")
+        schema = _literal_schema(schema_node)
+        if schema is None:
+            yield catalog.violation(
+                "REG007", node,
+                f"strategy {sname!r} has no literal schema={{...}} "
+                "declaration")
+            continue
+        needs_key = (isinstance(kwargs.get("needs_key"), ast.Constant)
+                     and kwargs["needs_key"].value is True)
+        fold = kwargs.get("fold")
+        if fold is not None and not (
+                isinstance(fold, ast.Name) and fold.id in folds):
+            yield catalog.violation(
+                "REG007", node,
+                f"strategy {sname!r} declares fold= that is not a "
+                "module-level LeafFold(...) binding — incremental "
+                "claims must be auditable declarations")
+        yield from _check_signature(catalog, node, sname, fn, schema,
+                                    needs_key)
+
+
+def _literal_schema(node: Optional[ast.expr]
+                    ) -> Optional[Dict[str, Any]]:
+    if not isinstance(node, ast.Dict):
+        return None
+    out: Dict[str, Any] = {}
+    for k, v in zip(node.keys, node.values):
+        if not (isinstance(k, ast.Constant) and isinstance(v, ast.Tuple)
+                and len(v.elts) == 2):
+            return None
+        default = _literal(v.elts[1], {})
+        if default is _MISSING:
+            return None
+        out[k.value] = default
+    return out
+
+
+def _check_signature(catalog: FileContext, node: ast.Call, sname: str,
+                     fn: ast.FunctionDef, schema: Dict[str, Any],
+                     needs_key: bool) -> Iterator[Violation]:
+    args = fn.args
+    n_pos = len(args.args) - len(args.defaults)
+    expected_pos = 3 if needs_key else 2
+    if n_pos != expected_pos:
+        yield catalog.violation(
+            "REG007", node,
+            f"strategy {sname!r}: leaf fn {fn.name} takes {n_pos} "
+            f"required positional args, expected {expected_pos} "
+            f"({'s, b, key' if needs_key else 's, b'})")
+    sig_defaults: Dict[str, Any] = {}
+    for a, d in zip(args.args[n_pos:], args.defaults):
+        sig_defaults[a.arg] = _literal(d, {})
+    for a, d in zip(args.kwonlyargs, args.kw_defaults):
+        if d is not None:
+            sig_defaults[a.arg] = _literal(d, {})
+    for name in sorted(set(schema) | set(sig_defaults)):
+        if name not in sig_defaults:
+            yield catalog.violation(
+                "REG007", node,
+                f"strategy {sname!r}: schema declares {name!r} but "
+                f"{fn.name} has no such keyword parameter")
+        elif name not in schema:
+            yield catalog.violation(
+                "REG007", node,
+                f"strategy {sname!r}: {fn.name} has keyword {name!r} "
+                "not declared in its schema")
+        elif schema[name] != sig_defaults[name]:
+            yield catalog.violation(
+                "REG007", node,
+                f"strategy {sname!r}: schema default for {name!r} is "
+                f"{schema[name]!r} but {fn.name}'s signature says "
+                f"{sig_defaults[name]!r}")
